@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: C microbench build/run, timing, CSV."""
+from __future__ import annotations
+
+import os
+import subprocess
+import time
+
+_BIN = "/tmp/repro_multistride"
+_SRC = os.path.join(os.path.dirname(__file__), "multistride.c")
+
+
+def build_cbench() -> str:
+    if (not os.path.exists(_BIN)
+            or os.path.getmtime(_BIN) < os.path.getmtime(_SRC)):
+        subprocess.run(
+            ["cc", "-O3", "-march=native", "-ffast-math", "-funroll-loops",
+             _SRC, "-o", _BIN], check=True)
+    return _BIN
+
+
+def run_cbench(mode: str, d: int, portion: int, mib: int, iters: int = 3,
+               cols: int = 4096) -> dict:
+    out = subprocess.run(
+        [build_cbench(), mode, str(d), str(portion), str(mib), str(iters),
+         str(cols)], check=True, capture_output=True, text=True).stdout
+    mode, d, portion, mib, sec, gibps, _ = out.strip().split(",")
+    return {"mode": mode, "d": int(d), "portion": int(portion),
+            "mib": int(mib), "seconds": float(sec), "gibps": float(gibps)}
+
+
+def time_jax(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds of a jitted callable."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print `name,us_per_call,derived` CSV rows (harness convention)."""
+    for r in rows:
+        us = r.get("seconds", 0.0) * 1e6
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("seconds",))
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,55 @@
+"""§Perf continuation for the decode cell: (D, block) sweep of the
+multi-strided flash-decode kernel under the TpuDmaModel, plus the
+interpret-mode correctness sweep. On real v5e this table becomes a
+wall-clock sweep; here it quantifies how far KV-stream multi-striding
+can push the (now memory-bound, EXPERIMENTS §Perf cell 3) decode step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import TPU_V5E, StridingConfig
+from repro.kernels.decode_attn import ops as da_ops
+from repro.kernels.decode_attn import ref as da_ref
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    # yi-9b decode_32k signature: S=32768, Hkv=4, dh=128, bf16
+    s, hkv, dh = 32768, 4, 128
+    kv_bytes_tok = 2 * s * hkv * dh * 2
+    for d in (1, 2, 4, 8, 16):
+        for bs in (128, 256, 512):
+            if s % (d * bs):
+                continue
+            cfg = StridingConfig(d, 1)
+            block_bytes = bs * hkv * dh * 2
+            bw = TPU_V5E.throughput(cfg, block_bytes,
+                                    spacing_bytes=(s // d) * hkv * dh * 2)
+            step_ms = kv_bytes_tok / bw * 1e3
+            rows.append({"d": d, "block_s": bs,
+                         "kv_stream_gbps": round(bw / 1e9, 1),
+                         "kv_read_ms_per_tok": round(step_ms, 3),
+                         "seconds": step_ms / 1e3})
+    # correctness spot-check of the best config (interpret mode)
+    b, hq = 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hq, dh), jnp.float32)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, 512, hkv, dh),
+                           jnp.float32)
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, 512, hkv, dh),
+                           jnp.float32)
+    best = max(rows, key=lambda r: r["kv_stream_gbps"])
+    got = da_ops.decode_attn(q, kc, vc,
+                             config=StridingConfig(best["d"], 1),
+                             mode="interpret")
+    np.testing.assert_allclose(got, da_ref.decode_attn_ref(q, kc, vc),
+                               rtol=2e-5, atol=2e-5)
+    rows.append({"check": f"best D={best['d']} allclose ok", "seconds": 0.0})
+    emit(rows, "decode_kernel_sweep")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Fig 2: stream read/write/copy bandwidth vs stride count.
+
+Measured on the host x86 (real HW prefetcher, C microbench with the
+paper's fixed 1024-float unroll budget split over D strides) next to the
+CpuPrefetchModel and the TpuDmaModel prediction for the v5e target.
+prefetch_off is modeled (no MSR access in a VM); the TPU column's
+prefetch_off analogue is lookahead=1.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_cbench
+from repro.core import COFFEE_LAKE, TPU_V5E, StridingConfig
+
+UNROLL = 1024
+DS = (1, 2, 4, 8, 16, 32)
+MIB = 320
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    mib = 192 if quick else MIB
+    for mode, wf in (("read", 0.0), ("init", 1.0), ("copy", 0.5)):
+        base = None
+        for d in DS:
+            r = run_cbench(mode, d, max(UNROLL // d, 8), mib)
+            base = base or r["gibps"]
+            model_cpu = COFFEE_LAKE.throughput(d, write_fraction=wf) / 2**30
+            model_off = COFFEE_LAKE.throughput(d, prefetch_on=False,
+                                               write_fraction=wf) / 2**30
+            cfg = StridingConfig(d, max(UNROLL // d // 256, 1))
+            model_tpu = TPU_V5E.throughput(cfg, 8 * 128 * 4) / 2**30
+            rows.append(dict(r, speedup=round(r["gibps"] / base, 3),
+                             model_cpu_gibps=round(model_cpu, 2),
+                             model_prefetch_off=round(model_off, 2),
+                             model_tpu_gibps=round(model_tpu, 1)))
+    emit(rows, "fig2_stream")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

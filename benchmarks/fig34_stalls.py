@@ -1,0 +1,32 @@
+"""Paper Fig 3/4: stall cycles and cache hit ratios vs stride count
+(modeled — no perf counters in this VM; the CpuPrefetchModel is
+calibrated to the paper's Coffee Lake measurements, DESIGN.md §2)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import COFFEE_LAKE
+
+DS = (1, 2, 4, 8, 16, 32)
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    for d in DS:
+        rows.append({
+            "d": d,
+            "stall_cyc_per_line": round(
+                COFFEE_LAKE.stall_cycles_per_line(d), 2),
+            "stall_cyc_per_line_noprefetch": round(
+                COFFEE_LAKE.stall_cycles_per_line(d, prefetch_on=False), 2),
+            "l1_hit": COFFEE_LAKE.hit_ratio(d, "l1"),
+            "l2_hit": round(COFFEE_LAKE.hit_ratio(d, "l2"), 3),
+            "l3_hit": round(COFFEE_LAKE.hit_ratio(d, "l3"), 3),
+            "l2_hit_noprefetch": COFFEE_LAKE.hit_ratio(d, "l2", False),
+            "seconds": 0.0,
+        })
+    emit(rows, "fig34_stalls")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

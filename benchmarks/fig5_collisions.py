@@ -1,0 +1,36 @@
+"""Paper Fig 5 / §4.5: power-of-two stream spacing vs padded spacing.
+
+192 MiB arrays give non-power-of-two segment spacing; 256 MiB gives
+exactly 2^k spacing for every D (the paper's 2 GiB case). Measured on
+the host CPU + the collision model. NOTE (DESIGN.md): guest→host page
+translation randomizes physical page colors, so the VM-measured collapse
+is expected to be much weaker than the paper's bare-metal 2 GiB case;
+the model column shows the bare-metal calibration.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_cbench
+from repro.core import COFFEE_LAKE
+from repro.core.layout import collides
+
+UNROLL = 1024
+DS = (1, 2, 4, 8, 16, 32)
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    for label, mib in (("pow2", 256), ("padded", 192)):
+        for d in DS:
+            r = run_cbench("read", d, max(UNROLL // d, 8), mib)
+            spacing = mib * 2**20 // d
+            rows.append(dict(
+                r, layout=label,
+                spacing_pow2=collides(spacing),
+                model_gibps=round(COFFEE_LAKE.throughput(
+                    d, aliased=(label == "pow2")) / 2**30, 2)))
+    emit(rows, "fig5_collisions")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Paper Fig 7: best multi-strided kernels vs state-of-the-art baselines.
+
+On this host the state-of-the-art stand-ins are XLA:CPU (jit'd jnp — the
+paper's CLang/Polly column) and NumPy/BLAS (np.dot — the paper's
+OpenBLAS/MKL column). Our kernel is the C multi-strided build with the
+planner-chosen D. Copy is compared against numpy's memcpy-backed
+copyto (the STREAM column)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, run_cbench, time_jax
+
+
+def _np_time(fn, iters=5):
+    fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    mib = 96 if quick else 192
+    cols = 4096
+    m = mib * 2**20 // 4 // cols
+
+    # ---- mxv: ours(C, best D) vs numpy BLAS vs XLA ----
+    best = min((run_cbench("mxv", d, 8, mib, cols=cols) for d in
+                (1, 2, 4, 8)), key=lambda r: r["seconds"])
+    a_np = np.ones((m, cols), np.float32)
+    x_np = np.ones((cols,), np.float32)
+    t_blas = _np_time(lambda: a_np @ x_np)
+    a_j = jnp.asarray(a_np)
+    x_j = jnp.asarray(x_np)
+    f = jax.jit(lambda a, x: a @ x)
+    t_xla = time_jax(f, a_j, x_j)
+    rows.append({"kernel": "mxv", "ours_d": best["d"],
+                 "ours_s": round(best["seconds"], 5),
+                 "blas_s": round(t_blas, 5), "xla_s": round(t_xla, 5),
+                 "speedup_vs_blas": round(t_blas / best["seconds"], 3),
+                 "speedup_vs_xla": round(t_xla / best["seconds"], 3),
+                 "seconds": best["seconds"]})
+
+    # ---- copy: ours(C, best D) vs numpy copyto vs XLA ----
+    bestc = min((run_cbench("copy", d, 256, mib) for d in (1, 2, 4, 8)),
+                key=lambda r: r["seconds"])
+    src = np.ones(mib * 2**20 // 4, np.float32)
+    dst = np.empty_like(src)
+    t_np = _np_time(lambda: np.copyto(dst, src))
+    s_j = jnp.asarray(src)
+    g = jax.jit(lambda x: x + 0)
+    t_xla = time_jax(g, s_j)
+    rows.append({"kernel": "copy", "ours_d": bestc["d"],
+                 "ours_s": round(bestc["seconds"], 5),
+                 "numpy_s": round(t_np, 5), "xla_s": round(t_xla, 5),
+                 "speedup_vs_numpy": round(t_np / bestc["seconds"], 3),
+                 "speedup_vs_xla": round(t_xla / bestc["seconds"], 3),
+                 "seconds": bestc["seconds"]})
+
+    # ---- read: ours vs single-strided (the paper's headline effect) ----
+    r1 = run_cbench("read", 1, 1024, mib)
+    rbest = min((run_cbench("read", d, max(1024 // d, 8), mib)
+                 for d in (2, 4, 8, 16)), key=lambda r: r["seconds"])
+    rows.append({"kernel": "read", "ours_d": rbest["d"],
+                 "single_gibps": r1["gibps"], "multi_gibps": rbest["gibps"],
+                 "speedup_vs_single": round(rbest["gibps"] / r1["gibps"], 3),
+                 "seconds": rbest["seconds"]})
+    emit(rows, "fig7_sota")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""§Roofline: per (arch × shape) three-term roofline from the dry-run
+artifacts (artifacts/dryrun/*.json, single-pod mesh)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import get_config, get_shape
+from repro.roofline import analysis
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+ART_OPT = ART + "_opt"
+N_CHIPS = 256
+
+
+def run(quick: bool = False) -> list[dict]:
+    out = []
+    for label, art in (("baseline", ART), ("optimized", ART_OPT)):
+        out += _run_one(label, art)
+    return out
+
+
+def _run_one(label: str, art: str) -> list[dict]:
+    rows = []
+    if not os.path.isdir(art):
+        print(f"roofline_table[{label}]: no artifacts at {art} — run "
+              "`python -m repro.launch.dryrun` first")
+        return rows
+    for fn in sorted(os.listdir(art)):
+        if not fn.endswith("__16x16.json"):
+            continue
+        rec = json.load(open(os.path.join(art, fn)))
+        arch, shape_name = rec["arch"], rec["shape"]
+        cfg, shape = get_config(arch), get_shape(shape_name)
+        coll = rec["collectives"]
+        hlo = {
+            "flops": coll.get("parsed_dot_flops", 0.0),
+            "total_wire_bytes": coll.get("total_wire_bytes", 0.0),
+        }
+        t = analysis.roofline_terms(cfg, shape, N_CHIPS, hlo)
+        rows.append({
+            "variant": label, "arch": arch, "shape": shape_name,
+            "compute_s": f"{t['compute_s']:.4g}",
+            "memory_s": f"{t['memory_s']:.4g}",
+            "collective_s": f"{t['collective_s']:.4g}",
+            "dominant": t["dominant"],
+            "useful_ratio": f"{t['useful_ratio']:.3f}",
+            "roofline_fraction": f"{t['roofline_fraction']:.3f}",
+            "temp_gb": f"{(rec['memory']['temp_bytes'] or 0)/2**30:.1f}",
+            "seconds": 0.0,
+        })
+    emit(rows, "roofline")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig2_stream      paper Fig 2 (stream bw vs stride count)
+  fig34_stalls     paper Fig 3/4 (stalls + hit ratios, modeled)
+  fig5_collisions  paper Fig 5 (power-of-two collision)
+  fig6_kernels     paper Fig 6 (kernel (D,P) sweeps)
+  fig7_sota        paper Fig 7 (vs BLAS/XLA baselines)
+  roofline         §Roofline table from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table names")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (decode_kernel_sweep, fig2_stream,
+                            fig5_collisions, fig6_kernels, fig7_sota,
+                            fig34_stalls, roofline_table)
+    tables = {
+        "fig2_stream": fig2_stream.run,
+        "fig34_stalls": fig34_stalls.run,
+        "fig5_collisions": fig5_collisions.run,
+        "fig6_kernels": fig6_kernels.run,
+        "fig7_sota": fig7_sota.run,
+        "decode_kernel_sweep": decode_kernel_sweep.run,
+        "roofline": roofline_table.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in tables.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        fn(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

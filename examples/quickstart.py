@@ -1,0 +1,59 @@
+"""Quickstart: the paper's transformation in 30 lines.
+
+1. Describe a loop nest → the planner picks the critical access and a
+   multi-strided configuration (paper §5.1).
+2. Run the multi-strided Pallas kernel (interpret mode on CPU) and check
+   it against the oracle.
+3. Train a tiny LM for a few steps with the full framework stack.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ArrayAccess, LoopNest, Traffic, plan,
+                        plan_transform)
+from repro.kernels.mxv import ops as mxv_ops
+from repro.kernels.mxv import ref as mxv_ref
+
+# -- 1. the paper's §5.1 analysis of Listing 1 (transposed mxv) ----------
+nest = LoopNest(loops=("i", "j"),
+                accesses=(ArrayAccess("C", ("i",)),
+                          ArrayAccess("A", ("j", "i")),
+                          ArrayAccess("B", ("j",))),
+                writes=("C",))
+t = plan_transform(nest)
+print(f"critical access: {t.critical.array}  vectorize: {t.contiguous_var}"
+      f"  interchange: {t.needs_interchange}  stride-unroll: {t.stride_var}")
+
+p = plan(Traffic(rows=4096, cols=4096, read_arrays=2))
+print(f"planner: D={p.config.stride_unroll} P={p.config.portion_unroll} "
+      f"predicted {p.predicted_bw/1e9:.0f} GB/s  cols→{p.padded_cols}")
+
+# -- 2. multi-strided kernel vs oracle -----------------------------------
+a = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
+x = jax.random.normal(jax.random.PRNGKey(1), (256,))
+y = mxv_ops.mxv_t(a, x, config=p.config.replace(stride_unroll=4),
+                  mode="interpret")
+np.testing.assert_allclose(y, mxv_ref.mxv_t_ref(a, x), rtol=1e-4,
+                           atol=1e-4)
+print("multi-strided mxv_t matches oracle ✓")
+
+# -- 3. five train steps of a tiny LM ------------------------------------
+from repro.configs import get_config, reduced
+from repro.models.lm import build_model
+from repro.train import AdamWConfig, make_train_step
+from repro.train.trainstep import init_state
+
+cfg = reduced(get_config("yi-9b"))
+model = build_model(cfg)
+state = init_state(model, jax.random.PRNGKey(0))
+step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)),
+               donate_argnums=(0,))
+tokens = jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                            cfg.vocab_size)
+for i in range(5):
+    state, m = step(state, {"tokens": tokens})
+    print(f"step {i}: loss {float(m['loss']):.4f}")
+print("quickstart complete ✓")

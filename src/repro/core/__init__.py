@@ -1,0 +1,29 @@
+"""Core multi-striding library (the paper's contribution, adapted to TPU).
+
+Public API:
+  StridingConfig          — (stride_unroll D, portion_unroll P, lookahead)
+  plan / rank_configs     — auto-configuration (paper §6.3 search, modeled)
+  plan_transform          — paper §5.1 critical-access selection
+  stream_specs/operands   — Pallas multi-stream grid builders
+  TpuDmaModel / CpuPrefetchModel — latency-hiding analytical models
+"""
+from repro.core.dma_model import COFFEE_LAKE, TPU_V5E, CpuPrefetchModel, TpuDmaModel
+from repro.core.pipeline import (coalesced_spec, segment_blocks,
+                                 stream_operands, stream_specs)
+from repro.core.planner import Plan, Traffic, plan, rank_configs
+from repro.core.striding import (SINGLE_STRIDED, StridingConfig, divisors,
+                                 factorizations, partition_rows,
+                                 stream_offsets, stream_spacing_bytes,
+                                 valid_stride_unrolls)
+from repro.core.transform import (ArrayAccess, LoopNest, TransformPlan,
+                                  plan_transform)
+
+__all__ = [
+    "StridingConfig", "SINGLE_STRIDED", "divisors", "factorizations",
+    "stream_offsets", "stream_spacing_bytes", "partition_rows",
+    "valid_stride_unrolls",
+    "Traffic", "Plan", "plan", "rank_configs",
+    "ArrayAccess", "LoopNest", "TransformPlan", "plan_transform",
+    "stream_specs", "stream_operands", "coalesced_spec", "segment_blocks",
+    "TpuDmaModel", "CpuPrefetchModel", "TPU_V5E", "COFFEE_LAKE",
+]

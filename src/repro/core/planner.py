@@ -1,0 +1,114 @@
+"""Configuration planner: pick (stride_unroll, portion_unroll) per workload.
+
+The paper explores the (D, P) space exhaustively per kernel (§6.3); the
+planner encodes the paper's empirical findings as a scoring model so the
+framework can auto-configure:
+
+  * best D is usually 2–10, never past the engine count (Fig 6);
+  * D must divide the traversal extent (§5.1.2 divisibility);
+  * aliased (power-of-two) stream spacing must be avoided or padded (§4.5);
+  * concurrent *write* streams are capped (write-buffer effect, §4.4);
+  * the buffer budget bounds D*P (register file → VMEM here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import layout
+from repro.core.dma_model import TPU_V5E, TpuDmaModel
+from repro.core.striding import StridingConfig, valid_stride_unrolls
+
+__all__ = ["Traffic", "Plan", "plan", "rank_configs"]
+
+# Default per-core VMEM working budget (bytes). v5e VMEM ≈ 16 MiB/core; we
+# leave half for compute operands/accumulators.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Memory signature of a kernel traversal (paper Table 1 columns)."""
+
+    rows: int                  # stride-unrollable extent
+    cols: int                  # contiguous-axis extent (elements)
+    dtype: object = jnp.float32
+    read_arrays: int = 1       # load streams per stride (Table 1 "L")
+    write_arrays: int = 0      # store streams per stride (Table 1 "S")
+    rw_arrays: int = 0         # load/store streams per stride ("L/S")
+    resident_bytes: int = 0    # always-in-VMEM operands (vectors, weights)
+
+    @property
+    def arrays_per_stride(self) -> int:
+        return self.read_arrays + self.write_arrays + 2 * self.rw_arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    config: StridingConfig
+    padded_cols: int           # collision-free lane-aligned column count
+    predicted_bw: float        # bytes/s from the DMA model
+    vmem_bytes: int
+    ranked: tuple = ()         # [(config, bw), ...] best-first (for sweeps)
+
+
+def _block_bytes(traffic: Traffic, portion: int) -> int:
+    sub, lane = layout.sublane_tile(traffic.dtype)
+    return sub * lane * portion * jnp.dtype(traffic.dtype).itemsize
+
+
+def _vmem(traffic: Traffic, cfg: StridingConfig) -> int:
+    per_stream = _block_bytes(traffic, cfg.portion_unroll) * cfg.lookahead
+    return (cfg.stride_unroll * traffic.arrays_per_stride * per_stream
+            + traffic.resident_bytes)
+
+
+def rank_configs(traffic: Traffic,
+                 model: TpuDmaModel = TPU_V5E,
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                 max_streams: int = 16,
+                 max_unrolls: int = 32,
+                 pad_layout: bool = True,
+                 lookahead: int = 2) -> list[tuple[StridingConfig, float, int]]:
+    """All feasible configs scored best-first: [(config, bw, padded_cols)]."""
+    itemsize = jnp.dtype(traffic.dtype).itemsize
+    out = []
+    for d in valid_stride_unrolls(traffic.rows, max_d=max_streams):
+        if pad_layout:
+            cols, aliased = layout.conflict_free_cols(
+                traffic.rows, traffic.cols, d, traffic.dtype)
+        else:
+            cols = layout.pad_to_lane(traffic.cols)
+            aliased = False
+        spacing = (traffic.rows // d) * cols * itemsize
+        if aliased:
+            # kernel will apply a column stagger; spacing is de-aliased by
+            # one block per stream (see layout.stream_stagger).
+            sub, lane = layout.sublane_tile(traffic.dtype)
+            spacing += lane * itemsize
+        for p in (1, 2, 4, 8):
+            if d * p > max_unrolls:
+                continue
+            cfg = StridingConfig(d, p, lookahead=lookahead)
+            vmem = _vmem(traffic, cfg)
+            if vmem > vmem_budget:
+                continue
+            n_write = d * (traffic.write_arrays + traffic.rw_arrays)
+            bw = model.throughput(cfg, _block_bytes(traffic, 1),
+                                  spacing_bytes=spacing,
+                                  n_write_streams=n_write)
+            out.append((cfg, bw, cols))
+    if not out:
+        raise ValueError(f"no feasible striding config for {traffic}")
+    # best bandwidth first; tie-break toward smaller D then smaller P
+    out.sort(key=lambda t: (-t[1], t[0].stride_unroll, t[0].portion_unroll))
+    return out
+
+
+def plan(traffic: Traffic, **kw) -> Plan:
+    ranked = rank_configs(traffic, **kw)
+    cfg, bw, cols = ranked[0]
+    return Plan(config=cfg, padded_cols=cols, predicted_bw=bw,
+                vmem_bytes=_vmem(traffic, cfg),
+                ranked=tuple((c, b) for c, b, _ in ranked))

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticTokens, MemmapTokens,
+                                 make_pipeline)
+
+__all__ = ["DataConfig", "SyntheticTokens", "MemmapTokens", "make_pipeline"]

@@ -1,0 +1,3 @@
+from repro.kernels.adamw.ops import adamw_update
+
+__all__ = ["adamw_update"]

@@ -1,0 +1,66 @@
+"""Multi-strided fused AdamW.
+
+The optimizer step is the paper's §4.6 read-write case at scale: four read
+streams (p, g, m, v) and three write streams (p', m', v') per stride.
+With D strides that is 4D loads + 3D stores in flight — the planner caps D
+so the store side stays below the write-queue knee (paper §4.4).
+Hyper-parameters arrive as a single (1, 8) f32 ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pipeline import segment_blocks, stream_operands, stream_specs
+
+
+def _adamw_kernel(d: int, *refs):
+    p_refs = refs[:d]
+    g_refs = refs[d:2 * d]
+    m_refs = refs[2 * d:3 * d]
+    v_refs = refs[3 * d:4 * d]
+    h_ref = refs[4 * d]
+    op_ref, om_ref, ov_ref = refs[4 * d + 1:4 * d + 4]
+    h = h_ref[0, :]
+    lr, b1, b2, eps, wd, bc1, bc2 = h[0], h[1], h[2], h[3], h[4], h[5], h[6]
+    for k in range(d):
+        pf = p_refs[k][...].astype(jnp.float32)
+        gf = g_refs[k][...].astype(jnp.float32)
+        m_new = b1 * m_refs[k][...] + (1.0 - b1) * gf
+        v_new = b2 * v_refs[k][...] + (1.0 - b2) * gf * gf
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        update = m_hat / (jnp.sqrt(v_hat) + eps) + wd * pf
+        op_ref[k, ...] = (pf - lr * update).astype(op_ref.dtype)
+        om_ref[k, ...] = m_new
+        ov_ref[k, ...] = v_new
+
+
+def adamw(p, g, m, v, hyper, d: int, bm: int, bn: int, *, interpret: bool):
+    rows, cols = p.shape
+    seg = segment_blocks(rows, d, bm)
+    grid = (seg, cols // bn)
+    specs = lambda: stream_specs(rows, bm, bn, d, grid_ndim=2, row_axis=0,
+                                 col_axis=1)
+    in_specs = specs() + specs() + specs() + specs()
+    in_specs.append(pl.BlockSpec((1, 8), lambda i, j: (0, 0)))
+    out_spec = pl.BlockSpec((d, bm, bn), lambda i, j: (0, i, j))
+    seg_rows = rows // d
+    p2, m2, v2 = pl.pallas_call(
+        functools.partial(_adamw_kernel, d),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, seg_rows, cols), p.dtype),
+            jax.ShapeDtypeStruct((d, seg_rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((d, seg_rows, cols), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*stream_operands(p, d), *stream_operands(g, d),
+      *stream_operands(m, d), *stream_operands(v, d), hyper)
+    return (p2.reshape(rows, cols), m2.reshape(rows, cols),
+            v2.reshape(rows, cols))

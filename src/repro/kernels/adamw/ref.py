@@ -1,0 +1,18 @@
+"""Oracle for the fused AdamW update (decoupled weight decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["adamw_ref"]
+
+
+def adamw_ref(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2):
+    """Returns (p', m', v'). bc1/bc2 are the bias corrections 1-b^t."""
+    gf = g.astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * gf
+    v_new = b2 * v + (1.0 - b2) * gf * gf
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + wd * p.astype(jnp.float32)
+    p_new = p.astype(jnp.float32) - lr * update
+    return p_new.astype(p.dtype), m_new, v_new

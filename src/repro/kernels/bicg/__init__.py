@@ -1,0 +1,3 @@
+from repro.kernels.bicg.ops import bicg
+
+__all__ = ["bicg"]

@@ -1,0 +1,84 @@
+"""Multi-strided fused BiCG kernel.
+
+One pass over A serves both reductions (paper Table 1: n+2 load strides,
+1 store, 1 load/store): q accumulates along the column grid axis (inner),
+s accumulates across the row grid axis into a full-width VMEM scratch and
+is written once at the end. A and r are D-stream multi-strided.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pipeline import segment_blocks, stream_operands, stream_specs
+
+
+def _bicg_kernel(d: int, bn: int, *refs):
+    a_refs = refs[:d]
+    r_refs = refs[d:2 * d]
+    p_ref = refs[2 * d]
+    q_ref, s_ref = refs[2 * d + 1], refs[2 * d + 2]
+    acc_q, acc_s = refs[2 * d + 3], refs[2 * d + 4]
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc_q[...] = jnp.zeros_like(acc_q)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _():
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    ps = p_ref[0, :]
+    for k in range(d):
+        a_blk = a_refs[k][...]
+        acc_q[k, :] += jnp.dot(a_blk, ps, preferred_element_type=jnp.float32)
+        s_part = jnp.dot(r_refs[k][0, :], a_blk,
+                         preferred_element_type=jnp.float32)
+        acc_s[0, pl.ds(j * bn, bn)] += s_part
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        q_ref[...] = acc_q[...].astype(q_ref.dtype)
+
+    @pl.when(jnp.logical_and(i == pl.num_programs(0) - 1,
+                             j == pl.num_programs(1) - 1))
+    def _():
+        s_ref[...] = acc_s[...].astype(s_ref.dtype)
+
+
+def bicg(a: jax.Array, r: jax.Array, p: jax.Array, d: int, bm: int, bn: int,
+         *, interpret: bool):
+    m, n = a.shape
+    seg = segment_blocks(m, d, bm)
+    grid = (seg, n // bn)
+    in_specs = stream_specs(m, bm, bn, d, grid_ndim=2, row_axis=0, col_axis=1)
+    for k in range(d):
+        def imap(i, j, _k=k):
+            return (0, i + _k * seg)
+        in_specs.append(pl.BlockSpec((1, bm), imap))
+    in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+    q, s = pl.pallas_call(
+        functools.partial(_bicg_kernel, d, bn),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((d, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, m // d), a.dtype),
+            jax.ShapeDtypeStruct((1, n), a.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((d, bm), jnp.float32),
+            pltpu.VMEM((1, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*stream_operands(a, d), *stream_operands(r.reshape(1, m), d),
+      p.reshape(1, n))
+    return q.reshape(m), s.reshape(n)

@@ -1,0 +1,13 @@
+"""Oracle for the BiCG sub-kernel (paper Table 1, PolyBench bicg)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bicg_ref"]
+
+
+def bicg_ref(a: jnp.ndarray, r: jnp.ndarray, p: jnp.ndarray):
+    """q[i] = Σ_j A[i,j] p[j];  s[j] = Σ_i r[i] A[i,j]."""
+    q = jnp.dot(a, p, preferred_element_type=jnp.float32).astype(a.dtype)
+    s = jnp.dot(r, a, preferred_element_type=jnp.float32).astype(a.dtype)
+    return q, s

@@ -1,0 +1,80 @@
+"""Shared kernel utilities: mode dispatch, padding, divisibility."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.striding import StridingConfig
+
+__all__ = [
+    "kernel_mode", "use_pallas", "interpret_mode",
+    "pad_axis", "pad_to_multiple", "choose_block",
+]
+
+
+def kernel_mode() -> str:
+    """Kernel dispatch mode.
+
+    'pallas'    — compiled pallas_call (TPU target)
+    'interpret' — pallas_call(interpret=True): kernel body runs in Python
+                  on CPU; used by tests to validate against ref oracles
+    'ref'       — pure-jnp reference (XLA ops); default on CPU so the
+                  dry-run/roofline HLO reflects the same math without
+                  interpret-mode overhead
+
+    Override with REPRO_KERNEL_MODE.
+    """
+    env = os.environ.get("REPRO_KERNEL_MODE")
+    if env:
+        if env not in ("pallas", "interpret", "ref"):
+            raise ValueError(f"bad REPRO_KERNEL_MODE={env}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def use_pallas() -> bool:
+    return kernel_mode() in ("pallas", "interpret")
+
+
+def interpret_mode() -> bool:
+    return kernel_mode() == "interpret"
+
+
+def pad_axis(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    """Zero-pad `axis` of x up to a multiple (paper §5.1.2: step-size
+    divisibility — we pad+crop instead of processing leftovers)."""
+    n = x.shape[axis]
+    target = -(-n // multiple) * multiple
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    return -(-n // multiple) * multiple
+
+
+def choose_block(extent: int, preferred: int) -> int:
+    """Largest divisor of `extent` that is <= preferred (>=1)."""
+    b = min(preferred, extent)
+    while extent % b != 0:
+        b -= 1
+    return b
+
+
+def effective_config(config: StridingConfig | None, rows: int,
+                     default: StridingConfig) -> StridingConfig:
+    """Clamp a config's stride_unroll to divide `rows`."""
+    cfg = config or default
+    d = cfg.stride_unroll
+    while rows % d != 0:
+        d -= 1
+    if d != cfg.stride_unroll:
+        cfg = cfg.replace(stride_unroll=max(d, 1))
+    return cfg

@@ -1,0 +1,3 @@
+from repro.kernels.conv3x3.ops import conv3x3
+
+__all__ = ["conv3x3"]

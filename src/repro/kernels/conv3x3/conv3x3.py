@@ -1,0 +1,58 @@
+"""Multi-strided 3x3 convolution stencil.
+
+Paper Table 1: conv has n+2 load strides and n store strides, unaligned
+access (padding offsets break vector alignment). Per output-row stream we
+read three input rows (offsets 0/1/2) — so D streams yield 3D input DMA
+pipelines, the "n+2" structure (adjacent streams share two rows; we fetch
+them independently per stream, which is exactly the redundant-load variant
+the paper uses for its isolated experiments, §6.1: "the loads and stores
+from each unroll are performed, even when redundant").
+
+Column taps are in-register shifts of the fetched rows (static slices) —
+the unaligned accesses of the paper become lane rotations on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(d: int, w_out: int, *refs):
+    x_refs = refs[:3 * d]  # stream-major: [k*3 + r]
+    w_ref = refs[3 * d]
+    o_ref = refs[3 * d + 1]
+    w = w_ref[...]
+    for k in range(d):
+        acc = jnp.zeros((1, w_out), jnp.float32)
+        for r in range(3):
+            row = x_refs[3 * k + r][...]  # (1, w_in)
+            for c in range(3):
+                tap = jax.lax.slice(row, (0, c), (1, c + w_out))
+                acc += w[r, c] * tap.astype(jnp.float32)
+        o_ref[k, ...] = acc.astype(o_ref.dtype)
+
+
+def conv3x3(x: jax.Array, w: jax.Array, d: int, *, interpret: bool):
+    h, w_in = x.shape
+    h_out, w_out = h - 2, w_in - 2
+    seg = h_out // d
+    grid = (seg,)
+    in_specs = []
+    for k in range(d):
+        for r in range(3):
+            def imap(i, _k=k, _r=r):
+                return (i + _k * seg + _r, 0)
+            in_specs.append(pl.BlockSpec((1, w_in), imap))
+    in_specs.append(pl.BlockSpec((3, 3), lambda i: (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, d, w_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, 1, w_out), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, seg, w_out), x.dtype),
+        interpret=interpret,
+    )(*([x] * (3 * d)), w)
+    return out.reshape(h_out, w_out)

@@ -1,0 +1,31 @@
+"""Jit'd wrapper for conv3x3."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.striding import StridingConfig
+from repro.kernels import common
+from repro.kernels.conv3x3 import conv3x3 as k
+from repro.kernels.conv3x3 import ref
+
+_DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def conv3x3(x: jax.Array, w: jax.Array,
+            config: StridingConfig | None = None, mode: str | None = None):
+    """3x3 correlation stencil, valid region (paper conv)."""
+    mode = mode or common.kernel_mode()
+    if mode == "ref":
+        return ref.conv3x3_ref(x, w)
+    h, w_in = x.shape
+    h_out = h - 2
+    cfg = common.effective_config(config, max(h_out, 1), _DEFAULT)
+    d = cfg.stride_unroll
+    # pad output rows to a multiple of d (extra rows read zero-padding)
+    pad_rows = common.pad_to_multiple(h_out, d) - h_out
+    x_p = common.pad_axis(x, 0, h_out + pad_rows + 2) if pad_rows else x
+    out = k.conv3x3(x_p, w, d, interpret=(mode == "interpret"))
+    return out[:h_out]

@@ -1,0 +1,21 @@
+"""Oracle for the 3x3 2D convolution stencil (valid padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["conv3x3_ref"]
+
+
+def conv3x3_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """out[i,j] = Σ_{r,c} w[r,c] x[i+r, j+c]; out is [H-2, W-2].
+
+    Note: correlation (no kernel flip), matching the paper's stencil loop.
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None, None, :, :], w[None, None, :, :],
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    # XLA convolution is cross-correlation (no kernel flip) — exactly the
+    # paper's stencil loop semantics.
+    return out[0, 0]

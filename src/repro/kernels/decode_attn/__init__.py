@@ -1,0 +1,3 @@
+from repro.kernels.decode_attn.ops import decode_attn
+
+__all__ = ["decode_attn"]

@@ -1,0 +1,108 @@
+"""Multi-strided flash-decode attention (GQA).
+
+THE framework integration of the paper's technique: at decode time with a
+long KV cache, attention is a pure streaming read of K and V
+(arithmetic intensity ~1 FLOP/byte) — the critical memory access in the
+paper's §5.1 sense is the KV cache, vectorized along head_dim, and the
+sequence axis is stride-unrolled into D concurrent segments, each its own
+DMA stream. Per-segment online-softmax state lives in VMEM scratch; the
+D partial attentions merge with the standard flash-decode rescale on the
+final grid step.
+
+This is the TPU analogue of transforming mxv (Listing 1): KV rows = A
+rows, query = the resident vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _decode_kernel(d: int, bs: int, seg_len: int, scale: float, *refs):
+    q_ref = refs[0]
+    k_refs = refs[1:1 + d]
+    v_refs = refs[1 + d:1 + 2 * d]
+    len_ref = refs[1 + 2 * d]
+    o_ref = refs[2 + 2 * d]
+    m_s, l_s, acc = refs[3 + 2 * d], refs[4 + 2 * d], refs[5 + 2 * d]
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s, _NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    hq, dh = q_ref.shape[1], q_ref.shape[2]
+    hkv = k_refs[0].shape[2]
+    g = hq // hkv
+    q = q_ref[0].reshape(hkv, g, dh).astype(jnp.float32)
+    kv_len = len_ref[0, 0]
+
+    for k in range(d):
+        kb = k_refs[k][0].astype(jnp.float32)  # [bs, hkv, dh]
+        vb = v_refs[k][0].astype(jnp.float32)
+        s = jnp.einsum("hgd,shd->hgs", q, kb) * scale  # [hkv, g, bs]
+        pos = k * seg_len + i * bs + jax.lax.iota(jnp.int32, bs)
+        s = jnp.where((pos < kv_len)[None, None, :], s, _NEG)
+        s2 = s.reshape(hq, bs)
+        m_old = m_s[k, :]
+        m_new = jnp.maximum(m_old, s2.max(axis=-1))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s2 - m_new[:, None])  # [hq, bs]
+        l_s[k, :] = alpha * l_s[k, :] + p.sum(axis=-1)
+        pv = jnp.einsum("hgs,shd->hgd", p.reshape(hkv, g, bs), vb)
+        acc[k, ...] = alpha[:, None] * acc[k, ...] + pv.reshape(hq, dh)
+        m_s[k, :] = m_new
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _():
+        m_all = m_s[...]                       # [d, hq]
+        m_glob = m_all.max(axis=0)             # [hq]
+        w = jnp.exp(m_all - m_glob[None, :])   # [d, hq]
+        l_glob = (w * l_s[...]).sum(axis=0)    # [hq]
+        o = (w[..., None] * acc[...]).sum(axis=0)  # [hq, dh]
+        o = o / jnp.maximum(l_glob, 1e-20)[:, None]
+        o_ref[0, ...] = o.astype(o_ref.dtype)
+
+
+def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array,
+                d: int, bs: int, *, interpret: bool) -> jax.Array:
+    """q: [B, Hq, dh]; k, v: [B, S, Hkv, dh]; kv_len: [1,1] int32."""
+    b, hq, dh = q.shape
+    s_total, hkv = k.shape[1], k.shape[2]
+    seg_len = s_total // d
+    seg_blocks = seg_len // bs
+    grid = (b, seg_blocks)
+    scale = 1.0 / (dh ** 0.5)
+
+    in_specs = [pl.BlockSpec((1, hq, dh), lambda bi, i: (bi, 0, 0))]
+    for kk in range(d):
+        def imap(bi, i, _k=kk):
+            return (bi, i + _k * seg_blocks, 0, 0)
+        in_specs.append(pl.BlockSpec((1, bs, hkv, dh), imap))
+    for kk in range(d):
+        def imap2(bi, i, _k=kk):
+            return (bi, i + _k * seg_blocks, 0, 0)
+        in_specs.append(pl.BlockSpec((1, bs, hkv, dh), imap2))
+    in_specs.append(pl.BlockSpec((1, 1), lambda bi, i: (0, 0)))
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, d, bs, seg_len, scale),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, hq, dh), lambda bi, i: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, hq), jnp.float32),
+            pltpu.VMEM((d, hq), jnp.float32),
+            pltpu.VMEM((d, hq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, *([k] * d), *([v] * d), kv_len)

@@ -1,0 +1,46 @@
+"""Jit'd wrapper for multi-strided flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Traffic, plan
+from repro.core.striding import StridingConfig
+from repro.kernels import common
+from repro.kernels.decode_attn import decode_attn as k
+from repro.kernels.decode_attn import ref
+
+_DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode", "block_s"))
+def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array,
+                kv_len: jax.Array | int | None = None,
+                config: StridingConfig | None = None,
+                mode: str | None = None, block_s: int = 128) -> jax.Array:
+    """One-token GQA attention against a [B, S, Hkv, dh] KV cache.
+
+    The sequence axis is stride-unrolled into D concurrent KV streams
+    (multi-striding); per-segment online softmax merges at the end.
+    """
+    mode = mode or common.kernel_mode()
+    b, hq, dh = q.shape
+    s, hkv = kc.shape[1], kc.shape[2]
+    if kv_len is None:
+        kv_len = s
+    if mode == "ref":
+        return ref.decode_attn_ref(q, kc, vc, kv_len)
+    if config is None:
+        try:
+            config = plan(Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype,
+                                  read_arrays=2)).config
+        except ValueError:
+            config = _DEFAULT
+    cfg = common.effective_config(config, s, _DEFAULT)
+    d = cfg.stride_unroll
+    bs = common.choose_block(s // d, block_s)
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
+    return k.decode_attn(q, kc, vc, kv_len_arr, d, bs,
+                         interpret=(mode == "interpret"))

@@ -1,0 +1,32 @@
+"""Oracle for GQA decode attention (one query token, long KV cache)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["decode_attn_ref"]
+
+
+def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    kv_len=None) -> jnp.ndarray:
+    """q: [B, Hq, dh]; k, v: [B, S, Hkv, dh]; returns [B, Hq, dh].
+
+    Standard softmax attention with grouped KV heads, f32 accumulation.
+    ``kv_len`` (scalar or [B]) masks positions >= kv_len.
+    """
+    b, hq, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, kf) / jnp.sqrt(dh)
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim == 0:
+            kv_len = jnp.full((b,), kv_len)
+        mask = jnp.arange(s)[None, :] < kv_len[:, None]  # [B, S]
+        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(b, hq, dh).astype(q.dtype)

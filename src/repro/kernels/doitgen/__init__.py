@@ -1,0 +1,3 @@
+from repro.kernels.doitgen.ops import doitgen
+
+__all__ = ["doitgen"]

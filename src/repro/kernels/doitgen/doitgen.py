@@ -1,0 +1,50 @@
+"""Multi-strided doitgen kernel.
+
+Paper §5.1 applied (see tests/test_striding_transform.py): A[r][q][s] is
+3-D but s indexes C4's *first* dim, so the critical access is the written
+array (vectorize p, loop interchange), A rows stream contiguously, and C4
+stays VMEM-resident. Flattened, this is a tall-skinny GEMM
+[R*Q, S] @ [S, P] with D row streams over the tall operand — the
+multi-strided structure is identical to mxv with a matrix-valued x.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pipeline import segment_blocks, stream_operands, stream_specs
+
+
+def _doitgen_kernel(d: int, *refs):
+    a_refs = refs[:d]
+    c4_ref = refs[d]
+    o_ref = refs[d + 1]
+    c4 = c4_ref[...]
+    for k in range(d):
+        o_ref[k, ...] = jnp.dot(a_refs[k][...], c4,
+                                preferred_element_type=jnp.float32
+                                ).astype(o_ref.dtype)
+
+
+def doitgen(a2: jax.Array, c4: jax.Array, d: int, bm: int, *,
+            interpret: bool):
+    """a2: [M, S] flattened A; c4: [S, P]."""
+    m, s = a2.shape
+    p = c4.shape[1]
+    seg = segment_blocks(m, d, bm)
+    grid = (seg,)
+    in_specs = stream_specs(m, bm, s, d, grid_ndim=1, row_axis=0,
+                            col_axis=None)
+    in_specs.append(pl.BlockSpec((s, p), lambda i: (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_doitgen_kernel, d),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bm, p), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, m // d, p), a2.dtype),
+        interpret=interpret,
+    )(*stream_operands(a2, d), c4)
+    return out.reshape(m, p)

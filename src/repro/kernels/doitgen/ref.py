@@ -1,0 +1,12 @@
+"""Oracle for doitgen (PolyBench: MADNESS multi-resolution analysis)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["doitgen_ref"]
+
+
+def doitgen_ref(a: jnp.ndarray, c4: jnp.ndarray) -> jnp.ndarray:
+    """A[r,q,p] = Σ_s A[r,q,s] C4[s,p] (incl. the write-back step)."""
+    return jnp.einsum("rqs,sp->rqp", a, c4,
+                      preferred_element_type=jnp.float32).astype(a.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.gemver.ops import (gemver, gemver_outer, gemver_sum,
+                                      gemver_mxv1, gemver_mxv2)
+
+__all__ = ["gemver", "gemver_outer", "gemver_sum", "gemver_mxv1",
+           "gemver_mxv2"]

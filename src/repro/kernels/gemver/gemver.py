@@ -1,0 +1,86 @@
+"""Multi-strided gemver step kernels.
+
+``outer`` — streaming read-modify-write of A (paper: 4 load strides, n
+load/store strides): D streams over rows.
+``vsum``  — 1-D x += z, loop-blocked into D partitions (paper Table 1
+LB=Y): ops reshapes the vector to 2-D, then D streams over rows.
+The two matrix-vector steps reuse the ``mxv`` kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pipeline import segment_blocks, stream_operands, stream_specs
+
+
+def _outer_kernel(d: int, *refs):
+    a_refs = refs[:d]
+    u1_refs = refs[d:2 * d]
+    u2_refs = refs[2 * d:3 * d]
+    v1_ref, v2_ref = refs[3 * d], refs[3 * d + 1]
+    o_ref = refs[3 * d + 2]
+    v1 = v1_ref[0, :]
+    v2 = v2_ref[0, :]
+    for k in range(d):
+        u1 = u1_refs[k][0, :]
+        u2 = u2_refs[k][0, :]
+        o_ref[k, ...] = (a_refs[k][...]
+                         + u1[:, None] * v1[None, :]
+                         + u2[:, None] * v2[None, :])
+
+
+def outer(a, u1, v1, u2, v2, d: int, bm: int, bn: int, *, interpret: bool):
+    m, n = a.shape
+    seg = segment_blocks(m, d, bm)
+    grid = (seg, n // bn)
+    in_specs = stream_specs(m, bm, bn, d, grid_ndim=2, row_axis=0, col_axis=1)
+    for k in range(d):
+        def imap(i, j, _k=k):
+            return (0, i + _k * seg)
+        in_specs.append(pl.BlockSpec((1, bm), imap))
+    for k in range(d):
+        def imap2(i, j, _k=k):
+            return (0, i + _k * seg)
+        in_specs.append(pl.BlockSpec((1, bm), imap2))
+    in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+    in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+    out = pl.pallas_call(
+        functools.partial(_outer_kernel, d),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bm, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, m // d, n), a.dtype),
+        interpret=interpret,
+    )(*stream_operands(a, d), *stream_operands(u1.reshape(1, m), d),
+      *stream_operands(u2.reshape(1, m), d),
+      v1.reshape(1, n), v2.reshape(1, n))
+    return out.reshape(m, n)
+
+
+def _vsum_kernel(d: int, *refs):
+    x_refs = refs[:d]
+    z_refs = refs[d:2 * d]
+    o_ref = refs[2 * d]
+    for k in range(d):
+        o_ref[k, ...] = x_refs[k][...] + z_refs[k][...]
+
+
+def vsum(x2d, z2d, d: int, bm: int, bn: int, *, interpret: bool):
+    m, n = x2d.shape
+    seg = segment_blocks(m, d, bm)
+    grid = (seg, n // bn)
+    in_specs = stream_specs(m, bm, bn, d, grid_ndim=2, row_axis=0, col_axis=1)
+    in_specs += stream_specs(m, bm, bn, d, grid_ndim=2, row_axis=0, col_axis=1)
+    out = pl.pallas_call(
+        functools.partial(_vsum_kernel, d),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bm, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, m // d, n), x2d.dtype),
+        interpret=interpret,
+    )(*stream_operands(x2d, d), *stream_operands(z2d, d))
+    return out.reshape(m, n)

@@ -1,0 +1,83 @@
+"""Jit'd wrappers for gemver: the four steps + the reassembled kernel
+(paper §6.4: each step individually tuned, then unified)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.striding import StridingConfig
+from repro.kernels import common
+from repro.kernels.gemver import gemver as k
+from repro.kernels.gemver import ref
+from repro.kernels.mxv import ops as mxv_ops
+
+_DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def gemver_outer(a, u1, v1, u2, v2, config: StridingConfig | None = None,
+                 mode: str | None = None):
+    """Â = A + u1 v1ᵀ + u2 v2ᵀ (paper gemverouter)."""
+    mode = mode or common.kernel_mode()
+    if mode == "ref":
+        return ref.outer_ref(a, u1, v1, u2, v2)
+    m, n = a.shape
+    cfg = common.effective_config(config, m, _DEFAULT)
+    d = cfg.stride_unroll
+    bm = common.choose_block(m // d, 8)
+    bn = 128 * cfg.portion_unroll
+    a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
+    mp, np_ = a_p.shape
+    u1_p = common.pad_axis(u1, 0, d * bm)
+    u2_p = common.pad_axis(u2, 0, d * bm)
+    v1_p = common.pad_axis(v1, 0, bn)
+    v2_p = common.pad_axis(v2, 0, bn)
+    out = k.outer(a_p, u1_p, v1_p, u2_p, v2_p, d, bm, bn,
+                  interpret=(mode == "interpret"))
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def gemver_sum(x, z, config: StridingConfig | None = None,
+               mode: str | None = None):
+    """x = x + z, 1-D loop-blocked into D strides (paper gemversum)."""
+    mode = mode or common.kernel_mode()
+    if mode == "ref":
+        return ref.sum_ref(x, z)
+    cfg = config or _DEFAULT
+    d = cfg.stride_unroll
+    bn = 128 * cfg.portion_unroll
+    n = x.shape[0]
+    # loop blocking (paper §5.1.1): distribute the 1-D array over D
+    # partitions; view as [d*bm, cols].
+    cols = bn
+    rows = -(-n // cols)
+    bm = 1
+    rows_p = common.pad_to_multiple(rows, d * bm)
+    x_p = common.pad_axis(x, 0, rows_p * cols).reshape(rows_p, cols)
+    z_p = common.pad_axis(z, 0, rows_p * cols).reshape(rows_p, cols)
+    out = k.vsum(x_p, z_p, d, bm, cols, interpret=(mode == "interpret"))
+    return out.reshape(-1)[:n]
+
+
+def gemver_mxv1(a, y, x, beta, config=None, mode=None):
+    """x = x + β Aᵀ y (reuses the multi-strided mxv_t kernel)."""
+    return x + beta * mxv_ops.mxv_t(a, y, config=config, mode=mode)
+
+
+def gemver_mxv2(a, x, alpha, config=None, mode=None):
+    """w = α A x (reuses the multi-strided mxv kernel)."""
+    return alpha * mxv_ops.mxv(a, x, config=config, mode=mode)
+
+
+def gemver(a, u1, v1, u2, v2, y, z, alpha, beta,
+           config: StridingConfig | None = None, mode: str | None = None):
+    """Full gemver: each step with its best striding config (paper §6.4)."""
+    a_hat = gemver_outer(a, u1, v1, u2, v2, config=config, mode=mode)
+    x = gemver_mxv1(a_hat, y, jnp.zeros_like(z), beta, config=config,
+                    mode=mode)
+    x = gemver_sum(x, z, config=config, mode=mode)
+    w = gemver_mxv2(a_hat, x, alpha, config=config, mode=mode)
+    return a_hat, x, w

@@ -1,0 +1,37 @@
+"""Oracles for the four gemver steps (PolyBench gemver, paper Table 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["outer_ref", "sum_ref", "mxv1_ref", "mxv2_ref", "gemver_ref"]
+
+
+def outer_ref(a, u1, v1, u2, v2):
+    """Â = A + u1 v1ᵀ + u2 v2ᵀ (double rank-1 update)."""
+    return a + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+
+
+def sum_ref(x, z):
+    """x = x + z (vector sum update)."""
+    return x + z
+
+
+def mxv1_ref(a, y, x, beta):
+    """x = x + β Aᵀ y (transpose matrix-vector)."""
+    return x + beta * jnp.dot(y, a, preferred_element_type=jnp.float32
+                              ).astype(a.dtype)
+
+
+def mxv2_ref(a, x, alpha):
+    """w = α A x (matrix-vector)."""
+    return alpha * jnp.dot(a, x, preferred_element_type=jnp.float32
+                           ).astype(a.dtype)
+
+
+def gemver_ref(a, u1, v1, u2, v2, y, z, alpha, beta):
+    """Full PolyBench gemver composition."""
+    a_hat = outer_ref(a, u1, v1, u2, v2)
+    x = mxv1_ref(a_hat, y, jnp.zeros_like(z), beta)
+    x = sum_ref(x, z)
+    w = mxv2_ref(a_hat, x, alpha)
+    return a_hat, x, w

@@ -1,0 +1,3 @@
+from repro.kernels.jacobi2d.ops import jacobi2d
+
+__all__ = ["jacobi2d"]

@@ -1,0 +1,50 @@
+"""Multi-strided 2D Jacobi stencil (5-point).
+
+Same row-stream structure as conv3x3: D output-row streams × 3 input-row
+taps each; column taps are static lane shifts. Paper Table 1: n+2 load
+strides, n store strides, unaligned (U).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(d: int, w_out: int, *refs):
+    x_refs = refs[:3 * d]
+    o_ref = refs[3 * d]
+    for k in range(d):
+        top = x_refs[3 * k + 0][...]
+        mid = x_refs[3 * k + 1][...]
+        bot = x_refs[3 * k + 2][...]
+        c = jax.lax.slice(mid, (0, 1), (1, 1 + w_out)).astype(jnp.float32)
+        l = jax.lax.slice(mid, (0, 0), (1, w_out)).astype(jnp.float32)
+        r = jax.lax.slice(mid, (0, 2), (1, 2 + w_out)).astype(jnp.float32)
+        u = jax.lax.slice(top, (0, 1), (1, 1 + w_out)).astype(jnp.float32)
+        b = jax.lax.slice(bot, (0, 1), (1, 1 + w_out)).astype(jnp.float32)
+        o_ref[k, ...] = (0.2 * (c + l + r + u + b)).astype(o_ref.dtype)
+
+
+def jacobi2d(x: jax.Array, d: int, *, interpret: bool):
+    h, w_in = x.shape
+    h_out, w_out = h - 2, w_in - 2
+    seg = h_out // d
+    grid = (seg,)
+    in_specs = []
+    for k in range(d):
+        for r in range(3):
+            def imap(i, _k=k, _r=r):
+                return (i + _k * seg + _r, 0)
+            in_specs.append(pl.BlockSpec((1, w_in), imap))
+    out = pl.pallas_call(
+        functools.partial(_jacobi_kernel, d, w_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, 1, w_out), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, seg, w_out), x.dtype),
+        interpret=interpret,
+    )(*([x] * (3 * d)))
+    return out.reshape(h_out, w_out)

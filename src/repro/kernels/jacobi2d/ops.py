@@ -1,0 +1,30 @@
+"""Jit'd wrapper for jacobi2d."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.striding import StridingConfig
+from repro.kernels import common
+from repro.kernels.jacobi2d import jacobi2d as k
+from repro.kernels.jacobi2d import ref
+
+_DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def jacobi2d(x: jax.Array, config: StridingConfig | None = None,
+             mode: str | None = None):
+    """One Jacobi 5-point sweep over the interior (paper jacobi2d)."""
+    mode = mode or common.kernel_mode()
+    if mode == "ref":
+        return ref.jacobi2d_ref(x)
+    h, w_in = x.shape
+    h_out = h - 2
+    cfg = common.effective_config(config, max(h_out, 1), _DEFAULT)
+    d = cfg.stride_unroll
+    pad_rows = common.pad_to_multiple(h_out, d) - h_out
+    x_p = common.pad_axis(x, 0, h_out + pad_rows + 2) if pad_rows else x
+    out = k.jacobi2d(x_p, d, interpret=(mode == "interpret"))
+    return out[:h_out]

@@ -1,0 +1,3 @@
+from repro.kernels.mxv.ops import mxv, mxv_t
+
+__all__ = ["mxv", "mxv_t"]

@@ -1,0 +1,61 @@
+"""Jit'd wrappers for mxv / mxv_t with padding + config resolution."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Traffic, plan
+from repro.core.striding import StridingConfig
+from repro.kernels import common
+from repro.kernels.mxv import mxv as k
+from repro.kernels.mxv import ref
+
+_DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
+
+
+def _cfg(m, n, dtype, config, extra_reads=0):
+    if config is None:
+        try:
+            config = plan(Traffic(rows=m, cols=n, dtype=dtype,
+                                  read_arrays=1 + extra_reads)).config
+        except ValueError:
+            config = _DEFAULT
+    return common.effective_config(config, m, _DEFAULT)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def mxv(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
+        mode: str | None = None) -> jax.Array:
+    """y = A @ x (paper mxv / gemvermxv2)."""
+    mode = mode or common.kernel_mode()
+    if mode == "ref":
+        return ref.mxv_ref(a, x)
+    m, n = a.shape
+    cfg = _cfg(m, n, a.dtype, config)
+    d = cfg.stride_unroll
+    bm = common.choose_block(m // d, 8)
+    bn = 128 * cfg.portion_unroll
+    a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
+    x_p = common.pad_axis(x, 0, bn)
+    y = k.mxv(a_p, x_p, d, bm, bn, interpret=(mode == "interpret"))
+    return y[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def mxv_t(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
+          mode: str | None = None) -> jax.Array:
+    """y = Aᵀ @ x (paper Listing 1: gemvermxv1 / doitgen core)."""
+    mode = mode or common.kernel_mode()
+    if mode == "ref":
+        return ref.mxv_t_ref(a, x)
+    m, n = a.shape
+    cfg = _cfg(m, n, a.dtype, config, extra_reads=1)
+    d = cfg.stride_unroll
+    bm = common.choose_block(m // d, 8)
+    bn = 128 * cfg.portion_unroll
+    a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
+    x_p = common.pad_axis(x, 0, d * bm)
+    y = k.mxv_t(a_p, x_p, d, bm, bn, interpret=(mode == "interpret"))
+    return y[:n]

@@ -1,0 +1,17 @@
+"""Oracles for matrix-vector kernels (paper mxv / gemvermxv2 and the
+transposed gemvermxv1 / doitgen-core form, Listing 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["mxv_ref", "mxv_t_ref"]
+
+
+def mxv_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_j A[i,j] x[j], f32 accumulation."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def mxv_t_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[j] = sum_i A[i,j] x[i] (paper Listing 1: C[i] += A[j][i]*B[j])."""
+    return jnp.dot(x, a, preferred_element_type=jnp.float32).astype(a.dtype)

@@ -1,0 +1,32 @@
+"""Jit'd wrapper for fused RMSNorm (any leading batch dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.striding import StridingConfig
+from repro.kernels import common
+from repro.kernels.rmsnorm import ref
+from repro.kernels.rmsnorm import rmsnorm as k
+
+_DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "config", "mode"))
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+            config: StridingConfig | None = None,
+            mode: str | None = None) -> jax.Array:
+    mode = mode or common.kernel_mode()
+    if mode == "ref":
+        return ref.rmsnorm_ref(x, w, eps)
+    shape = x.shape
+    dm = shape[-1]
+    x2 = x.reshape(-1, dm)
+    t = x2.shape[0]
+    cfg = common.effective_config(config, t, _DEFAULT)
+    d = cfg.stride_unroll
+    bm = common.choose_block(t // d, 8 * cfg.portion_unroll)
+    x2 = common.pad_axis(x2, 0, d * bm)
+    out = k.rmsnorm(x2, w, eps, d, bm, interpret=(mode == "interpret"))
+    return out[:t].reshape(shape)

@@ -1,0 +1,13 @@
+"""Oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm_ref"]
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray,
+                eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf / rms) * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,45 @@
+"""Multi-strided fused RMSNorm.
+
+Streaming elementwise-with-row-reduction over [tokens, d_model]: a pure
+bandwidth kernel (read x once, write y once). Token rows are
+stride-unrolled into D concurrent streams (paper's init/writeback-class
+pattern with one load + one store stride per stream)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pipeline import segment_blocks, stream_operands, stream_specs
+
+
+def _rmsnorm_kernel(d: int, eps: float, *refs):
+    x_refs = refs[:d]
+    w_ref = refs[d]
+    o_ref = refs[d + 1]
+    w = w_ref[0, :].astype(jnp.float32)
+    for k in range(d):
+        xf = x_refs[k][...].astype(jnp.float32)
+        rms = jnp.sqrt((xf * xf).mean(axis=-1, keepdims=True) + eps)
+        o_ref[k, ...] = ((xf / rms) * w[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float, d: int, bm: int, *,
+            interpret: bool) -> jax.Array:
+    t, dm = x.shape
+    seg = segment_blocks(t, d, bm)
+    grid = (seg,)
+    in_specs = stream_specs(t, bm, dm, d, grid_ndim=1, row_axis=0,
+                            col_axis=None)
+    in_specs.append(pl.BlockSpec((1, dm), lambda i: (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, d, eps),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bm, dm), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, t // d, dm), x.dtype),
+        interpret=interpret,
+    )(*stream_operands(x, d), w.reshape(1, dm))
+    return out.reshape(t, dm)

@@ -1,0 +1,4 @@
+from repro.kernels.stream.ops import (stream_copy, stream_copy_manual,
+                                      stream_init, stream_read)
+
+__all__ = ["stream_read", "stream_copy", "stream_init", "stream_copy_manual"]

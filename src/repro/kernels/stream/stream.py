@@ -1,0 +1,186 @@
+"""Multi-strided stream micro-kernels (paper §4 micro-benchmarks).
+
+Read uses D independent operand refs — D concurrent DMA streams, the TPU
+analogue of priming D prefetcher positions. Writes use a [D, seg, cols]
+output with a (D, bm, bn) block: one strided-descriptor store stream per
+buffer (see DESIGN.md §2 — the store-side analogue of the paper's grouped
+write arrangement; the write-stream cap from §4.4 is enforced by the
+planner, not the kernel).
+
+``copy_manual`` is the explicit pipeline: a ring of ``lookahead`` buffers
+per stream driven by ``pltpu.make_async_copy``. ``lookahead=1`` serializes
+copy→compute→copy — the controllable analogue of the paper's MSR
+prefetcher-off ablation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pipeline import segment_blocks, stream_operands, stream_specs
+
+
+def _read_kernel(d: int, arrangement: str, sub: int, *refs):
+    in_refs = refs[:d]
+    o_ref = refs[d]
+    acc = refs[d + 1]
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    if arrangement == "grouped":
+        # all of stream k's accesses consecutively (paper §4.1 default)
+        for k in range(d):
+            acc[k, :] += in_refs[k][...].astype(jnp.float32).sum(axis=0)
+    else:
+        # interleaved (paper §4.4): round-robin across streams at
+        # sub-portion granularity
+        bn = acc.shape[1]
+        step = bn // sub
+        for jj in range(sub):
+            sl = pl.ds(jj * step, step)
+            for k in range(d):
+                acc[k, sl] += in_refs[k][:, sl].astype(jnp.float32
+                                                       ).sum(axis=0)
+
+    @pl.when(jnp.logical_and(i == pl.num_programs(0) - 1,
+                             j == pl.num_programs(1) - 1))
+    def _():
+        o_ref[...] = acc[...]
+
+
+def read(x: jax.Array, d: int, bm: int, bn: int, *, interpret: bool,
+         arrangement: str = "grouped") -> jax.Array:
+    """Per-stream checksums over a [rows, cols] array; D concurrent streams."""
+    rows, cols = x.shape
+    seg = segment_blocks(rows, d, bm)
+    grid = (seg, cols // bn)
+    sub = max(bn // 128, 1)
+    in_specs = stream_specs(rows, bm, bn, d, grid_ndim=2, row_axis=0, col_axis=1)
+    out = pl.pallas_call(
+        functools.partial(_read_kernel, d, arrangement, sub),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bn), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, bn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, bn), jnp.float32)],
+        interpret=interpret,
+    )(*stream_operands(x, d))
+    return out.sum(axis=1)
+
+
+def _copy_kernel(d: int, *refs):
+    in_refs = refs[:d]
+    o_ref = refs[d]
+    for k in range(d):
+        o_ref[k, ...] = in_refs[k][...]
+
+
+def copy(x: jax.Array, d: int, bm: int, bn: int, *, interpret: bool) -> jax.Array:
+    """y = x with D read streams + D strided store positions."""
+    rows, cols = x.shape
+    seg_rows = rows // d
+    seg = segment_blocks(rows, d, bm)
+    grid = (seg, cols // bn)
+    in_specs = stream_specs(rows, bm, bn, d, grid_ndim=2, row_axis=0, col_axis=1)
+    out = pl.pallas_call(
+        functools.partial(_copy_kernel, d),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bm, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, seg_rows, cols), x.dtype),
+        interpret=interpret,
+    )(*stream_operands(x, d))
+    return out.reshape(rows, cols)
+
+
+def _init_kernel(d: int, value, o_ref):
+    o_ref[...] = jnp.full_like(o_ref, value)
+
+
+def init(shape: tuple[int, int], value, dtype, d: int, bm: int, bn: int, *,
+         interpret: bool) -> jax.Array:
+    """Fill a [rows, cols] array via D strided store positions."""
+    rows, cols = shape
+    seg_rows = rows // d
+    seg = segment_blocks(rows, d, bm)
+    grid = (seg, cols // bn)
+    out = pl.pallas_call(
+        functools.partial(_init_kernel, d, value),
+        grid=grid,
+        in_specs=[],
+        out_specs=pl.BlockSpec((d, bm, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, seg_rows, cols), dtype),
+        interpret=interpret,
+    )()
+    return out.reshape(rows, cols)
+
+
+def _copy_manual_kernel(d: int, lookahead: int, bm: int, bn: int,
+                        n_steps: int, seg_rows: int,
+                        x_hbm, o_hbm, buf, insem, outsem):
+    def start_in(k, t, slot):
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(k * seg_rows + t * bm, bm), :],
+            buf.at[k, slot], insem.at[k, slot]).start()
+
+    def wait_in(k, slot):
+        pltpu.make_async_copy(buf.at[k, slot], buf.at[k, slot],
+                              insem.at[k, slot]).wait()
+
+    # prologue: prime `lookahead` transfers per stream — the prefetch depth
+    for k in range(d):
+        for t in range(min(lookahead, n_steps)):
+            start_in(k, t, t % lookahead)
+
+    def body(t, _):
+        slot = t % lookahead
+        for k in range(d):
+            wait_in(k, slot)
+            out_cp = pltpu.make_async_copy(
+                buf.at[k, slot],
+                o_hbm.at[pl.ds(k * seg_rows + t * bm, bm), :],
+                outsem.at[k, slot])
+            out_cp.start()
+            out_cp.wait()
+            nxt = t + lookahead
+
+            @pl.when(nxt < n_steps)
+            def _():
+                start_in(k, nxt, slot)
+        return ()
+
+    jax.lax.fori_loop(0, n_steps, body, ())
+
+
+def copy_manual(x: jax.Array, d: int, bm: int, bn: int, lookahead: int, *,
+                interpret: bool) -> jax.Array:
+    """Explicit D-stream, `lookahead`-deep DMA pipeline copy.
+
+    lookahead=1 is the prefetch-off ablation; lookahead>=2 overlaps the
+    next block's fetch with the current block's store.
+    """
+    rows, cols = x.shape
+    if cols != bn:
+        raise ValueError("copy_manual streams full rows: bn must equal cols")
+    seg_rows = rows // d
+    n_steps = seg_rows // bm
+    return pl.pallas_call(
+        functools.partial(_copy_manual_kernel, d, lookahead, bm, bn,
+                          n_steps, seg_rows),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, lookahead, bm, bn), x.dtype),
+            pltpu.SemaphoreType.DMA((d, lookahead)),
+            pltpu.SemaphoreType.DMA((d, lookahead)),
+        ],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,173 @@
+"""Build (step_fn, abstract_args) pairs ready to lower for any
+(arch × shape × mesh) cell — shared by dryrun.py, train.py, serve.py.
+
+Everything here is allocation-free: params/optimizer/cache arrive as
+ShapeDtypeStructs with NamedShardings attached (jax.eval_shape over the
+real constructors), so ``.lower().compile()`` proves the full-scale
+program fits without ever materializing a weight.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import MeshCtx
+from repro.models.lm import build_model
+from repro.sharding import rules
+from repro.train import optimizer as opt
+from repro.train import trainstep
+
+
+def mesh_ctx(mesh) -> MeshCtx:
+    ax = rules.MeshAxes.for_mesh(mesh)
+    return MeshCtx(mesh=mesh, dp_axes=ax.batch, tp_axis=ax.tp)
+
+
+def _shard(tree_sds, tree_specs, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        tree_sds, tree_specs)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig,
+                   for_decode: bool = False) -> dict:
+    b = shape.global_batch
+    s = 1 if for_decode else shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.n_prefix_embeds and not for_decode:
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    if cfg.encdec and not for_decode:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def abstract_params(model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_state(model) -> Any:
+    def mk():
+        p = model.init(jax.random.PRNGKey(0))
+        return {"params": p, "opt_state": opt.adamw_init(p)}
+    return jax.eval_shape(mk)
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    b, max_len = shape.global_batch, shape.seq_len
+
+    def mk():
+        cache = model.init_cache(b, max_len)
+        if cfg.encdec:
+            params = model.init(jax.random.PRNGKey(0))
+            enc = jnp.zeros((b, cfg.enc_seq, cfg.d_model), cfg.cdtype())
+            return {"self": cache, "cross": model.cross_kv(params, enc)}
+        return cache
+
+    return jax.eval_shape(mk)
+
+
+def state_specs(state_sds, cfg, mesh):
+    pspecs = rules.param_specs(state_sds["params"], cfg, mesh)
+    return {
+        "params": pspecs,
+        "opt_state": {"m": pspecs, "v": pspecs, "step": P()},
+    }
+
+
+def _decode_cache_specs(cache_sds, cfg, mesh, shape):
+    if isinstance(cache_sds, dict) and "self" in cache_sds:
+        return {
+            "self": rules.cache_specs(cache_sds["self"], cfg, mesh, shape),
+            "cross": rules.cache_specs(cache_sds["cross"], cfg, mesh, shape),
+        }
+    return rules.cache_specs(cache_sds, cfg, mesh, shape)
+
+
+# ------------------------------------------------------------------ steps
+
+def build_train_step(arch: str, shape_name: str, mesh,
+                     remat: bool = True, grad_accum: int = 1):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    ctx = mesh_ctx(mesh)
+    ocfg = opt.AdamWConfig()
+    step = trainstep.make_train_step(model, ocfg, ctx=ctx, remat=remat,
+                                     grad_accum=grad_accum)
+
+    state_sds = abstract_state(model)
+    sspecs = state_specs(state_sds, cfg, mesh)
+    state_in = _shard(state_sds, sspecs, mesh)
+    batch_sds = abstract_batch(cfg, shape)
+    bspecs = rules.batch_specs(batch_sds, cfg, mesh, shape)
+    batch_in = _shard(batch_sds, bspecs, mesh)
+
+    jitted = jax.jit(step, donate_argnums=(0,))
+    return jitted, (state_in, batch_in)
+
+
+def build_prefill_step(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    ctx = mesh_ctx(mesh)
+
+    def prefill(params, batch):
+        # vlm prefix embeds extend the internal sequence past seq_len
+        max_len = shape.seq_len + cfg.n_prefix_embeds
+        return model.prefill(params, batch, ctx=ctx, max_len=max_len)
+
+    params_sds = abstract_params(model)
+    pspecs = rules.param_specs(params_sds, cfg, mesh, serving=True)
+    params_in = _shard(params_sds, pspecs, mesh)
+    batch_sds = abstract_batch(cfg, shape)
+    bspecs = rules.batch_specs(batch_sds, cfg, mesh, shape)
+    batch_in = _shard(batch_sds, bspecs, mesh)
+
+    jitted = jax.jit(prefill)
+    return jitted, (params_in, batch_in)
+
+
+def build_decode_step(arch: str, shape_name: str, mesh):
+    """serve_step: one new token against a seq_len KV cache."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    ctx = mesh_ctx(mesh)
+
+    def decode(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos, ctx=ctx)
+
+    params_sds = abstract_params(model)
+    pspecs = rules.param_specs(params_sds, cfg, mesh, serving=True)
+    params_in = _shard(params_sds, pspecs, mesh)
+    cache_sds = abstract_cache(model, cfg, shape)
+    cspecs = _decode_cache_specs(cache_sds, cfg, mesh, shape)
+    cache_in = _shard(cache_sds, cspecs, mesh)
+    batch_sds = abstract_batch(cfg, shape, for_decode=True)
+    bspecs = rules.batch_specs(batch_sds, cfg, mesh, shape)
+    tokens_in = _shard(batch_sds, bspecs, mesh)["tokens"]
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P()))
+
+    jitted = jax.jit(decode, donate_argnums=(2,))
+    return jitted, (params_in, tokens_in, cache_in, pos_in)
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        return build_train_step(arch, shape_name, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(arch, shape_name, mesh)
+    return build_decode_step(arch, shape_name, mesh)

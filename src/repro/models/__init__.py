@@ -1,0 +1,1 @@
+"""Model zoo: composable JAX model definitions for the assigned archs."""

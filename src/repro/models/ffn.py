@@ -1,0 +1,33 @@
+"""Dense feed-forward blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": common.dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_out": common.dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = common.dense_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def ffn_forward(p, x, act: str, ctx=None):
+    h = x @ p["w_in"].astype(x.dtype)
+    h = common.constrain_act(h, ctx, tp_dim=x.ndim - 1)
+    if act == "swiglu":
+        g = x @ p["w_gate"].astype(x.dtype)
+        g = common.constrain_act(g, ctx, tp_dim=x.ndim - 1)
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ p["w_out"].astype(x.dtype)

@@ -1,0 +1,133 @@
+"""Encoder-decoder LM (whisper-medium backbone).
+
+The conv/mel frontend is a STUB per the brief: ``frames`` arrive as
+precomputed [B, T_enc, D] embeddings (input_specs provides them). The
+encoder adds sinusoidal positions and runs non-causal attention layers;
+the decoder is the standard causal stack with per-layer cross-attention
+against the encoder output. Positional scheme in the decoder is RoPE for
+framework uniformity (deviation from Whisper's learned PE — dims per the
+assigned table are unchanged; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, blocks, common
+from repro.models.blocks import LayerDesc
+from repro.models.lm import CausalLM, _embed_tokens, _head_logits, chunked_nll
+
+
+def _sinusoid(t: int, d: int):
+    pos = jnp.arange(t)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_descs():
+    return (LayerDesc(mixer="attn", ffn="dense", cross=False),)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM(CausalLM):
+    """cfg.n_layers = decoder depth; cfg.n_enc_layers = encoder depth."""
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_enc_layers,
+                                      encdec=False, rope_style="none")
+        params = {
+            "embed": common.embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                       cfg.pdtype()),
+            "enc_blocks": blocks.init_stack(ks[1], enc_cfg,
+                                            descs=_enc_descs()),
+            "enc_norm": jnp.ones((cfg.d_model,), cfg.pdtype()),
+            "blocks": blocks.init_stack(ks[2], cfg),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype()),
+            "head": common.dense_init(ks[3],
+                                      (cfg.d_model, cfg.padded_vocab),
+                                      dtype=cfg.pdtype()),
+        }
+        return params
+
+    # ------------------------------------------------------------ encode
+    def encode(self, params, frames, ctx=None, remat=True):
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_enc_layers,
+                                      encdec=False, rope_style="none")
+        x = frames.astype(cfg.cdtype())
+        x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        x, _ = blocks.stack_forward(params["enc_blocks"], x, enc_cfg,
+                                    rope=None, ctx=ctx, causal=False,
+                                    remat=remat, descs=_enc_descs())
+        return common.rms_norm(x, params["enc_norm"].astype(x.dtype),
+                               cfg.norm_eps)
+
+    def cross_kv(self, params, enc_out):
+        """Per-layer cross K/V, keyed by period position:
+        {"pos0": {"k","v"}} with leaves [n_periods, B, T, Hkv, dh]."""
+        cfg = self.cfg
+
+        def per_period(pparams):
+            return {"pos0": attention.encoder_kv(pparams["pos0"]["cross"],
+                                                 enc_out, cfg)}
+
+        return jax.vmap(per_period, in_axes=(0,))(params["blocks"])
+
+    # ------------------------------------------------------------- train
+    def loss(self, params, batch, ctx=None, remat=True):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], ctx, remat)
+        kv = self.cross_kv(params, enc_out)
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        s = x.shape[1]
+        rope = common.make_rope(jnp.arange(s), cfg.head_dim, cfg.rope_theta,
+                                cfg.rope_style)
+        x, aux = blocks.stack_forward(params["blocks"], x, cfg, rope, ctx,
+                                      causal=True, cross_kv=kv, remat=remat)
+        x = common.rms_norm(x, params["final_norm"].astype(x.dtype),
+                            cfg.norm_eps)
+        labels = batch["tokens"][:, 1:]
+        mask = jnp.ones_like(labels, jnp.float32)
+        nll = chunked_nll(params, x[:, :-1], labels, mask, cfg)
+        return nll, {"nll": nll, "aux": aux}
+
+    # ------------------------------------------------------------- serve
+    def prefill(self, params, batch, ctx=None, max_len: Optional[int] = None):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], ctx, remat=False)
+        kv = self.cross_kv(params, enc_out)
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        s = x.shape[1]
+        rope = common.make_rope(jnp.arange(s), cfg.head_dim, cfg.rope_theta,
+                                cfg.rope_style)
+        h, _ = blocks.stack_forward(params["blocks"], x, cfg, rope, ctx,
+                                    causal=True, cross_kv=kv, remat=False)
+        h = common.rms_norm(h, params["final_norm"].astype(x.dtype),
+                            cfg.norm_eps)
+        logits = _head_logits(params, h[:, -1:], cfg)[:, 0,
+                                                       :cfg.vocab_size]
+        b = batch["tokens"].shape[0]
+        cache = {"self": self.init_cache(b, max_len or cfg.max_seq),
+                 "cross": kv}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos, ctx=None):
+        cfg = self.cfg
+        x = _embed_tokens(params, tokens, cfg)
+        rope = common.make_rope(jnp.asarray([pos]), cfg.head_dim,
+                                cfg.rope_theta, cfg.rope_style)
+        x, new_self = blocks.stack_decode(params["blocks"], cache["self"],
+                                          x, cfg, rope, pos, ctx,
+                                          cross_kv=cache["cross"])
+        x = common.rms_norm(x, params["final_norm"].astype(x.dtype),
+                            cfg.norm_eps)
+        return (_head_logits(params, x, cfg)[:, 0, :cfg.vocab_size],
+                {"self": new_self, "cross": cache["cross"]})

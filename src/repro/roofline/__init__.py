@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (collective_bytes, roofline_terms,
+                                     model_flops)
+from repro.roofline.hw import TPU_V5E_HW
+
+__all__ = ["collective_bytes", "roofline_terms", "model_flops",
+           "TPU_V5E_HW"]

@@ -1,0 +1,20 @@
+"""Target hardware constants (TPU v5e, per the brief)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float   # FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_link_bw: float       # bytes/s per link
+    hbm_bytes: int           # capacity per chip
+
+
+TPU_V5E_HW = HwSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16 * 1024 ** 3,
+)

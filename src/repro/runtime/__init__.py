@@ -1,0 +1,6 @@
+from repro.runtime.elastic import plan_mesh, remesh_state
+from repro.runtime.fault_tolerance import (HeartbeatRegistry, StepMonitor,
+                                           RestartPolicy)
+
+__all__ = ["StepMonitor", "HeartbeatRegistry", "RestartPolicy",
+           "plan_mesh", "remesh_state"]

@@ -1,0 +1,57 @@
+"""Elastic re-meshing: continue after node loss with a smaller mesh.
+
+Checkpoints store unsharded leaves (checkpoint.manager), so restoring
+onto a different mesh only requires recomputing shardings for the new
+mesh and letting make_array_from_callback slice per-device shards.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.launch.mesh import make_mesh
+from repro.sharding import rules
+
+
+def plan_mesh(n_devices: int, model_parallel: int = 16,
+              pods: int = 1) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest (pod, data, model) shape fitting n_devices.
+
+    Keeps the model axis fixed (param layout / TP degree stable so the
+    sharding rules stay divisible) and shrinks the data axis — losing a
+    host costs one data-parallel row, not a re-plan of TP.
+    """
+    while model_parallel > 1 and n_devices % model_parallel:
+        model_parallel //= 2
+    per_pod = n_devices // pods
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError(f"{n_devices} devices cannot host "
+                         f"model_parallel={model_parallel}")
+    if pods > 1:
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    return (data, model_parallel), ("data", "model")
+
+
+def remesh_state(manager, cfg, state_sds_fn, n_devices: int,
+                 model_parallel: int = 16, pods: int = 1,
+                 step: Optional[int] = None):
+    """Restore the latest checkpoint onto a freshly planned mesh.
+
+    manager: CheckpointManager; state_sds_fn: () → abstract state tree
+    (for sharding-rule reconstruction). Returns (step, state, mesh).
+    """
+    shape, axes = plan_mesh(n_devices, model_parallel, pods)
+    mesh = make_mesh(shape, axes)
+    sds = state_sds_fn()
+    pspecs = rules.param_specs(sds["params"], cfg, mesh)
+    specs = {"params": pspecs,
+             "opt_state": {"m": pspecs, "v": pspecs,
+                           "step": jax.sharding.PartitionSpec()}}
+    shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                             is_leaf=lambda x: isinstance(
+                                 x, jax.sharding.PartitionSpec))
+    step, state = manager.restore(step=step, shardings=shardings)
+    return step, state, mesh

@@ -1,0 +1,223 @@
+"""Logical→physical sharding rules.
+
+Parallelism plan (DESIGN.md §3):
+  * batch            → (pod, data)        pure DP across pods
+  * fsdp (ZeRO-3)    → data               param/opt-state sharding in-pod
+  * tensor parallel  → model              Megatron attn-heads + FFN
+  * expert parallel  → model              MoE experts (shard_map all-to-all)
+  * KV-cache seq     → model (+data at batch=1)   decode split-K
+
+Divisibility-aware: heads (and experts) shard over `model` only when
+evenly divisible — GQA KV heads replicate at kv < tp, starcoder2's 36
+heads replicate, uneven vocabs shard anyway (GSPMD pads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: tuple[str, ...] = ("data",)     # fsdp axes (in-pod)
+    pod: tuple[str, ...] = ()           # cross-pod pure-DP axes
+    tp: str = "model"
+
+    @property
+    def batch(self) -> tuple[str, ...]:
+        return self.pod + self.dp
+
+    @classmethod
+    def for_mesh(cls, mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        return cls(dp=("data",), pod=("pod",) if "pod" in names else (),
+                   tp="model")
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh,
+                serving: bool = False) -> Any:
+    """PartitionSpec tree matching the param tree (works on arrays or
+    ShapeDtypeStructs).
+
+    serving=True drops the ZeRO-3/fsdp axis (params replicate over
+    `data`, shard over `model` only): decode re-reads every weight once
+    per token, and gathering them over `data` each step dominated the
+    decode collective term (EXPERIMENTS.md §Perf, yi-9b decode_32k)."""
+    ax = MeshAxes.for_mesh(mesh)
+    tp, fsdp = ax.tp, ax.dp
+    if serving:
+        fsdp = ()
+    heads_ok = _div(cfg.n_heads, mesh, tp)
+    kv_ok = _div(cfg.n_kv_heads, mesh, tp)
+    ff_ok = _div(cfg.d_ff, mesh, tp) if cfg.d_ff else False
+    moe_ff_ok = (cfg.moe is not None
+                 and _div(cfg.moe.d_ff_expert, mesh, tp))
+    ep_ok = cfg.moe is not None and _div(cfg.moe.n_experts, mesh, tp)
+
+    def spec_for(path: tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        stacked = path[0] in ("blocks", "enc_blocks")
+        lead = (None,) if stacked else ()
+
+        def mk(*axes):
+            return P(*(lead + axes))
+
+        if name == "embed":
+            # tables are padded to cfg.padded_vocab (multiple of 128):
+            # always vocab-shardable → logits stay vocab-sharded
+            if _div(cfg.padded_vocab, mesh, tp):
+                return P(tp, None)
+            return P(None, tp if _div(cfg.d_model, mesh, tp) else None)
+        if name == "head":
+            if _div(cfg.padded_vocab, mesh, tp):
+                return P(None, tp)                   # logits vocab-sharded
+            return P(tp if _div(cfg.d_model, mesh, tp) else None, None)
+        if name in ("final_norm", "enc_norm"):
+            return P(None)
+        # ---- attention ----
+        if len(path) >= 2 and path[-2] in ("attn", "cross"):
+            if name == "wq":
+                return mk(fsdp, tp if heads_ok else None)
+            if name in ("wk", "wv"):
+                return mk(fsdp, tp if kv_ok else None)
+            if name == "wo":
+                return mk(tp if heads_ok else None, fsdp)
+        # ---- dense FFN (incl. MoE dense residual) ----
+        if len(path) >= 2 and (path[-2] == "ffn" or path[-2] == "dense"):
+            if name in ("w_in", "w_gate"):
+                return mk(fsdp, tp if ff_ok else None)
+            if name == "w_out":
+                return mk(tp if ff_ok else None, fsdp)
+        # ---- MoE experts ----
+        if "moe" in path:
+            if name == "router":
+                return mk(None, None)
+            if name in ("w_in", "w_gate"):
+                return mk(tp if ep_ok else None, fsdp, None)
+            if name == "w_out":
+                return mk(tp if ep_ok else None, None, fsdp)
+        # ---- mamba (FSDP only: fused in_proj layout; DESIGN.md) ----
+        if "mamba" in path:
+            if name == "in_proj":
+                return mk(fsdp, None)
+            if name == "out_proj":
+                return mk(None, fsdp)
+            return mk(*(None,) * (leaf.ndim - len(lead)))
+        # norms and everything else: replicated
+        return mk(*(None,) * (leaf.ndim - len(lead)))
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return spec_for(path, node)
+
+    return walk(params, ())
+
+
+def batch_specs(batch: Any, cfg: ModelConfig, mesh,
+                shape: ShapeConfig) -> Any:
+    """Shardings for a train/prefill/decode input batch dict."""
+    ax = MeshAxes.for_mesh(mesh)
+    bsz = shape.global_batch
+    nb = 1
+    for a in ax.batch:
+        nb *= mesh.shape[a]
+    baxes = ax.batch if bsz % nb == 0 else (
+        ax.dp if bsz % mesh.shape[ax.dp[0]] == 0 else ())
+    b = P(baxes) if baxes else P()
+
+    def spec(path, leaf):
+        name = path[-1]
+        if name == "tokens":
+            return P(*(tuple(b) + (None,) * (leaf.ndim - 1)))
+        if name in ("prefix_embeds", "frames"):
+            return P(*(tuple(b) + (None,) * (leaf.ndim - 1)))
+        if name == "pos":
+            return P()
+        return P(*(None,) * leaf.ndim)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return spec(path, node)
+
+    return walk(batch, ())
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh,
+                shape: ShapeConfig) -> Any:
+    """Decode-cache shardings.
+
+    Attention K/V [np, B, S, Hkv, dh]: batch over (pod,data) when
+    divisible; the *sequence* axis over `model` — decode attention
+    becomes mesh-level split-K (flash-decode), the distributed mirror of
+    the multi-strided KV streams inside the kernel. At batch=1
+    (long_500k) the sequence also takes the data axes.
+    SSM states: heads over `model` when divisible.
+    """
+    ax = MeshAxes.for_mesh(mesh)
+    bsz = shape.global_batch
+    nb = 1
+    for a in ax.batch:
+        nb *= mesh.shape[a]
+    batch_ax = ax.batch if bsz % nb == 0 else ()
+    seq_ax = (ax.tp,) if batch_ax else tuple(ax.batch) + (ax.tp,)
+    kv_ok = _div(cfg.n_kv_heads, mesh, ax.tp)
+    s = cfg.ssm
+    nh_ok = s is not None and _div(s.n_heads(cfg.d_model), mesh, ax.tp)
+    conv_ok = (s is not None and
+               _div(s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state,
+                    mesh, ax.tp))
+
+    def _fit(size: int, axes: tuple[str, ...]) -> tuple[str, ...]:
+        """Longest prefix-combination of `axes` that divides `size`
+        (cross-attn KV at enc_seq=1500 is not tp-divisible)."""
+        for cand in (axes, axes[-1:], ()):
+            n = 1
+            for a in cand:
+                n *= mesh.shape[a]
+            if n and size % n == 0:
+                return cand
+        return ()
+
+    def spec(path, leaf):
+        name = path[-1]
+        if name in ("k", "v"):
+            # leaves: [np, B, S, Hkv, dh] (self) / [np, B, T, Hkv, dh] (cross)
+            lead = (None,) * (leaf.ndim - 4)
+            sax = _fit(leaf.shape[-3], seq_ax)
+            return P(*lead, P_ax(batch_ax), P_ax(sax), None, None)
+        if name == "ssm":
+            # [np, B, H, Pdim, N]
+            lead = (None,) * (leaf.ndim - 4)
+            return P(*lead, P_ax(batch_ax),
+                     ax.tp if nh_ok else None, None, None)
+        if name == "conv":
+            # [np, B, K-1, conv_dim]
+            lead = (None,) * (leaf.ndim - 3)
+            return P(*lead, P_ax(batch_ax), None,
+                     ax.tp if conv_ok else None)
+        return P(*(None,) * leaf.ndim)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return spec(path, node)
+
+    return walk(cache, ())
+
+
+def P_ax(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]

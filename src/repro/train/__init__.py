@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_step, cosine_lr
+from repro.train.trainstep import TrainState, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_step", "cosine_lr",
+           "TrainState", "make_train_step"]

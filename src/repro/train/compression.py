@@ -1,0 +1,95 @@
+"""int8 error-feedback gradient compression for the cross-pod (DCI) axis.
+
+The pod-interconnect is the scarcest link at multi-pod scale; gradients
+crossing it are compressed to int8 with a shared per-tensor scale:
+
+    wire = all_to_all(int8 chunks)  →  local int32 exact sum
+         → requantize → all_gather(int8 chunks)
+
+≈ 2·N int8 bytes on the wire vs 8·N for an fp32 ring all-reduce (4×; 2×
+vs bf16). Quantization error is fed back into the next step's gradient
+(error feedback, à la 1-bit Adam) so convergence is preserved.
+
+Use inside a ``shard_map(..., axis_names={"pod"})`` region — see
+``trainstep.make_compressed_train_step``. Measured from the partitioned
+HLO of the 2×16×16 internvl2 train step: 2.05 B/param across the pod
+axis vs 8 B/param for an fp32 ring all-reduce (tests/
+test_compressed_trainstep.py).
+
+LIMITATION (documented future work): ``compressed_pmean`` flattens the
+gradient, which de-shards ZeRO-3/TP dims before quantizing — composing
+int8 pod-sync with fsdp-sharded gradients needs per-shard quantization
+(quantize on the local shard, a2a over pod only). The wire-format win
+on the pod axis itself is real and measured.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, scale: jax.Array):
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q
+
+
+def compressed_pmean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over `axis_name` with int8 wire format (shape preserved)."""
+    n = jax.lax.psum(1, axis_name)
+    shape = x.shape
+    xf = x.astype(jnp.float32).reshape(-1)
+    pad = (-xf.size) % n
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    chunks = xf.reshape(n, -1)
+
+    # shared scale so int32 partial sums are exact across peers
+    scale = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = quantize(chunks, scale)                              # [n, m] int8
+    recv = jax.lax.all_to_all(q, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)    # [n, m] int8
+    local = recv.astype(jnp.int32).sum(axis=0)               # exact
+    mean = local.astype(jnp.float32) * (scale / n)           # [m]
+    # second hop: requantized int8 all-gather of the reduced chunk
+    scale2 = jax.lax.pmax(jnp.max(jnp.abs(mean)), axis_name) / 127.0
+    scale2 = jnp.maximum(scale2, 1e-30)
+    q2 = quantize(mean, scale2)
+    full = jax.lax.all_gather(q2, axis_name, axis=0,
+                              tiled=True).astype(jnp.float32) * scale2
+    out = full[:xf.size - pad] if pad else full
+    return out.reshape(shape).astype(x.dtype)
+
+
+def ef_init(grads: Any) -> Any:
+    """Error-feedback buffers (same structure as grads, f32)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compressed_pmean(grads: Any, ef: Any, axis_name: str):
+    """Error-feedback compressed mean: returns (synced_grads, ef')."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        synced = compressed_pmean(corrected, axis_name)
+        # local quantization residual feeds the next step
+        new_e = corrected - synced.astype(jnp.float32)
+        return synced.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def wire_bytes(n_params: int, n_pods: int) -> dict:
+    """Analytic wire cost per device (for the roofline collective term)."""
+    frac = (n_pods - 1) / max(n_pods, 1)
+    return {
+        "fp32_ring_allreduce": 2 * 4 * n_params * frac,
+        "bf16_ring_allreduce": 2 * 2 * n_params * frac,
+        "int8_ef_a2a_ag": 2 * 1 * n_params * frac,
+    }

@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a cosine
+schedule. The per-parameter update runs through the fused multi-strided
+kernel (`repro.kernels.adamw`) — pallas on TPU, jnp ref elsewhere."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adamw import ops as adamw_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_step(cfg: AdamWConfig, params, grads, opt_state):
+    """One fused AdamW step. Returns (params', opt_state', metrics)."""
+    step = opt_state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * scale
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p2, m2, v2 = adamw_ops.adamw_update(
+            p, g, m, v, lr=lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, wd=wd,
+            bc1=bc1, bc2=bc2)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    new_state = {"m": tdef.unflatten(new_m), "v": tdef.unflatten(new_v),
+                 "step": step}
+    return tdef.unflatten(new_p), new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,76 @@
+"""Interpret-mode validation of the framework kernels (decode_attn,
+rmsnorm, adamw) against their oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.striding import StridingConfig
+from repro.kernels.adamw import ops as adamw_ops
+from repro.kernels.adamw import ref as adamw_ref
+from repro.kernels.decode_attn import ops as da_ops
+from repro.kernels.decode_attn import ref as da_ref
+from repro.kernels.rmsnorm import ops as rms_ops
+from repro.kernels.rmsnorm import ref as rms_ref
+
+K = jax.random.PRNGKey
+
+
+def _rand(shape, key=0, dtype=jnp.float32):
+    return jax.random.normal(K(key), shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("d", [1, 2, 4])
+@pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (4, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attn(d, hq, hkv, dtype):
+    b, s, dh = 2, 512, 64
+    q = _rand((b, hq, dh), 0, dtype)
+    kc = _rand((b, s, hkv, dh), 1, dtype)
+    vc = _rand((b, s, hkv, dh), 2, dtype)
+    got = da_ops.decode_attn(q, kc, vc, config=StridingConfig(d, 1),
+                             mode="interpret")
+    want = da_ref.decode_attn_ref(q, kc, vc)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("kv_len", [1, 100, 512])
+def test_decode_attn_masked(kv_len):
+    b, s, hq, hkv, dh = 1, 512, 4, 2, 64
+    q = _rand((b, hq, dh), 0)
+    kc = _rand((b, s, hkv, dh), 1)
+    vc = _rand((b, s, hkv, dh), 2)
+    got = da_ops.decode_attn(q, kc, vc, kv_len=kv_len,
+                             config=StridingConfig(4, 1), mode="interpret")
+    want = da_ref.decode_attn_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("d", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(64, 256), (30, 512), (2, 3, 128)])
+def test_rmsnorm(d, shape):
+    x = _rand(shape)
+    w = _rand((shape[-1],), 1)
+    got = rms_ops.rmsnorm(x, w, config=StridingConfig(d, 1),
+                          mode="interpret")
+    want = rms_ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("d", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(256, 128), (1000,), (3, 7, 11)])
+def test_adamw(d, shape):
+    p = _rand(shape, 0)
+    g = _rand(shape, 1)
+    m = _rand(shape, 2)
+    v = jnp.abs(_rand(shape, 3))
+    args = dict(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=0.01,
+                bc1=0.5, bc2=0.25)
+    got = adamw_ops.adamw_update(p, g, m, v, config=StridingConfig(d, 1),
+                                 mode="interpret", **args)
+    want = adamw_ref.adamw_ref(p, g, m, v, **args)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,104 @@
+"""Interpret-mode validation of stream + mxv kernels against jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.striding import StridingConfig
+from repro.kernels.mxv import ops as mxv_ops
+from repro.kernels.mxv import ref as mxv_ref
+from repro.kernels.stream import ops as stream_ops
+from repro.kernels.stream import ref as stream_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype=jnp.float32, key=KEY):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("d,p", [(1, 1), (2, 2), (4, 1), (8, 2)])
+@pytest.mark.parametrize("shape", [(64, 256), (32, 384)])
+def test_stream_read(d, p, shape):
+    x = _rand(shape)
+    cfg = StridingConfig(d, p)
+    got = stream_ops.stream_read(x, config=cfg, mode="interpret")
+    want = stream_ref.read_ref(x, d)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("d", [1, 2, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stream_copy(d, dtype):
+    x = _rand((32, 256), dtype)
+    got = stream_ops.stream_copy(x, config=StridingConfig(d, 1),
+                                 mode="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_stream_init(d):
+    got = stream_ops.stream_init((32, 256), 3.5, jnp.float32,
+                                 config=StridingConfig(d, 1),
+                                 mode="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.full((32, 256), 3.5,
+                                                           np.float32))
+
+
+@pytest.mark.parametrize("d", [2, 4])
+def test_stream_read_interleaved_matches_grouped(d):
+    """Paper §4.4: arrangement changes instruction order, not results."""
+    x = _rand((32, 512))
+    a = stream_ops.stream_read(x, config=StridingConfig(d, 2), mode="interpret")
+    b = stream_ops.stream_read(
+        x, config=StridingConfig(d, 2, arrangement="interleaved"),
+        mode="interpret")
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(a, stream_ref.read_ref(x, d), rtol=1e-5)
+
+
+@pytest.mark.parametrize("d,la", [(1, 1), (2, 1), (2, 2), (4, 3)])
+def test_stream_copy_manual(d, la):
+    x = _rand((32, 256))
+    got = stream_ops.stream_copy_manual(
+        x, config=StridingConfig(d, 1, lookahead=la), mode="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+@pytest.mark.parametrize("d,p", [(1, 1), (2, 1), (4, 2)])
+@pytest.mark.parametrize("shape", [(64, 256), (40, 200), (16, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mxv(d, p, shape, dtype):
+    a = _rand(shape, dtype)
+    x = _rand((shape[1],), dtype, jax.random.PRNGKey(1))
+    got = mxv_ops.mxv(a, x, config=StridingConfig(d, p), mode="interpret")
+    want = mxv_ref.mxv_ref(a, x)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("d,p", [(1, 1), (2, 1), (4, 2)])
+@pytest.mark.parametrize("shape", [(64, 256), (40, 200)])
+def test_mxv_t(d, p, shape):
+    a = _rand(shape)
+    x = _rand((shape[0],), key=jax.random.PRNGKey(1))
+    got = mxv_ops.mxv_t(a, x, config=StridingConfig(d, p), mode="interpret")
+    want = mxv_ref.mxv_t_ref(a, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mxv_matches_transform_plan():
+    """The kernel's axis choices follow the paper's §5.1 recipe."""
+    from repro.core import ArrayAccess, LoopNest, plan_transform
+    nest = LoopNest(loops=("i", "j"),
+                    accesses=(ArrayAccess("C", ("i",)),
+                              ArrayAccess("A", ("i", "j")),
+                              ArrayAccess("B", ("j",))),
+                    writes=("C",))
+    t = plan_transform(nest)
+    assert t.critical.array == "A"
+    assert t.contiguous_var == "j"
+    assert t.stride_var == "i"
+    assert not t.needs_interchange

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import layout, striding
+from repro.core.planner import Traffic, rank_configs
+from repro.core.transform import ArrayAccess, LoopNest, plan_transform
+from repro.roofline import analysis
+
+S = settings(max_examples=60, deadline=None)
+
+
+# ------------------------------------------------------------- striding
+
+@S
+@given(st.integers(1, 4096))
+def test_factorizations_cover_exactly_divisors(u):
+    fs = list(striding.factorizations(u))
+    assert all(d * p == u for d, p in fs)
+    assert sorted(d for d, _ in fs) == striding.divisors(u)
+
+
+@S
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_stream_offsets_partition_evenly(d, seg):
+    extent = d * seg
+    offs = striding.stream_offsets(extent, d)
+    assert len(offs) == d
+    assert offs == sorted(offs)
+    diffs = {b - a for a, b in zip(offs, offs[1:])}
+    assert diffs <= {seg}          # maximal, equal spacing (paper Fig 1)
+    assert offs[0] == 0 and offs[-1] + seg == extent
+
+
+# --------------------------------------------------------------- layout
+
+@S
+@given(st.integers(4, 16), st.integers(1, 1 << 24))
+def test_collision_rule_matches_paper_design(e, odd_scale):
+    """Exact powers of two (≥ granularity) collide; anything with an odd
+    factor >1 doesn't — the paper's 2.0 vs 1.9 GiB distinction."""
+    pow2 = 1 << (e + layout.ALIAS_BITS)
+    assert layout.collides(pow2)
+    odd = pow2 * (2 * odd_scale + 1)
+    if odd != pow2:
+        assert not layout.collides(odd)
+
+
+@S
+@given(st.integers(1, 64).map(lambda k: 64 * k),
+       st.integers(1, 4096), st.sampled_from([1, 2, 4, 8, 16]))
+def test_conflict_free_cols_invariants(rows, cols, d):
+    if rows % d:
+        rows = d * max(rows // d, 1)
+    out, aliased = layout.conflict_free_cols(rows, cols, d, jnp.float32)
+    assert out >= cols
+    assert out % layout.LANE == 0
+    if not aliased and d > 1:
+        assert not layout.collides((rows // d) * out * 4)
+
+
+# -------------------------------------------------------------- planner
+
+@S
+@given(st.integers(1, 256).map(lambda k: 16 * k),
+       st.integers(128, 8192), st.integers(0, 3), st.integers(0, 3))
+def test_planner_respects_all_constraints(rows, cols, reads, writes):
+    t = Traffic(rows=rows, cols=cols, read_arrays=max(reads, 1),
+                write_arrays=writes)
+    ranked = rank_configs(t, vmem_budget=4 << 20, max_streams=16,
+                          max_unrolls=32)
+    assert ranked == sorted(ranked, key=lambda r: -r[1])
+    for cfg, bw, padded in ranked:
+        assert rows % cfg.stride_unroll == 0          # §5.1.2 divisibility
+        assert cfg.unrolls <= 32                      # unroll budget
+        assert cfg.stride_unroll <= 16
+        assert padded % layout.LANE == 0
+        assert bw > 0
+
+
+# ------------------------------------------------------------ transform
+
+@S
+@given(st.integers(1, 4), st.integers(1, 4))
+def test_transform_picks_highest_rank_vectorizable(r1, r2):
+    """Among vectorizable accesses, the highest-dimensional wins."""
+    vars_ = ("i", "j", "k", "l")
+    a = ArrayAccess("A", vars_[:r1])
+    b = ArrayAccess("B", vars_[:r2])
+    nest = LoopNest(loops=vars_[:max(r1, r2)], accesses=(a, b), writes=())
+    t = plan_transform(nest)
+    hi = a if r1 >= r2 else b
+    assert t.critical.rank == hi.rank
+    assert t.contiguous_var == t.critical.index[-1]
+
+
+# --------------------------------------------------------- HLO analysis
+
+@S
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 32))
+def test_hlo_while_trip_multiplication(m, n, trips):
+    """Synthetic HLO: one dot inside a while body must be counted
+    trips×."""
+    hlo = f"""
+%body (p: (s32[], f32[{m},{n}])) -> (s32[], f32[{m},{n}]) {{
+  %p = (s32[], f32[{m},{n}]) parameter(0)
+  %w = f32[{n},{n}] constant(0)
+  %x = f32[{m},{n}] get-tuple-element(%p), index=1
+  %dot = f32[{m},{n}] dot(%x, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+
+%cond (p: (s32[], f32[{m},{n}])) -> pred[] {{
+  %p = (s32[], f32[{m},{n}]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %t = s32[] constant({trips})
+  ROOT %cmp = pred[] compare(%i, %t), direction=LT
+}}
+
+ENTRY %main (a: f32[{m},{n}]) -> f32[{m},{n}] {{
+  %a = f32[{m},{n}] parameter(0)
+  %init = (s32[], f32[{m},{n}]) tuple(%a)
+  %wl = (s32[], f32[{m},{n}]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[{m},{n}] get-tuple-element(%wl), index=1
+}}
+"""
+    res = analysis.analyze_hlo(hlo)
+    assert res["flops"] == 2.0 * m * n * n * trips
+
+
+# ------------------------------------------------------------- dma model
+
+@S
+@given(st.sampled_from([1, 2, 4, 8, 16, 32]), st.sampled_from([1, 2, 4, 8]))
+def test_dma_model_sane(d, p):
+    from repro.core import TPU_V5E
+    from repro.core.striding import StridingConfig
+    bw = TPU_V5E.throughput(StridingConfig(d, p), 4096)
+    assert 0 < bw <= TPU_V5E.hbm_bw
+    # prefetch-off (lookahead=1) never beats double-buffering
+    bw1 = TPU_V5E.throughput(StridingConfig(d, p, lookahead=1), 4096)
+    assert bw1 <= bw + 1e-6
