@@ -1,37 +1,36 @@
 """Paper Fig 6: per-kernel throughput across (stride, portion) configs.
 
-Per kernel: the planner's ranked (D,P) sweep scored by the TpuDmaModel
-(the TPU-target prediction), plus a measured column — the C mxv
-microbench for mxv (real multi-strided row streams on the host CPU) and
-wall-clock of the jit'd XLA reference for every kernel as the
-single-strided context. All kernels' Pallas variants are
-interpret-validated in tests/; interpret-mode timing is not meaningful,
-hence the model/measured split (DESIGN.md §4)."""
+The kernel list is *derived from the registry*: every registered paper
+kernel with a Traffic signature (minus the stream micro-kernels, which
+have their own Fig 2 harness) gets a planner-ranked (D,P) sweep scored
+by the TpuDmaModel at its benchmark-scale problem (``spec.bench_sizes``),
+plus a measured column — the C mxv microbench for mxv (real multi-strided
+row streams on the host CPU) and wall-clock of the jit'd XLA reference
+for every kernel as the single-strided context. All kernels' Pallas
+variants are interpret-validated in tests/; interpret-mode timing is not
+meaningful, hence the model/measured split (DESIGN.md §4)."""
 from __future__ import annotations
+
+import subprocess
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, run_cbench, time_jax
-from repro.core import Traffic, rank_configs
+from repro import registry
+from repro.core import rank_configs
 from repro.kernels.bicg import ref as bicg_ref
 from repro.kernels.conv3x3 import ref as conv_ref
 from repro.kernels.doitgen import ref as doit_ref
-from repro.kernels.gemver import ref as gemver_ref
 from repro.kernels.jacobi2d import ref as jac_ref
 from repro.kernels.mxv import ref as mxv_ref
 
-KERNELS = {
-    # name: (traffic builder, jnp ref timing setup)
-    "mxv": dict(rows=4096, cols=4096, reads=1),
-    "mxv_t": dict(rows=4096, cols=4096, reads=2),
-    "bicg": dict(rows=4096, cols=4096, reads=2),
-    "gemverouter": dict(rows=4096, cols=4096, reads=3, writes=1),
-    "gemversum": dict(rows=4096, cols=1024, reads=2, writes=1),
-    "conv3x3": dict(rows=2048, cols=2048, reads=3, writes=1),
-    "jacobi2d": dict(rows=2048, cols=2048, reads=3, writes=1),
-    "doitgen": dict(rows=4096, cols=256, reads=1, writes=1),
-}
+
+def bench_specs() -> list:
+    """Registry-driven kernel list for this figure."""
+    return [s for s in registry.all_specs()
+            if "paper" in s.tags and s.traffic is not None
+            and s.family != "stream" and s.name != "gemver"]
 
 
 def _measured_ref_seconds(name: str, quick: bool) -> float:
@@ -39,10 +38,10 @@ def _measured_ref_seconds(name: str, quick: bool) -> float:
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (n, n), jnp.float32)
     x = jnp.ones((n,), jnp.float32)
-    if name in ("mxv", "gemverouter"):
+    if name in ("mxv", "gemver_outer", "gemver_mxv2"):
         f = jax.jit(lambda a, x: mxv_ref.mxv_ref(a, x))
         return time_jax(f, a, x)
-    if name in ("mxv_t", "gemversum"):
+    if name in ("mxv_t", "gemver_sum", "gemver_mxv1"):
         f = jax.jit(lambda a, x: mxv_ref.mxv_t_ref(a, x))
         return time_jax(f, a, x)
     if name == "bicg":
@@ -65,23 +64,25 @@ def _measured_ref_seconds(name: str, quick: bool) -> float:
 
 def run(quick: bool = False) -> list[dict]:
     rows = []
-    for name, kk in KERNELS.items():
-        traffic = Traffic(rows=kk["rows"], cols=kk["cols"],
-                          read_arrays=kk.get("reads", 1),
-                          write_arrays=kk.get("writes", 0))
+    for spec in bench_specs():
+        traffic = spec.traffic(spec.bench_problem, jnp.float32)
         ranked = rank_configs(traffic, max_streams=32)
         best = ranked[0]
         single = [r for r in ranked if r[0].stride_unroll == 1]
         base_bw = single[0][1] if single else ranked[-1][1]
-        ref_s = _measured_ref_seconds(name, quick)
+        ref_s = _measured_ref_seconds(spec.name, quick)
         meas = None
-        if name == "mxv":
-            m1 = run_cbench("mxv", 1, 8, 96 if quick else 192)
-            md = run_cbench("mxv", best[0].stride_unroll, 8,
-                            96 if quick else 192)
-            meas = round(md["gibps"] / m1["gibps"], 3)
+        if spec.name == "mxv":
+            try:
+                m1 = run_cbench("mxv", 1, 8, 96 if quick else 192)
+                md = run_cbench("mxv", best[0].stride_unroll, 8,
+                                96 if quick else 192)
+                meas = round(md["gibps"] / m1["gibps"], 3)
+            except (OSError, subprocess.CalledProcessError):
+                pass  # C microbench source/toolchain unavailable
+
         rows.append({
-            "kernel": name,
+            "kernel": spec.name,
             "best_d": best[0].stride_unroll,
             "best_p": best[0].portion_unroll,
             "model_bw_gbps": round(best[1] / 1e9, 1),

@@ -14,6 +14,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, run_cbench, time_jax
+from repro import registry
+
+
+def _candidate_ds(kernel: str, rows: int, cols: int,
+                  fallback=(1, 2, 4, 8)) -> tuple[int, ...]:
+    """Stride-unroll sweep for the C bench, from the registry's planner
+    ranking at the benchmark problem size (deduped, best-first)."""
+    from repro.core import rank_configs
+    spec = registry.get(kernel)
+    if spec.traffic is None:
+        return fallback
+    try:
+        ranked = rank_configs(spec.traffic({"m": rows, "n": cols,
+                                            "rows": rows, "cols": cols},
+                                           jnp.float32), max_streams=16)
+    except (ValueError, KeyError):
+        return fallback
+    ds = []
+    for cfg, _bw, _cols in ranked:
+        if cfg.stride_unroll not in ds:
+            ds.append(cfg.stride_unroll)
+        if len(ds) >= 4:
+            break
+    return tuple(ds) or fallback
 
 
 def _np_time(fn, iters=5):
@@ -35,7 +59,7 @@ def run(quick: bool = False) -> list[dict]:
 
     # ---- mxv: ours(C, best D) vs numpy BLAS vs XLA ----
     best = min((run_cbench("mxv", d, 8, mib, cols=cols) for d in
-                (1, 2, 4, 8)), key=lambda r: r["seconds"])
+                _candidate_ds("mxv", m, cols)), key=lambda r: r["seconds"])
     a_np = np.ones((m, cols), np.float32)
     x_np = np.ones((cols,), np.float32)
     t_blas = _np_time(lambda: a_np @ x_np)
@@ -51,7 +75,8 @@ def run(quick: bool = False) -> list[dict]:
                  "seconds": best["seconds"]})
 
     # ---- copy: ours(C, best D) vs numpy copyto vs XLA ----
-    bestc = min((run_cbench("copy", d, 256, mib) for d in (1, 2, 4, 8)),
+    bestc = min((run_cbench("copy", d, 256, mib)
+                 for d in _candidate_ds("stream_copy", m, cols)),
                 key=lambda r: r["seconds"])
     src = np.ones(mib * 2**20 // 4, np.float32)
     dst = np.empty_like(src)

@@ -30,7 +30,11 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to uncompressed payloads when absent
+    import zstandard
+except ImportError:  # pragma: no cover - exercised via tests' monkeypatch
+    zstandard = None
 
 _FLAT_SEP = "/"
 
@@ -94,14 +98,16 @@ class CheckpointManager:
         final = os.path.join(self.dir, name)
         arrays = os.path.join(tmp, "arrays")
         os.makedirs(arrays, exist_ok=True)
-        cctx = zstandard.ZstdCompressor(level=3)
-        manifest = {"step": step, "leaves": {}}
+        cctx = zstandard.ZstdCompressor(level=3) if zstandard else None
+        manifest = {"step": step, "leaves": {},
+                    "codec": "zstd" if cctx else "raw"}
         for i, (key, arr) in enumerate(sorted(host.items())):
-            fn = f"{i:06d}.npy.zst"
+            fn = f"{i:06d}.npy.zst" if cctx else f"{i:06d}.npy"
             buf = io.BytesIO()
             np.save(buf, arr)
+            payload = cctx.compress(buf.getvalue()) if cctx else buf.getvalue()
             with open(os.path.join(arrays, fn), "wb") as f:
-                f.write(cctx.compress(buf.getvalue()))
+                f.write(payload)
             manifest["leaves"][key] = {
                 "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
@@ -142,12 +148,21 @@ class CheckpointManager:
         root = os.path.join(self.dir, f"step_{step:09d}")
         with open(os.path.join(root, "MANIFEST.json")) as f:
             manifest = json.load(f)
-        dctx = zstandard.ZstdDecompressor()
         flat_shardings = _flatten(shardings) if shardings is not None else {}
         flat = {}
         for key, meta in manifest["leaves"].items():
+            # codec dispatch is per-file (suffix): raw checkpoints restore
+            # anywhere; zstd ones raise a clear error on hosts without the
+            # module instead of failing at import time.
             with open(os.path.join(root, "arrays", meta["file"]), "rb") as f:
-                arr = np.load(io.BytesIO(dctx.decompress(f.read())))
+                raw = f.read()
+            if meta["file"].endswith(".zst"):
+                if zstandard is None:
+                    raise ImportError(
+                        f"checkpoint {root} is zstd-compressed but the "
+                        "zstandard module is not installed")
+                raw = zstandard.ZstdDecompressor().decompress(raw)
+            arr = np.load(io.BytesIO(raw))
             sh = flat_shardings.get(key)
             if sh is not None:
                 flat[key] = jax.make_array_from_callback(

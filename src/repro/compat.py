@@ -1,0 +1,54 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+The repo targets the modern ``jax.shard_map`` API (top-level, partial-manual
+via ``axis_names``, replication checking via ``check_vma``).  Older jax
+releases (< 0.5) only ship ``jax.experimental.shard_map.shard_map`` whose
+partial-manual knob is the *complement* set (``auto``) and whose replication
+check is ``check_rep``.  Everything in-tree goes through this module so a
+single interpreter works across both.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional
+
+import jax
+
+__all__ = ["shard_map", "abstract_mesh"]
+
+
+def shard_map(f, mesh, in_specs, out_specs,
+              axis_names: Optional[Iterable[str]] = None,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` with a fallback to the pre-0.5 experimental API.
+
+    ``axis_names`` is the set of mesh axes that are Manual inside ``f``
+    (None ⇒ all of them); ``check_vma`` toggles the replication checker.
+    """
+    if hasattr(jax, "shard_map"):
+        kw: dict[str, Any] = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto: frozenset = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    check_rep = check_vma if check_vma is not None else True
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_rep, auto=auto)
+
+
+def abstract_mesh(concrete_mesh=None):
+    """Mesh to target from *inside* a partial-manual shard_map region.
+
+    New jax exposes ``jax.sharding.get_abstract_mesh()`` (the context mesh
+    with manual axes marked); older jax expects sharding constraints inside
+    a partial-auto region to name the concrete mesh, so we return the one
+    the caller captured.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    return concrete_mesh

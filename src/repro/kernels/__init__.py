@@ -5,24 +5,22 @@ conv3x3, jacobi2d, doitgen.
 Framework set: decode_attn (flash-decode w/ D KV streams), rmsnorm, adamw.
 
 Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper w/ planner integration), ref.py (pure-jnp oracle).
-"""
-from repro.kernels.adamw import adamw_update
-from repro.kernels.bicg import bicg
-from repro.kernels.conv3x3 import conv3x3
-from repro.kernels.decode_attn import decode_attn
-from repro.kernels.doitgen import doitgen
-from repro.kernels.gemver import (gemver, gemver_mxv1, gemver_mxv2,
-                                  gemver_outer, gemver_sum)
-from repro.kernels.jacobi2d import jacobi2d
-from repro.kernels.mxv import mxv, mxv_t
-from repro.kernels.rmsnorm import rmsnorm
-from repro.kernels.stream import (stream_copy, stream_copy_manual,
-                                  stream_init, stream_read)
+wrapper w/ tune-cache + planner integration), ref.py (pure-jnp oracle),
+and a ``register(KernelSpec(...))`` call in its __init__ describing the
+variant to the kernel registry (``repro.registry``).
 
-__all__ = [
-    "stream_read", "stream_copy", "stream_init", "stream_copy_manual",
-    "mxv", "mxv_t", "bicg", "gemver", "gemver_outer", "gemver_sum",
-    "gemver_mxv1", "gemver_mxv2", "conv3x3", "jacobi2d", "doitgen",
-    "decode_attn", "rmsnorm", "adamw_update",
-]
+The export table below is *derived from the registry*: importing the
+family packages registers their specs, and every registered op becomes a
+module attribute.  Adding a kernel family = write the package, list it in
+``repro.registry.base.FAMILIES``, register its spec(s) — exports, the
+conformance test matrix, the autotuner sweep, and the benchmark tables
+all pick it up from there.
+"""
+from repro.kernels import (adamw, bicg, conv3x3, decode_attn, doitgen,
+                           gemver, jacobi2d, mxv, rmsnorm, stream)
+from repro.registry.base import registered_ops as _registered_ops
+
+_OPS = _registered_ops()
+globals().update(_OPS)
+__all__ = sorted(_OPS)
+del _OPS

@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import Traffic, plan
+from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
 from repro.kernels.adamw import adamw as k
@@ -16,38 +16,50 @@ _DEFAULT = StridingConfig(stride_unroll=2, portion_unroll=2)
 _COLS = 512
 
 
+def _blocking(n: int) -> tuple[int, int]:
+    cols = min(_COLS, max(128, n))
+    rows = -(-n // cols)
+    return rows, cols
+
+
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def adamw_update(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
-                 lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0, bc1=1.0, bc2=1.0,
-                 config: StridingConfig | None = None,
-                 mode: str | None = None):
-    """Fused AdamW for one parameter tensor. Returns (p', m', v')."""
-    mode = mode or common.kernel_mode()
+def _adamw(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2,
+           config: StridingConfig, mode: str):
     if mode == "ref":
         return ref.adamw_ref(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2)
     shape = p.shape
     n = p.size
-    cols = min(_COLS, max(128, n))
-    rows = -(-n // cols)
+    rows, cols = _blocking(n)
     flat = lambda a, dt: common.pad_axis(
         a.reshape(-1).astype(dt), 0, rows * cols).reshape(rows, cols)
     p2 = flat(p, p.dtype)
     g2 = flat(g, g.dtype)
     m2 = flat(m, jnp.float32)
     v2 = flat(v, jnp.float32)
-    if config is None:
-        try:
-            # 4 read + 3 write arrays per stride: write-stream cap applies
-            config = plan(Traffic(rows=rows, cols=cols, dtype=p.dtype,
-                                  read_arrays=4, write_arrays=3)).config
-        except ValueError:
-            config = _DEFAULT
-    cfg = common.effective_config(config, rows, _DEFAULT)
-    d = cfg.stride_unroll
+    d = config.stride_unroll
     bm = common.choose_block(rows // d, 8)
-    bn = common.choose_block(cols, 128 * cfg.portion_unroll)
+    bn = common.choose_block(cols, 128 * config.portion_unroll)
     hyper = jnp.asarray([[lr, b1, b2, eps, wd, bc1, bc2, 0.0]], jnp.float32)
     p3, m3, v3 = k.adamw(p2, g2, m2, v2, hyper, d, bm, bn,
                          interpret=(mode == "interpret"))
     unflat = lambda a, dt: a.reshape(-1)[:n].reshape(shape).astype(dt)
-    return unflat(p3, p.dtype), unflat(m3, jnp.float32), unflat(v3, jnp.float32)
+    return unflat(p3, p.dtype), unflat(m3, jnp.float32), unflat(v3,
+                                                                jnp.float32)
+
+
+def adamw_update(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                 lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0, bc1=1.0, bc2=1.0,
+                 config: StridingConfig | None = None,
+                 mode: str | None = None):
+    """Fused AdamW for one parameter tensor. Returns (p', m', v')."""
+    mode = mode or common.kernel_mode()
+    n = 1
+    for s in p.shape:
+        n *= s
+    rows, cols = _blocking(max(n, 1))
+    # 4 read + 3 write arrays per stride: write-stream cap applies
+    traffic = Traffic(rows=rows, cols=cols, dtype=p.dtype,
+                      read_arrays=4, write_arrays=3)
+    cfg = common.resolve_config("adamw_update", p.shape, p.dtype, config,
+                                rows, _DEFAULT, traffic=traffic, mode=mode)
+    return _adamw(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2, cfg, mode)

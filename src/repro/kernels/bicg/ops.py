@@ -5,7 +5,7 @@ import functools
 
 import jax
 
-from repro.core import Traffic, plan
+from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
 from repro.kernels.bicg import bicg as k
@@ -15,25 +15,26 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def bicg(a: jax.Array, r: jax.Array, p: jax.Array,
-         config: StridingConfig | None = None, mode: str | None = None):
-    """q = A p ; s = Aᵀ r — fused single pass (paper bicg)."""
-    mode = mode or common.kernel_mode()
+def _bicg(a, r, p, config: StridingConfig, mode: str):
     if mode == "ref":
         return ref.bicg_ref(a, r, p)
     m, n = a.shape
-    if config is None:
-        try:
-            config = plan(Traffic(rows=m, cols=n, dtype=a.dtype,
-                                  read_arrays=2)).config
-        except ValueError:
-            config = _DEFAULT
-    cfg = common.effective_config(config, m, _DEFAULT)
-    d = cfg.stride_unroll
+    d = config.stride_unroll
     bm = common.choose_block(m // d, 8)
-    bn = 128 * cfg.portion_unroll
+    bn = 128 * config.portion_unroll
     a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
     r_p = common.pad_axis(r, 0, d * bm)
     p_p = common.pad_axis(p, 0, bn)
     q, s = k.bicg(a_p, r_p, p_p, d, bm, bn, interpret=(mode == "interpret"))
     return q[:m], s[:n]
+
+
+def bicg(a: jax.Array, r: jax.Array, p: jax.Array,
+         config: StridingConfig | None = None, mode: str | None = None):
+    """q = A p ; s = Aᵀ r — fused single pass (paper bicg)."""
+    mode = mode or common.kernel_mode()
+    m, n = a.shape
+    traffic = Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2)
+    cfg = common.resolve_config("bicg", a.shape, a.dtype, config, m,
+                                _DEFAULT, traffic=traffic, mode=mode)
+    return _bicg(a, r, p, cfg, mode)

@@ -12,8 +12,15 @@ from repro.core.striding import StridingConfig
 
 __all__ = [
     "kernel_mode", "use_pallas", "interpret_mode",
-    "pad_axis", "pad_to_multiple", "choose_block",
+    "pad_axis", "pad_to_multiple", "choose_block", "resolve_config",
+    "example_input",
 ]
+
+
+def example_input(shape, key: int = 0, dtype=jnp.float32) -> jax.Array:
+    """Deterministic example operand for registry specs / conformance."""
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32).astype(dtype)
 
 
 def kernel_mode() -> str:
@@ -78,3 +85,38 @@ def effective_config(config: StridingConfig | None, rows: int,
     if d != cfg.stride_unroll:
         cfg = cfg.replace(stride_unroll=max(d, 1))
     return cfg
+
+
+# planner results are pure in (kernel, shape, dtype) — memoized so a hot
+# loop (e.g. adamw per tensor per step) doesn't re-rank on every call.
+# The tune-cache lookup stays per-call: a fresh autotune write must win.
+_plan_memo: dict[tuple, StridingConfig | None] = {}
+
+
+def resolve_config(kernel: str, shape, dtype, config, rows: int,
+                   default: StridingConfig, traffic=None,
+                   mode: str | None = None) -> StridingConfig:
+    """Config resolution chain for an op wrapper (paper §6.3 policy):
+
+        explicit config  >  tune-cache (measured best)  >  planner model
+        >  static default
+
+    Runs *outside* jax.jit on purpose: a tune-cache write must be visible
+    to the next call, which a jit-cached trace would freeze out.  The
+    result is always clamped so stride_unroll divides ``rows``.
+    """
+    if config is None:
+        from repro.registry import tunecache
+        config = tunecache.cached_config(kernel, shape, dtype, mode=mode)
+        if config is None and traffic is not None:
+            key = (kernel, tuple(shape), str(jnp.dtype(dtype)))
+            if key in _plan_memo:
+                config = _plan_memo[key]
+            else:
+                from repro.core.planner import plan
+                try:
+                    config = plan(traffic).config
+                except ValueError:
+                    config = None
+                _plan_memo[key] = config
+    return effective_config(config, rows, default)

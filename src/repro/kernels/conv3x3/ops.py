@@ -14,18 +14,24 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def conv3x3(x: jax.Array, w: jax.Array,
-            config: StridingConfig | None = None, mode: str | None = None):
-    """3x3 correlation stencil, valid region (paper conv)."""
-    mode = mode or common.kernel_mode()
+def _conv3x3(x, w, config: StridingConfig, mode: str):
     if mode == "ref":
         return ref.conv3x3_ref(x, w)
     h, w_in = x.shape
     h_out = h - 2
-    cfg = common.effective_config(config, max(h_out, 1), _DEFAULT)
-    d = cfg.stride_unroll
+    d = config.stride_unroll
     # pad output rows to a multiple of d (extra rows read zero-padding)
     pad_rows = common.pad_to_multiple(h_out, d) - h_out
     x_p = common.pad_axis(x, 0, h_out + pad_rows + 2) if pad_rows else x
     out = k.conv3x3(x_p, w, d, interpret=(mode == "interpret"))
     return out[:h_out]
+
+
+def conv3x3(x: jax.Array, w: jax.Array,
+            config: StridingConfig | None = None, mode: str | None = None):
+    """3x3 correlation stencil, valid region (paper conv)."""
+    mode = mode or common.kernel_mode()
+    h_out = max(x.shape[0] - 2, 1)
+    cfg = common.resolve_config("conv3x3", x.shape, x.dtype, config, h_out,
+                                _DEFAULT, mode=mode)
+    return _conv3x3(x, w, cfg, mode)

@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import Traffic, plan
+from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
 from repro.kernels.decode_attn import decode_attn as k
@@ -16,6 +16,18 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode", "block_s"))
+def _decode_attn(q, kc, vc, kv_len, config: StridingConfig, mode: str,
+                 block_s: int) -> jax.Array:
+    s = kc.shape[1]
+    if mode == "ref":
+        return ref.decode_attn_ref(q, kc, vc, kv_len)
+    d = config.stride_unroll
+    bs = common.choose_block(s // d, block_s)
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
+    return k.decode_attn(q, kc, vc, kv_len_arr, d, bs,
+                         interpret=(mode == "interpret"))
+
+
 def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array,
                 kv_len: jax.Array | int | None = None,
                 config: StridingConfig | None = None,
@@ -26,21 +38,10 @@ def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array,
     (multi-striding); per-segment online softmax merges at the end.
     """
     mode = mode or common.kernel_mode()
-    b, hq, dh = q.shape
-    s, hkv = kc.shape[1], kc.shape[2]
+    s, hkv, dh = kc.shape[1], kc.shape[2], kc.shape[3]
     if kv_len is None:
         kv_len = s
-    if mode == "ref":
-        return ref.decode_attn_ref(q, kc, vc, kv_len)
-    if config is None:
-        try:
-            config = plan(Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype,
-                                  read_arrays=2)).config
-        except ValueError:
-            config = _DEFAULT
-    cfg = common.effective_config(config, s, _DEFAULT)
-    d = cfg.stride_unroll
-    bs = common.choose_block(s // d, block_s)
-    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
-    return k.decode_attn(q, kc, vc, kv_len_arr, d, bs,
-                         interpret=(mode == "interpret"))
+    traffic = Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype, read_arrays=2)
+    cfg = common.resolve_config("decode_attn", kc.shape, kc.dtype, config, s,
+                                _DEFAULT, traffic=traffic, mode=mode)
+    return _decode_attn(q, kc, vc, kv_len, cfg, mode, block_s)

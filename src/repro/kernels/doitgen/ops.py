@@ -5,7 +5,7 @@ import functools
 
 import jax
 
-from repro.core import Traffic, plan
+from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
 from repro.kernels.doitgen import doitgen as k
@@ -15,25 +15,28 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def doitgen(a: jax.Array, c4: jax.Array,
-            config: StridingConfig | None = None, mode: str | None = None):
-    """A[r,q,:] ← A[r,q,:] @ C4 (paper doitgen, incl. writeback)."""
-    mode = mode or common.kernel_mode()
+def _doitgen(a, c4, config: StridingConfig, mode: str):
     if mode == "ref":
         return ref.doitgen_ref(a, c4)
     r, q, s = a.shape
     p = c4.shape[1]
     m = r * q
-    if config is None:
-        try:
-            config = plan(Traffic(rows=m, cols=s, dtype=a.dtype,
-                                  read_arrays=1, write_arrays=1,
-                                  resident_bytes=s * p * 4)).config
-        except ValueError:
-            config = _DEFAULT
-    cfg = common.effective_config(config, m, _DEFAULT)
-    d = cfg.stride_unroll
-    bm = common.choose_block(m // d, 8 * cfg.portion_unroll)
+    d = config.stride_unroll
+    bm = common.choose_block(m // d, 8 * config.portion_unroll)
     a2 = common.pad_axis(a.reshape(m, s), 0, d * bm)
     out = k.doitgen(a2, c4, d, bm, interpret=(mode == "interpret"))
     return out[:m].reshape(r, q, p)
+
+
+def doitgen(a: jax.Array, c4: jax.Array,
+            config: StridingConfig | None = None, mode: str | None = None):
+    """A[r,q,:] ← A[r,q,:] @ C4 (paper doitgen, incl. writeback)."""
+    mode = mode or common.kernel_mode()
+    r, q, s = a.shape
+    p = c4.shape[1]
+    m = r * q
+    traffic = Traffic(rows=m, cols=s, dtype=a.dtype, read_arrays=1,
+                      write_arrays=1, resident_bytes=s * p * 4)
+    cfg = common.resolve_config("doitgen", a.shape, a.dtype, config, m,
+                                _DEFAULT, traffic=traffic, mode=mode)
+    return _doitgen(a, c4, cfg, mode)

@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
 from repro.kernels.gemver import gemver as k
@@ -17,19 +18,14 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def gemver_outer(a, u1, v1, u2, v2, config: StridingConfig | None = None,
-                 mode: str | None = None):
-    """Â = A + u1 v1ᵀ + u2 v2ᵀ (paper gemverouter)."""
-    mode = mode or common.kernel_mode()
+def _outer(a, u1, v1, u2, v2, config: StridingConfig, mode: str):
     if mode == "ref":
         return ref.outer_ref(a, u1, v1, u2, v2)
     m, n = a.shape
-    cfg = common.effective_config(config, m, _DEFAULT)
-    d = cfg.stride_unroll
+    d = config.stride_unroll
     bm = common.choose_block(m // d, 8)
-    bn = 128 * cfg.portion_unroll
+    bn = 128 * config.portion_unroll
     a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
-    mp, np_ = a_p.shape
     u1_p = common.pad_axis(u1, 0, d * bm)
     u2_p = common.pad_axis(u2, 0, d * bm)
     v1_p = common.pad_axis(v1, 0, bn)
@@ -39,16 +35,24 @@ def gemver_outer(a, u1, v1, u2, v2, config: StridingConfig | None = None,
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("config", "mode"))
-def gemver_sum(x, z, config: StridingConfig | None = None,
-               mode: str | None = None):
-    """x = x + z, 1-D loop-blocked into D strides (paper gemversum)."""
+def gemver_outer(a, u1, v1, u2, v2, config: StridingConfig | None = None,
+                 mode: str | None = None):
+    """Â = A + u1 v1ᵀ + u2 v2ᵀ (paper gemverouter)."""
     mode = mode or common.kernel_mode()
+    m, n = a.shape
+    traffic = Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=1,
+                      write_arrays=1)
+    cfg = common.resolve_config("gemver_outer", a.shape, a.dtype, config, m,
+                                _DEFAULT, traffic=traffic, mode=mode)
+    return _outer(a, u1, v1, u2, v2, cfg, mode)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _vsum(x, z, config: StridingConfig, mode: str):
     if mode == "ref":
         return ref.sum_ref(x, z)
-    cfg = config or _DEFAULT
-    d = cfg.stride_unroll
-    bn = 128 * cfg.portion_unroll
+    d = config.stride_unroll
+    bn = 128 * config.portion_unroll
     n = x.shape[0]
     # loop blocking (paper §5.1.1): distribute the 1-D array over D
     # partitions; view as [d*bm, cols].
@@ -62,19 +66,47 @@ def gemver_sum(x, z, config: StridingConfig | None = None,
     return out.reshape(-1)[:n]
 
 
+def gemver_sum(x, z, config: StridingConfig | None = None,
+               mode: str | None = None):
+    """x = x + z, 1-D loop-blocked into D strides (paper gemversum)."""
+    mode = mode or common.kernel_mode()
+    if config is None:
+        from repro.registry import tunecache
+        config = tunecache.cached_config("gemver_sum", x.shape, x.dtype,
+                                         mode=mode)
+    cfg = config or _DEFAULT
+    return _vsum(x, z, cfg, mode)
+
+
+def _own_tuned(kernel: str, a, config, mode):
+    """Tuned entry under this variant's own name; the delegated kernel's
+    chain (its tune entry → planner) still applies when this misses."""
+    if config is not None:
+        return config
+    from repro.registry import tunecache
+    return tunecache.cached_config(kernel, a.shape, a.dtype,
+                                   mode=mode or common.kernel_mode())
+
+
 def gemver_mxv1(a, y, x, beta, config=None, mode=None):
     """x = x + β Aᵀ y (reuses the multi-strided mxv_t kernel)."""
+    config = _own_tuned("gemver_mxv1", a, config, mode)
     return x + beta * mxv_ops.mxv_t(a, y, config=config, mode=mode)
 
 
 def gemver_mxv2(a, x, alpha, config=None, mode=None):
     """w = α A x (reuses the multi-strided mxv kernel)."""
+    config = _own_tuned("gemver_mxv2", a, config, mode)
     return alpha * mxv_ops.mxv(a, x, config=config, mode=mode)
 
 
 def gemver(a, u1, v1, u2, v2, y, z, alpha, beta,
            config: StridingConfig | None = None, mode: str | None = None):
-    """Full gemver: each step with its best striding config (paper §6.4)."""
+    """Full gemver: each step with its best striding config (paper §6.4).
+
+    A tuned entry for the composite (one shared config measured
+    end-to-end) wins; otherwise each step resolves its own."""
+    config = _own_tuned("gemver", a, config, mode)
     a_hat = gemver_outer(a, u1, v1, u2, v2, config=config, mode=mode)
     x = gemver_mxv1(a_hat, y, jnp.zeros_like(z), beta, config=config,
                     mode=mode)

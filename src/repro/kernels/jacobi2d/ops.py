@@ -14,17 +14,23 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def jacobi2d(x: jax.Array, config: StridingConfig | None = None,
-             mode: str | None = None):
-    """One Jacobi 5-point sweep over the interior (paper jacobi2d)."""
-    mode = mode or common.kernel_mode()
+def _jacobi2d(x, config: StridingConfig, mode: str):
     if mode == "ref":
         return ref.jacobi2d_ref(x)
     h, w_in = x.shape
     h_out = h - 2
-    cfg = common.effective_config(config, max(h_out, 1), _DEFAULT)
-    d = cfg.stride_unroll
+    d = config.stride_unroll
     pad_rows = common.pad_to_multiple(h_out, d) - h_out
     x_p = common.pad_axis(x, 0, h_out + pad_rows + 2) if pad_rows else x
     out = k.jacobi2d(x_p, d, interpret=(mode == "interpret"))
     return out[:h_out]
+
+
+def jacobi2d(x: jax.Array, config: StridingConfig | None = None,
+             mode: str | None = None):
+    """One Jacobi 5-point sweep over the interior (paper jacobi2d)."""
+    mode = mode or common.kernel_mode()
+    h_out = max(x.shape[0] - 2, 1)
+    cfg = common.resolve_config("jacobi2d", x.shape, x.dtype, config, h_out,
+                                _DEFAULT, mode=mode)
+    return _jacobi2d(x, cfg, mode)

@@ -1,12 +1,15 @@
-"""Jit'd wrappers for mxv / mxv_t with padding + config resolution."""
+"""Jit'd wrappers for mxv / mxv_t with padding + config resolution.
+
+Config resolution (tune-cache → planner → default) runs outside jit so
+autotune results take effect immediately (see common.resolve_config).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import Traffic, plan
+from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
 from repro.kernels.mxv import mxv as k
@@ -15,47 +18,53 @@ from repro.kernels.mxv import ref
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
 
-def _cfg(m, n, dtype, config, extra_reads=0):
-    if config is None:
-        try:
-            config = plan(Traffic(rows=m, cols=n, dtype=dtype,
-                                  read_arrays=1 + extra_reads)).config
-        except ValueError:
-            config = _DEFAULT
-    return common.effective_config(config, m, _DEFAULT)
+def _resolve(kernel, shape, dtype, config, mode, extra_reads=0):
+    m, n = shape
+    traffic = Traffic(rows=m, cols=n, dtype=dtype,
+                      read_arrays=1 + extra_reads)
+    return common.resolve_config(kernel, shape, dtype, config, m,
+                                 _DEFAULT, traffic=traffic, mode=mode)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def mxv(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
-        mode: str | None = None) -> jax.Array:
-    """y = A @ x (paper mxv / gemvermxv2)."""
-    mode = mode or common.kernel_mode()
+def _mxv(a, x, config: StridingConfig, mode: str) -> jax.Array:
     if mode == "ref":
         return ref.mxv_ref(a, x)
     m, n = a.shape
-    cfg = _cfg(m, n, a.dtype, config)
-    d = cfg.stride_unroll
+    d = config.stride_unroll
     bm = common.choose_block(m // d, 8)
-    bn = 128 * cfg.portion_unroll
+    bn = 128 * config.portion_unroll
     a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
     x_p = common.pad_axis(x, 0, bn)
     y = k.mxv(a_p, x_p, d, bm, bn, interpret=(mode == "interpret"))
     return y[:m]
 
 
-@functools.partial(jax.jit, static_argnames=("config", "mode"))
-def mxv_t(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
-          mode: str | None = None) -> jax.Array:
-    """y = Aᵀ @ x (paper Listing 1: gemvermxv1 / doitgen core)."""
+def mxv(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
+        mode: str | None = None) -> jax.Array:
+    """y = A @ x (paper mxv / gemvermxv2)."""
     mode = mode or common.kernel_mode()
+    cfg = _resolve("mxv", a.shape, a.dtype, config, mode)
+    return _mxv(a, x, cfg, mode)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _mxv_t(a, x, config: StridingConfig, mode: str) -> jax.Array:
     if mode == "ref":
         return ref.mxv_t_ref(a, x)
     m, n = a.shape
-    cfg = _cfg(m, n, a.dtype, config, extra_reads=1)
-    d = cfg.stride_unroll
+    d = config.stride_unroll
     bm = common.choose_block(m // d, 8)
-    bn = 128 * cfg.portion_unroll
+    bn = 128 * config.portion_unroll
     a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
     x_p = common.pad_axis(x, 0, d * bm)
     y = k.mxv_t(a_p, x_p, d, bm, bn, interpret=(mode == "interpret"))
     return y[:n]
+
+
+def mxv_t(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
+          mode: str | None = None) -> jax.Array:
+    """y = Aᵀ @ x (paper Listing 1: gemvermxv1 / doitgen core)."""
+    mode = mode or common.kernel_mode()
+    cfg = _resolve("mxv_t", a.shape, a.dtype, config, mode, extra_reads=1)
+    return _mxv_t(a, x, cfg, mode)

@@ -14,19 +14,28 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "config", "mode"))
-def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
-            config: StridingConfig | None = None,
-            mode: str | None = None) -> jax.Array:
-    mode = mode or common.kernel_mode()
+def _rmsnorm(x, w, eps: float, config: StridingConfig,
+             mode: str) -> jax.Array:
     if mode == "ref":
         return ref.rmsnorm_ref(x, w, eps)
     shape = x.shape
     dm = shape[-1]
     x2 = x.reshape(-1, dm)
     t = x2.shape[0]
-    cfg = common.effective_config(config, t, _DEFAULT)
-    d = cfg.stride_unroll
-    bm = common.choose_block(t // d, 8 * cfg.portion_unroll)
+    d = config.stride_unroll
+    bm = common.choose_block(t // d, 8 * config.portion_unroll)
     x2 = common.pad_axis(x2, 0, d * bm)
     out = k.rmsnorm(x2, w, eps, d, bm, interpret=(mode == "interpret"))
     return out[:t].reshape(shape)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+            config: StridingConfig | None = None,
+            mode: str | None = None) -> jax.Array:
+    mode = mode or common.kernel_mode()
+    t = 1
+    for s in x.shape[:-1]:
+        t *= s
+    cfg = common.resolve_config("rmsnorm", x.shape, x.dtype, config,
+                                max(t, 1), _DEFAULT, mode=mode)
+    return _rmsnorm(x, w, eps, cfg, mode)

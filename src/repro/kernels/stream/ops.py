@@ -1,7 +1,10 @@
 """Jit'd public wrappers for the stream kernels.
 
-Handles config defaulting (via the planner), divisibility padding, and
-mode dispatch (pallas / interpret / ref).
+Handles config defaulting (tune-cache → planner), divisibility padding,
+and mode dispatch (pallas / interpret / ref).  Config resolution runs in
+the plain-Python wrapper — not under jit — so a fresh autotune result is
+picked up on the very next call instead of being frozen into a cached
+trace.
 """
 from __future__ import annotations
 
@@ -10,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import Traffic, plan
+from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
 from repro.kernels.stream import ref, stream
@@ -18,77 +21,90 @@ from repro.kernels.stream import ref, stream
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
 
-def _resolve(x_shape, dtype, config, read_arrays, write_arrays):
+def _resolve(kernel, x_shape, dtype, config, mode, read_arrays, write_arrays):
     rows, cols = x_shape
-    if config is None:
-        try:
-            config = plan(Traffic(rows=rows, cols=cols, dtype=dtype,
-                                  read_arrays=read_arrays,
-                                  write_arrays=write_arrays)).config
-        except ValueError:
-            config = _DEFAULT
-    return common.effective_config(config, rows, _DEFAULT)
+    traffic = Traffic(rows=rows, cols=cols, dtype=dtype,
+                      read_arrays=read_arrays, write_arrays=write_arrays)
+    return common.resolve_config(kernel, x_shape, dtype, config, rows,
+                                 _DEFAULT, traffic=traffic, mode=mode)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def stream_read(x: jax.Array, config: StridingConfig | None = None,
-                mode: str | None = None) -> jax.Array:
-    """Per-stream checksums of a [rows, cols] array (paper §4.3 reads)."""
-    mode = mode or common.kernel_mode()
-    cfg = _resolve(x.shape, x.dtype, config, 1, 0)
-    d = cfg.stride_unroll
+def _read(x, config: StridingConfig, mode: str) -> jax.Array:
+    d = config.stride_unroll
     if mode == "ref":
         return ref.read_ref(x, d)
     rows, cols = x.shape
     bm = common.choose_block(rows // d, 8)
-    bn = common.choose_block(cols, 128 * cfg.portion_unroll)
+    bn = common.choose_block(cols, 128 * config.portion_unroll)
     return stream.read(x, d, bm, bn, interpret=(mode == "interpret"),
-                       arrangement=cfg.arrangement)
+                       arrangement=config.arrangement)
+
+
+def stream_read(x: jax.Array, config: StridingConfig | None = None,
+                mode: str | None = None) -> jax.Array:
+    """Per-stream checksums of a [rows, cols] array (paper §4.3 reads)."""
+    mode = mode or common.kernel_mode()
+    cfg = _resolve("stream_read", x.shape, x.dtype, config, mode, 1, 0)
+    return _read(x, cfg, mode)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _copy(x, config: StridingConfig, mode: str) -> jax.Array:
+    if mode == "ref":
+        return ref.copy_ref(x)
+    d = config.stride_unroll
+    rows, cols = x.shape
+    bm = common.choose_block(rows // d, 8)
+    bn = common.choose_block(cols, 128 * config.portion_unroll)
+    return stream.copy(x, d, bm, bn, interpret=(mode == "interpret"))
+
+
 def stream_copy(x: jax.Array, config: StridingConfig | None = None,
                 mode: str | None = None) -> jax.Array:
     """y = x (paper §4.6 copy)."""
     mode = mode or common.kernel_mode()
-    cfg = _resolve(x.shape, x.dtype, config, 1, 1)
-    if mode == "ref":
-        return ref.copy_ref(x)
-    d = cfg.stride_unroll
-    rows, cols = x.shape
-    bm = common.choose_block(rows // d, 8)
-    bn = common.choose_block(cols, 128 * cfg.portion_unroll)
-    return stream.copy(x, d, bm, bn, interpret=(mode == "interpret"))
+    cfg = _resolve("stream_copy", x.shape, x.dtype, config, mode, 1, 1)
+    return _copy(x, cfg, mode)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("shape", "value", "dtype", "config", "mode"))
+                   static_argnames=("shape", "value", "dtype", "config",
+                                    "mode"))
+def _init(shape, value, dtype, config: StridingConfig, mode: str):
+    if mode == "ref":
+        return ref.init_ref(shape, value, dtype)
+    d = config.stride_unroll
+    rows, cols = shape
+    bm = common.choose_block(rows // d, 8)
+    bn = common.choose_block(cols, 128 * config.portion_unroll)
+    return stream.init(shape, value, dtype, d, bm, bn,
+                       interpret=(mode == "interpret"))
+
+
 def stream_init(shape: tuple[int, int], value=0.0, dtype=jnp.float32,
                 config: StridingConfig | None = None,
                 mode: str | None = None) -> jax.Array:
     """Fill (paper 'init' kernel, Table 1)."""
     mode = mode or common.kernel_mode()
-    cfg = _resolve(shape, dtype, config, 0, 1)
-    if mode == "ref":
-        return ref.init_ref(shape, value, dtype)
-    d = cfg.stride_unroll
-    rows, cols = shape
-    bm = common.choose_block(rows // d, 8)
-    bn = common.choose_block(cols, 128 * cfg.portion_unroll)
-    return stream.init(shape, value, dtype, d, bm, bn,
-                       interpret=(mode == "interpret"))
+    cfg = _resolve("stream_init", shape, dtype, config, mode, 0, 1)
+    return _init(tuple(shape), value, dtype, cfg, mode)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _copy_manual(x, config: StridingConfig, mode: str) -> jax.Array:
+    if mode == "ref":
+        return ref.copy_ref(x)
+    d = config.stride_unroll
+    rows, cols = x.shape
+    bm = common.choose_block(rows // d, 8)
+    return stream.copy_manual(x, d, bm, cols, config.lookahead,
+                              interpret=(mode == "interpret"))
+
+
 def stream_copy_manual(x: jax.Array, config: StridingConfig | None = None,
                        mode: str | None = None) -> jax.Array:
     """Copy via the explicit multi-buffered DMA pipeline (lookahead knob)."""
     mode = mode or common.kernel_mode()
-    cfg = _resolve(x.shape, x.dtype, config, 1, 1)
-    if mode == "ref":
-        return ref.copy_ref(x)
-    d = cfg.stride_unroll
-    rows, cols = x.shape
-    bm = common.choose_block(rows // d, 8)
-    return stream.copy_manual(x, d, bm, cols, cfg.lookahead,
-                              interpret=(mode == "interpret"))
+    cfg = _resolve("stream_copy_manual", x.shape, x.dtype, config, mode, 1, 1)
+    return _copy_manual(x, cfg, mode)

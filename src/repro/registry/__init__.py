@@ -1,0 +1,24 @@
+"""Kernel registry + empirical (D, P) autotuner.
+
+Public API:
+  KernelSpec / register        — declare a kernel variant (one per op)
+  get / names / families /
+  all_specs / family_specs     — query the registry
+  conformance_points           — the generated kernel × (D, P) test matrix
+  tune / tune_all              — measured sweeps over planner candidates
+  TuneCache / cached_config    — the on-disk measured-config store
+"""
+from repro.registry.autotune import TuneResult, tune, tune_all
+from repro.registry.base import (FAMILIES, KernelSpec, all_specs,
+                                 conformance_points, families, family_specs,
+                                 get, names, register)
+from repro.registry.tunecache import (TuneCache, cache_key, cached_config,
+                                      default_cache, reset_default_cache)
+
+__all__ = [
+    "KernelSpec", "register", "get", "names", "families", "all_specs",
+    "family_specs", "conformance_points", "FAMILIES",
+    "tune", "tune_all", "TuneResult",
+    "TuneCache", "cache_key", "cached_config", "default_cache",
+    "reset_default_cache",
+]

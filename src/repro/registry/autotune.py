@@ -1,0 +1,150 @@
+"""Empirical (D, P) autotuner over the kernel registry.
+
+The analytic planner (``repro.core.planner``) predicts bandwidth; the
+paper's actual method is exhaustive *measurement* per kernel and
+micro-architecture (§6.3).  ``tune`` closes that gap: it takes the
+planner's ranked candidate configs, times the registered kernel variant
+at each one, and persists the measured best in the on-disk tune cache so
+subsequent op calls (``ops.py`` wrappers) resolve
+
+    explicit config  >  tune-cache (measured best)  >  planner model
+
+without re-measuring.  ``tune_all`` sweeps every registered kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import rank_configs
+from repro.core.striding import StridingConfig, valid_stride_unrolls
+from repro.registry import base, tunecache
+
+__all__ = ["TuneResult", "tune", "tune_all", "candidate_configs"]
+
+# fallback sweep when a spec has no Traffic signature (or the planner
+# rejects every point): the paper's low-D corner of the space
+_FALLBACK = (StridingConfig(1, 1), StridingConfig(2, 1),
+             StridingConfig(2, 2), StridingConfig(4, 1),
+             StridingConfig(4, 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    kernel: str
+    key: str
+    config: StridingConfig
+    seconds: float
+    mode: str
+    from_cache: bool
+    trials: tuple[tuple[StridingConfig, float], ...] = ()
+    predicted_bw: float = 0.0
+
+
+def _kernel_mode(mode: Optional[str]) -> str:
+    if mode is not None:
+        return mode
+    from repro.kernels import common
+    return common.kernel_mode()
+
+
+def candidate_configs(spec: base.KernelSpec, sizes: Mapping[str, int],
+                      dtype, max_candidates: int = 8,
+                      ) -> list[tuple[StridingConfig, float]]:
+    """Planner-ranked (config, predicted_bw) candidates for one problem."""
+    if spec.traffic is not None:
+        try:
+            ranked = rank_configs(spec.traffic(sizes, dtype))
+            out, seen = [], set()
+            for cfg, bw, _cols in ranked:
+                if (cfg.stride_unroll, cfg.portion_unroll) in seen:
+                    continue
+                seen.add((cfg.stride_unroll, cfg.portion_unroll))
+                out.append((cfg, bw))
+                if len(out) >= max_candidates:
+                    break
+            return out
+        except ValueError:
+            pass
+    return [(c, 0.0) for c in _FALLBACK[:max_candidates]]
+
+
+def _measure(spec: base.KernelSpec, inputs: tuple, cfg: StridingConfig,
+             mode: str, iters: int, warmup: int) -> float:
+    def call():
+        return jax.block_until_ready(spec.run(inputs, cfg, mode))
+
+    for _ in range(warmup):
+        call()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        call()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def tune(kernel: str | base.KernelSpec,
+         sizes: Optional[Mapping[str, int]] = None,
+         dtype=jnp.float32,
+         mode: Optional[str] = None,
+         cache: Optional[tunecache.TuneCache] = None,
+         force: bool = False,
+         max_candidates: int = 8,
+         iters: int = 3,
+         warmup: int = 1) -> TuneResult:
+    """Measured sweep for one kernel; cached on disk, hit on re-tune."""
+    spec = kernel if isinstance(kernel, base.KernelSpec) else base.get(kernel)
+    sizes = dict(sizes if sizes is not None else spec.default_sizes)
+    mode = _kernel_mode(mode)
+    cache = cache or tunecache.default_cache()
+    shape = (spec.cache_shape(sizes) if spec.cache_shape is not None
+             else tuple(sizes.values()))
+    key = tunecache.cache_key(spec.name, shape, dtype, mode=mode)
+
+    if not force:
+        entry = cache.lookup(key)
+        if entry is not None:
+            return TuneResult(
+                kernel=spec.name, key=key,
+                config=StridingConfig(int(entry["d"]), int(entry["p"]),
+                                      lookahead=int(entry.get("lookahead", 2)),
+                                      arrangement=entry.get("arrangement",
+                                                            "grouped")),
+                seconds=float(entry.get("seconds", 0.0)), mode=mode,
+                from_cache=True,
+                predicted_bw=float(entry.get("predicted_bw", 0.0)))
+
+    inputs = spec.make_inputs(sizes, dtype)
+    trials = []
+    for cfg, bw in candidate_configs(spec, sizes, dtype, max_candidates):
+        sec = _measure(spec, inputs, cfg, mode, iters, warmup)
+        trials.append((cfg, sec, bw))
+    trials.sort(key=lambda t: t[1])
+    best_cfg, best_sec, best_bw = trials[0]
+    cache.store(key, {
+        "d": best_cfg.stride_unroll, "p": best_cfg.portion_unroll,
+        "lookahead": best_cfg.lookahead,
+        "arrangement": best_cfg.arrangement,
+        "seconds": best_sec, "predicted_bw": best_bw, "mode": mode,
+        "source": "autotune",
+        "trials": [{"d": c.stride_unroll, "p": c.portion_unroll,
+                    "seconds": s} for c, s, _ in trials],
+    })
+    return TuneResult(kernel=spec.name, key=key, config=best_cfg,
+                      seconds=best_sec, mode=mode, from_cache=False,
+                      trials=tuple((c, s) for c, s, _ in trials),
+                      predicted_bw=best_bw)
+
+
+def tune_all(kernels: Optional[Sequence[str]] = None,
+             **kw: Any) -> dict[str, TuneResult]:
+    """Sweep every (or the named) registered kernel; {name: TuneResult}."""
+    specs = ([base.get(k) for k in kernels] if kernels is not None
+             else base.all_specs())
+    return {s.name: tune(s, **kw) for s in specs}

@@ -1,0 +1,155 @@
+"""On-disk cache of empirically-tuned (D, P) configurations.
+
+The paper finds the best (stride_unroll, portion_unroll) point per kernel
+and micro-architecture by exhaustive measurement (§6.3); this module is
+the persistence layer for those measurements.  Entries are keyed by
+
+    kernel name | problem shape | dtype | jax backend | kernel mode
+
+and stored as one JSON file so a tuned machine resolves kernels via the
+measured best rather than the analytic DMA-model prediction.
+
+Location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro/tune_cache.json``.  The file maps key → entry:
+
+    {"d": 4, "p": 2, "lookahead": 2, "arrangement": "grouped",
+     "seconds": 1.2e-4, "predicted_bw": 8.1e11, "source": "autotune"}
+
+This module deliberately imports no kernel code so ``repro.kernels.*``
+wrappers can consult it without an import cycle.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+
+from repro.core.striding import StridingConfig
+
+__all__ = ["TuneCache", "default_cache", "cache_key", "cached_config",
+           "reset_default_cache"]
+
+_ENV = "REPRO_TUNE_CACHE"
+
+
+def default_path() -> str:
+    env = os.environ.get(_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "tune_cache.json")
+
+
+def cache_key(kernel: str, shape, dtype, backend: Optional[str] = None,
+              mode: Optional[str] = None) -> str:
+    """Stable string key for one (kernel, problem, machine) point."""
+    backend = backend or jax.default_backend()
+    shape_s = "x".join(str(int(s)) for s in shape)
+    dtype_s = str(jax.numpy.dtype(dtype).name)
+    key = f"{kernel}|{shape_s}|{dtype_s}|{backend}"
+    if mode:
+        key += f"|{mode}"
+    return key
+
+
+class TuneCache:
+    """JSON-backed measured-config store (thread-safe, lazily loaded)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_path()
+        self._lock = threading.Lock()
+        self._data: Optional[dict[str, dict[str, Any]]] = None
+        self._mtime: float = -1.0
+
+    # ------------------------------------------------------------ load/save
+    def _load(self) -> dict[str, dict[str, Any]]:
+        try:
+            mtime = os.path.getmtime(self.path)
+        except OSError:
+            self._data, self._mtime = {}, -1.0
+            return self._data
+        if self._data is None or mtime != self._mtime:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                self._data = {}
+            self._mtime = mtime
+        return self._data
+
+    def _save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # atomic replace so concurrent readers never see a torn file
+        fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(self._data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+        try:
+            self._mtime = os.path.getmtime(self.path)
+        except OSError:
+            self._mtime = -1.0
+
+    # ------------------------------------------------------------- access
+    def lookup(self, key: str) -> Optional[dict[str, Any]]:
+        with self._lock:
+            return self._load().get(key)
+
+    def store(self, key: str, entry: dict[str, Any]) -> None:
+        with self._lock:
+            data = self._load()
+            data[key] = entry
+            self._save()
+
+    def entries(self) -> dict[str, dict[str, Any]]:
+        with self._lock:
+            return dict(self._load())
+
+    def config_for(self, kernel: str, shape, dtype,
+                   mode: Optional[str] = None) -> Optional[StridingConfig]:
+        """Tuned StridingConfig for a problem, or None on a cache miss.
+
+        Falls back from the mode-specific entry to the mode-agnostic one
+        (a config tuned in ``pallas`` mode also serves ``interpret``).
+        """
+        for m in (mode, None):
+            entry = self.lookup(cache_key(kernel, shape, dtype, mode=m))
+            if entry is not None:
+                return StridingConfig(
+                    stride_unroll=int(entry["d"]),
+                    portion_unroll=int(entry["p"]),
+                    lookahead=int(entry.get("lookahead", 2)),
+                    arrangement=entry.get("arrangement", "grouped"))
+        return None
+
+
+_default: Optional[TuneCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> TuneCache:
+    """Process-wide cache bound to the current $REPRO_TUNE_CACHE path."""
+    global _default
+    with _default_lock:
+        path = default_path()
+        if _default is None or _default.path != path:
+            _default = TuneCache(path)
+        return _default
+
+
+def reset_default_cache() -> None:
+    """Drop the memoized default cache (tests repoint $REPRO_TUNE_CACHE)."""
+    global _default
+    with _default_lock:
+        _default = None
+
+
+def cached_config(kernel: str, shape, dtype,
+                  mode: Optional[str] = None) -> Optional[StridingConfig]:
+    """Measured-best config from the default cache, or None."""
+    return default_cache().config_for(kernel, shape, dtype, mode=mode)

@@ -1,0 +1,54 @@
+"""Checkpoint payload codec: zstd when available, raw .npy fallback."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as M
+
+
+def _tree():
+    return {"w": np.arange(12, dtype=np.int32).reshape(3, 4),
+            "opt": {"m": np.ones((2, 5), np.float32) * 0.5}}
+
+
+def _assert_roundtrip(cm, tree):
+    cm.save(7, tree)
+    step, restored = cm.restore()
+    assert step == 7
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    np.testing.assert_array_equal(restored["opt"]["m"], tree["opt"]["m"])
+
+
+def test_raw_fallback_roundtrip(tmp_path, monkeypatch):
+    """Without the zstandard module checkpoints are plain .npy files."""
+    monkeypatch.setattr(M, "zstandard", None)
+    cm = M.CheckpointManager(str(tmp_path), async_save=False)
+    _assert_roundtrip(cm, _tree())
+    files = glob.glob(str(tmp_path / "step_*" / "arrays" / "*"))
+    assert files and all(f.endswith(".npy") for f in files)
+    with open(glob.glob(str(tmp_path / "step_*" / "MANIFEST.json"))[0]) as f:
+        assert json.load(f)["codec"] == "raw"
+
+
+def test_zstd_roundtrip(tmp_path):
+    pytest.importorskip("zstandard")
+    cm = M.CheckpointManager(str(tmp_path), async_save=False)
+    _assert_roundtrip(cm, _tree())
+    files = glob.glob(str(tmp_path / "step_*" / "arrays" / "*"))
+    assert files and all(f.endswith(".npy.zst") for f in files)
+
+
+def test_raw_checkpoint_restores_with_zstd_available(tmp_path, monkeypatch):
+    """Codec dispatch is per-file: a raw checkpoint restores regardless of
+    whether zstandard is importable at restore time."""
+    monkeypatch.setattr(M, "zstandard", None)
+    cm = M.CheckpointManager(str(tmp_path), async_save=False)
+    cm.save(3, _tree())
+    monkeypatch.undo()
+    cm2 = M.CheckpointManager(str(tmp_path), async_save=False)
+    step, restored = cm2.restore()
+    assert step == 3
+    np.testing.assert_array_equal(restored["w"], _tree()["w"])

@@ -1,0 +1,84 @@
+"""Generated conformance matrix: every registered kernel × (D, P) points.
+
+The matrix is derived from ``repro.registry`` — each registered variant
+runs at ≥4 StridingConfig points (including SINGLE_STRIDED and an
+aliased-power-of-two-spacing point, paper §4.5) and is checked against
+its pure-jnp oracle.  Adding a kernel to the registry automatically adds
+its rows here.
+
+``REPRO_KERNEL_MODE`` selects the execution leg:
+  interpret (default here) — pallas_call(interpret=True) vs oracle: the
+      real kernel body is validated on CPU;
+  ref — the XLA reference path vs oracle: fast wiring check (config
+      resolution, padding, registry adapters) for the quick CI leg.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import registry
+
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "interpret")
+if _MODE not in ("ref", "interpret"):
+    _MODE = "interpret"
+
+_POINTS = registry.conformance_points()
+
+
+@pytest.mark.parametrize("point,kernel,sizes,config", _POINTS,
+                         ids=[p[0] for p in _POINTS])
+def test_conformance(point, kernel, sizes, config):
+    spec = registry.get(kernel)
+    inputs = spec.make_inputs(sizes, jnp.float32)
+    got = spec.run(inputs, config, _MODE)
+    want = spec.ref(inputs, config)
+    got_l = jax.tree.leaves(got)
+    want_l = jax.tree.leaves(want)
+    assert len(got_l) == len(want_l), (point, len(got_l), len(want_l))
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            rtol=spec.rtol, atol=spec.atol, err_msg=point)
+
+
+def test_matrix_covers_every_family():
+    assert set(registry.families()) == set(registry.FAMILIES)
+
+
+def test_matrix_has_required_points_per_kernel():
+    """≥4 configs each, incl. the single-strided baseline and an aliased
+    power-of-two-spacing point."""
+    by_kernel: dict[str, list] = {}
+    for point, kernel, _sizes, cfg in _POINTS:
+        by_kernel.setdefault(kernel, []).append((point, cfg))
+    assert set(by_kernel) == set(registry.names())
+    for kernel, pts in by_kernel.items():
+        assert len(pts) >= 4, kernel
+        assert any(cfg.is_single_strided for _, cfg in pts), kernel
+        assert any(p.endswith("-aliased") for p, _ in pts), kernel
+
+
+def test_aliased_points_actually_alias():
+    """The 'aliased' sizes must put d=4 streams at a colliding power-of-
+    two byte spacing for at least the 2-D row-major kernels."""
+    from repro.core import layout
+    checked = 0
+    for spec in registry.all_specs():
+        shape = (spec.cache_shape(dict(spec.aliased_sizes))
+                 if spec.cache_shape else None)
+        if shape is None or len(shape) != 2:
+            continue
+        rows, cols = shape
+        if spec.name in ("conv3x3", "jacobi2d"):
+            rows -= 2          # streams walk the interior rows
+        if spec.name == "gemver_sum":
+            continue           # 1-D kernel: blocking is internal
+        if spec.name == "adamw_update":
+            continue           # flattened+re-blocked internally
+        spacing = (rows // 4) * cols * 4
+        assert layout.collides(spacing), (spec.name, spacing)
+        checked += 1
+    assert checked >= 8

@@ -1,5 +1,5 @@
-"""Interpret-mode validation of the framework kernels (decode_attn,
-rmsnorm, adamw) against their oracles."""
+"""Framework-kernel behaviours beyond the generated conformance matrix:
+GQA head ratios, bf16, kv_len masking, odd parameter shapes."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,15 +20,14 @@ def _rand(shape, key=0, dtype=jnp.float32):
     return jax.random.normal(K(key), shape, jnp.float32).astype(dtype)
 
 
-@pytest.mark.parametrize("d", [1, 2, 4])
 @pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (4, 1)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_decode_attn(d, hq, hkv, dtype):
+def test_decode_attn_gqa_ratios_and_bf16(hq, hkv, dtype):
     b, s, dh = 2, 512, 64
     q = _rand((b, hq, dh), 0, dtype)
     kc = _rand((b, s, hkv, dh), 1, dtype)
     vc = _rand((b, s, hkv, dh), 2, dtype)
-    got = da_ops.decode_attn(q, kc, vc, config=StridingConfig(d, 1),
+    got = da_ops.decode_attn(q, kc, vc, config=StridingConfig(4, 1),
                              mode="interpret")
     want = da_ref.decode_attn_ref(q, kc, vc)
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
@@ -49,9 +48,9 @@ def test_decode_attn_masked(kv_len):
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
-@pytest.mark.parametrize("d", [1, 2, 4])
-@pytest.mark.parametrize("shape", [(64, 256), (30, 512), (2, 3, 128)])
-def test_rmsnorm(d, shape):
+@pytest.mark.parametrize("d", [1, 4])
+@pytest.mark.parametrize("shape", [(30, 512), (2, 3, 128)])
+def test_rmsnorm_odd_and_batched_shapes(d, shape):
     x = _rand(shape)
     w = _rand((shape[-1],), 1)
     got = rms_ops.rmsnorm(x, w, config=StridingConfig(d, 1),
@@ -60,9 +59,9 @@ def test_rmsnorm(d, shape):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("d", [1, 2, 4])
-@pytest.mark.parametrize("shape", [(256, 128), (1000,), (3, 7, 11)])
-def test_adamw(d, shape):
+@pytest.mark.parametrize("d", [1, 4])
+@pytest.mark.parametrize("shape", [(1000,), (3, 7, 11)])
+def test_adamw_odd_shapes(d, shape):
     p = _rand(shape, 0)
     g = _rand(shape, 1)
     m = _rand(shape, 2)

@@ -1,4 +1,5 @@
-"""Interpret-mode validation of the remaining paper kernels."""
+"""Paper-kernel behaviours beyond the generated conformance matrix:
+non-divisible / padded shapes (§5.1.2 leftover handling)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,12 +24,11 @@ def _rand(shape, key=0, dtype=jnp.float32):
     return jax.random.normal(K(key), shape, jnp.float32).astype(dtype)
 
 
-@pytest.mark.parametrize("d,p", [(1, 1), (2, 1), (4, 2)])
-@pytest.mark.parametrize("shape", [(64, 256), (48, 200)])
-def test_bicg(d, p, shape):
-    a = _rand(shape)
-    r = _rand((shape[0],), 1)
-    pvec = _rand((shape[1],), 2)
+@pytest.mark.parametrize("d,p", [(2, 1), (4, 2)])
+def test_bicg_non_divisible(d, p):
+    a = _rand((48, 200))
+    r = _rand((48,), 1)
+    pvec = _rand((200,), 2)
     q, s = bicg_ops.bicg(a, r, pvec, config=StridingConfig(d, p),
                          mode="interpret")
     q_ref, s_ref = bicg_ref.bicg_ref(a, r, pvec)
@@ -36,48 +36,18 @@ def test_bicg(d, p, shape):
     np.testing.assert_allclose(s, s_ref, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("d", [1, 2, 4])
-def test_gemver_outer(d):
-    m, n = 48, 256
-    a = _rand((m, n))
-    u1, u2 = _rand((m,), 1), _rand((m,), 2)
-    v1, v2 = _rand((n,), 3), _rand((n,), 4)
-    got = gemver_ops.gemver_outer(a, u1, v1, u2, v2,
-                                  config=StridingConfig(d, 1),
-                                  mode="interpret")
-    want = gemver_ref.outer_ref(a, u1, v1, u2, v2)
-    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
-
-
-@pytest.mark.parametrize("d", [1, 2, 4])
+@pytest.mark.parametrize("d", [1, 4])
 @pytest.mark.parametrize("n", [1024, 1000])
-def test_gemver_sum(d, n):
+def test_gemver_sum_non_divisible(d, n):
     x, z = _rand((n,), 1), _rand((n,), 2)
     got = gemver_ops.gemver_sum(x, z, config=StridingConfig(d, 1),
                                 mode="interpret")
     np.testing.assert_allclose(got, gemver_ref.sum_ref(x, z), rtol=1e-6)
 
 
-def test_gemver_full():
-    m, n = 32, 128
-    a = _rand((m, n))
-    u1, u2 = _rand((m,), 1), _rand((m,), 2)
-    v1, v2 = _rand((n,), 3), _rand((n,), 4)
-    y, z = _rand((m,), 5), _rand((n,), 6)
-    alpha, beta = 1.5, 1.2
-    a_hat, x, w = gemver_ops.gemver(a, u1, v1, u2, v2, y, z, alpha, beta,
-                                    config=StridingConfig(2, 1),
-                                    mode="interpret")
-    a_hat_r, x_r, w_r = gemver_ref.gemver_ref(a, u1, v1, u2, v2, y, z,
-                                              alpha, beta)
-    np.testing.assert_allclose(a_hat, a_hat_r, rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(x, x_r, rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(w, w_r, rtol=1e-3, atol=1e-3)
-
-
-@pytest.mark.parametrize("d", [1, 2, 4])
-@pytest.mark.parametrize("shape", [(34, 130), (66, 258)])
-def test_conv3x3(d, shape):
+@pytest.mark.parametrize("d", [2, 4])
+@pytest.mark.parametrize("shape", [(66, 258), (50, 202)])
+def test_conv3x3_larger_odd_shapes(d, shape):
     x = _rand(shape)
     w = _rand((3, 3), 1)
     got = conv_ops.conv3x3(x, w, config=StridingConfig(d, 1),
@@ -86,19 +56,17 @@ def test_conv3x3(d, shape):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("d", [1, 2, 4])
-@pytest.mark.parametrize("shape", [(34, 130), (50, 202)])
-def test_jacobi2d(d, shape):
-    x = _rand(shape)
+@pytest.mark.parametrize("d", [2, 4])
+def test_jacobi2d_odd_shape(d):
+    x = _rand((50, 202))
     got = jac_ops.jacobi2d(x, config=StridingConfig(d, 1), mode="interpret")
     want = jac_ref.jacobi2d_ref(x)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("d", [1, 2, 4])
-@pytest.mark.parametrize("dims", [(4, 8, 32), (3, 10, 64)])
-def test_doitgen(d, dims):
-    r, q, s = dims
+@pytest.mark.parametrize("d", [2, 4])
+def test_doitgen_non_divisible(d):
+    r, q, s = 3, 10, 64
     a = _rand((r, q, s))
     c4 = _rand((s, s), 1)
     got = doit_ops.doitgen(a, c4, config=StridingConfig(d, 1),

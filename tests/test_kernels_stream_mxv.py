@@ -1,4 +1,6 @@
-"""Interpret-mode validation of stream + mxv kernels against jnp oracles."""
+"""Stream/mxv behaviours beyond the generated conformance matrix
+(tests/test_conformance_matrix.py): arrangement equivalence, the manual
+lookahead pipeline, bfloat16, and non-divisible shapes."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,39 +19,12 @@ def _rand(shape, dtype=jnp.float32, key=KEY):
     return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
 
 
-@pytest.mark.parametrize("d,p", [(1, 1), (2, 2), (4, 1), (8, 2)])
-@pytest.mark.parametrize("shape", [(64, 256), (32, 384)])
-def test_stream_read(d, p, shape):
-    x = _rand(shape)
-    cfg = StridingConfig(d, p)
-    got = stream_ops.stream_read(x, config=cfg, mode="interpret")
-    want = stream_ref.read_ref(x, d)
-    np.testing.assert_allclose(got, want, rtol=1e-5)
-
-
-@pytest.mark.parametrize("d", [1, 2, 4])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_stream_copy(d, dtype):
-    x = _rand((32, 256), dtype)
-    got = stream_ops.stream_copy(x, config=StridingConfig(d, 1),
-                                 mode="interpret")
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
-
-
-@pytest.mark.parametrize("d", [1, 2, 4])
-def test_stream_init(d):
-    got = stream_ops.stream_init((32, 256), 3.5, jnp.float32,
-                                 config=StridingConfig(d, 1),
-                                 mode="interpret")
-    np.testing.assert_array_equal(np.asarray(got), np.full((32, 256), 3.5,
-                                                           np.float32))
-
-
 @pytest.mark.parametrize("d", [2, 4])
 def test_stream_read_interleaved_matches_grouped(d):
     """Paper §4.4: arrangement changes instruction order, not results."""
     x = _rand((32, 512))
-    a = stream_ops.stream_read(x, config=StridingConfig(d, 2), mode="interpret")
+    a = stream_ops.stream_read(x, config=StridingConfig(d, 2),
+                               mode="interpret")
     b = stream_ops.stream_read(
         x, config=StridingConfig(d, 2, arrangement="interleaved"),
         mode="interpret")
@@ -58,17 +33,25 @@ def test_stream_read_interleaved_matches_grouped(d):
 
 
 @pytest.mark.parametrize("d,la", [(1, 1), (2, 1), (2, 2), (4, 3)])
-def test_stream_copy_manual(d, la):
+def test_stream_copy_manual_lookahead(d, la):
     x = _rand((32, 256))
     got = stream_ops.stream_copy_manual(
         x, config=StridingConfig(d, 1, lookahead=la), mode="interpret")
     np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
 
 
-@pytest.mark.parametrize("d,p", [(1, 1), (2, 1), (4, 2)])
-@pytest.mark.parametrize("shape", [(64, 256), (40, 200), (16, 128)])
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_stream_copy_bf16(d):
+    x = _rand((32, 256), jnp.bfloat16)
+    got = stream_ops.stream_copy(x, config=StridingConfig(d, 1),
+                                 mode="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+@pytest.mark.parametrize("d,p", [(2, 1), (4, 2)])
+@pytest.mark.parametrize("shape", [(40, 200), (16, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_mxv(d, p, shape, dtype):
+def test_mxv_odd_shapes_and_bf16(d, p, shape, dtype):
     a = _rand(shape, dtype)
     x = _rand((shape[1],), dtype, jax.random.PRNGKey(1))
     got = mxv_ops.mxv(a, x, config=StridingConfig(d, p), mode="interpret")
@@ -79,11 +62,10 @@ def test_mxv(d, p, shape, dtype):
                                atol=tol)
 
 
-@pytest.mark.parametrize("d,p", [(1, 1), (2, 1), (4, 2)])
-@pytest.mark.parametrize("shape", [(64, 256), (40, 200)])
-def test_mxv_t(d, p, shape):
-    a = _rand(shape)
-    x = _rand((shape[0],), key=jax.random.PRNGKey(1))
+@pytest.mark.parametrize("d,p", [(2, 1), (4, 2)])
+def test_mxv_t_odd_shapes(d, p):
+    a = _rand((40, 200))
+    x = _rand((40,), key=jax.random.PRNGKey(1))
     got = mxv_ops.mxv_t(a, x, config=StridingConfig(d, p), mode="interpret")
     want = mxv_ref.mxv_t_ref(a, x)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,147 @@
+"""Registry invariants + empirical autotuner cache behaviour."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro import registry
+from repro.core.striding import StridingConfig
+from repro.registry import autotune, tunecache
+
+
+# ------------------------------------------------------------- registry
+
+def test_all_ten_families_resolve_through_registry():
+    assert registry.families() == sorted(registry.FAMILIES)
+    assert len(registry.FAMILIES) == 10
+
+
+def test_export_table_is_registry_derived():
+    assert set(K.__all__) == set(registry.names())
+    for name in registry.names():
+        assert getattr(K, name) is registry.get(name).fn
+
+
+def test_specs_are_complete():
+    for spec in registry.all_specs():
+        assert callable(spec.fn) and callable(spec.run)
+        assert callable(spec.ref) and callable(spec.make_inputs)
+        assert spec.default_sizes and spec.aliased_sizes
+        inputs = spec.make_inputs(dict(spec.default_sizes), jnp.float32)
+        assert isinstance(inputs, tuple) and inputs
+
+
+def test_unknown_kernel_raises():
+    with pytest.raises(KeyError, match="unknown kernel"):
+        registry.get("definitely_not_a_kernel")
+
+
+def test_duplicate_name_across_families_rejected():
+    spec = registry.get("mxv")
+    import dataclasses
+    clash = dataclasses.replace(spec, family="stream")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(clash)
+
+
+# ------------------------------------------------------------- autotune
+
+def _tiny_cache(tmp_path):
+    return tunecache.TuneCache(str(tmp_path / "tune.json"))
+
+
+def test_tune_writes_then_hits_cache(tmp_path):
+    cache = _tiny_cache(tmp_path)
+    first = autotune.tune("stream_copy", mode="ref", cache=cache,
+                          iters=1, warmup=0, max_candidates=3)
+    assert not first.from_cache
+    assert first.trials            # measured sweep actually ran
+    assert (tmp_path / "tune.json").exists()
+    second = autotune.tune("stream_copy", mode="ref", cache=cache,
+                           iters=1, warmup=0, max_candidates=3)
+    assert second.from_cache
+    assert second.config == first.config
+
+    entry = json.loads((tmp_path / "tune.json").read_text())
+    (key, val), = entry.items()
+    assert key.startswith("stream_copy|")
+    assert val["source"] == "autotune"
+    assert val["d"] == first.config.stride_unroll
+
+
+def test_tune_force_remeasures(tmp_path):
+    cache = _tiny_cache(tmp_path)
+    autotune.tune("mxv", mode="ref", cache=cache, iters=1, warmup=0,
+                  max_candidates=2)
+    again = autotune.tune("mxv", mode="ref", cache=cache, iters=1,
+                          warmup=0, max_candidates=2, force=True)
+    assert not again.from_cache
+
+
+def test_candidate_configs_come_from_planner():
+    spec = registry.get("mxv")
+    cands = autotune.candidate_configs(spec, dict(spec.default_sizes),
+                                       jnp.float32, max_candidates=5)
+    assert 1 <= len(cands) <= 5
+    for cfg, _bw in cands:
+        assert spec.default_sizes["m"] % cfg.stride_unroll == 0
+
+
+def test_tune_all_sweeps_named_kernels(tmp_path):
+    cache = _tiny_cache(tmp_path)
+    res = autotune.tune_all(["stream_read", "rmsnorm"], mode="ref",
+                            cache=cache, iters=1, warmup=0,
+                            max_candidates=2)
+    assert set(res) == {"stream_read", "rmsnorm"}
+    data = json.loads((tmp_path / "tune.json").read_text())
+    assert len(data) == 2
+
+
+# ----------------------------------------------- ops pick up tuned configs
+
+def test_ops_resolve_via_tune_cache(tmp_path, monkeypatch):
+    """A tuned entry changes the config an op resolves when config=None.
+
+    stream_read's output shape is [D], so the tuned D is observable."""
+    from repro.kernels.common import example_input
+
+    path = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+    tunecache.reset_default_cache()
+    try:
+        x = example_input((32, 256))
+        baseline = K.stream_read(x, mode="ref")
+        tuned_d = 2 if baseline.shape[0] != 2 else 8
+        key = tunecache.cache_key("stream_read", x.shape, x.dtype)
+        tunecache.default_cache().store(key, {"d": tuned_d, "p": 1})
+        out = K.stream_read(x, mode="ref")
+        assert out.shape == (tuned_d,)
+        np.testing.assert_allclose(np.asarray(out).sum(),
+                                   np.asarray(baseline).sum(), rtol=1e-4)
+    finally:
+        tunecache.reset_default_cache()
+
+
+def test_explicit_config_beats_tune_cache(tmp_path, monkeypatch):
+    from repro.kernels.common import example_input
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    tunecache.reset_default_cache()
+    try:
+        x = example_input((32, 256))
+        key = tunecache.cache_key("stream_read", x.shape, x.dtype)
+        tunecache.default_cache().store(key, {"d": 8, "p": 1})
+        out = K.stream_read(x, config=StridingConfig(4, 1), mode="ref")
+        assert out.shape == (4,)
+    finally:
+        tunecache.reset_default_cache()
+
+
+def test_cache_key_distinguishes_problem_and_mode():
+    k1 = tunecache.cache_key("mxv", (64, 64), jnp.float32)
+    k2 = tunecache.cache_key("mxv", (64, 128), jnp.float32)
+    k3 = tunecache.cache_key("mxv", (64, 64), jnp.bfloat16)
+    k4 = tunecache.cache_key("mxv", (64, 64), jnp.float32, mode="interpret")
+    assert len({k1, k2, k3, k4}) == 4
