@@ -2,19 +2,55 @@
 from __future__ import annotations
 
 import os
+import shutil
 import subprocess
+import sys
 import time
 
 _BIN = "/tmp/repro_multistride"
 _SRC = os.path.join(os.path.dirname(__file__), "multistride.c")
 
 
+class CBenchUnavailable(RuntimeError):
+    """The host-CPU C microbench cannot be built on this machine."""
+
+
+def cbench_available() -> bool:
+    """True when the C microbench can run: compiler + source present."""
+    return shutil.which("cc") is not None and os.path.exists(_SRC)
+
+
+def _cbench_missing_reason() -> str:
+    reasons = []
+    if shutil.which("cc") is None:
+        reasons.append("no `cc` compiler on PATH")
+    if not os.path.exists(_SRC):
+        reasons.append(f"source {_SRC} missing")
+    return " and ".join(reasons) or "unknown"
+
+
+def skip_cbench(table: str) -> None:
+    """Print the standard non-fatal skip notice for a C-bench table."""
+    print(f"# {table}: skipped — C microbench unavailable "
+          f"({_cbench_missing_reason()}); modeled columns only exist in "
+          "other tables", file=sys.stderr)
+
+
 def build_cbench() -> str:
+    if not cbench_available():
+        raise CBenchUnavailable(
+            "cannot build the host C microbench "
+            f"({_cbench_missing_reason()}); install a C toolchain / "
+            "restore the source, or run the modeled tables only")
     if (not os.path.exists(_BIN)
             or os.path.getmtime(_BIN) < os.path.getmtime(_SRC)):
-        subprocess.run(
-            ["cc", "-O3", "-march=native", "-ffast-math", "-funroll-loops",
-             _SRC, "-o", _BIN], check=True)
+        try:
+            subprocess.run(
+                ["cc", "-O3", "-march=native", "-ffast-math",
+                 "-funroll-loops", _SRC, "-o", _BIN], check=True)
+        except (OSError, subprocess.CalledProcessError) as e:
+            raise CBenchUnavailable(
+                f"C microbench build failed: {e}") from e
     return _BIN
 
 

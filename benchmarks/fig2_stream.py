@@ -8,6 +8,7 @@ prefetch_off analogue is lookahead=1.
 """
 from __future__ import annotations
 
+from benchmarks import common
 from benchmarks.common import emit, run_cbench
 from repro.core import COFFEE_LAKE, TPU_V5E, StridingConfig
 
@@ -17,6 +18,9 @@ MIB = 320
 
 
 def run(quick: bool = False) -> list[dict]:
+    if not common.cbench_available():
+        common.skip_cbench("fig2_stream")
+        return []
     rows = []
     mib = 192 if quick else MIB
     for mode, wf in (("read", 0.0), ("init", 1.0), ("copy", 0.5)):

@@ -9,6 +9,7 @@ the model column shows the bare-metal calibration.
 """
 from __future__ import annotations
 
+from benchmarks import common
 from benchmarks.common import emit, run_cbench
 from repro.core import COFFEE_LAKE
 from repro.core.layout import collides
@@ -18,6 +19,9 @@ DS = (1, 2, 4, 8, 16, 32)
 
 
 def run(quick: bool = False) -> list[dict]:
+    if not common.cbench_available():
+        common.skip_cbench("fig5_collisions")
+        return []
     rows = []
     for label, mib in (("pow2", 256), ("padded", 192)):
         for d in DS:

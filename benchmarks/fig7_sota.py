@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, run_cbench, time_jax
 from repro import registry
 
@@ -52,6 +53,9 @@ def _np_time(fn, iters=5):
 
 
 def run(quick: bool = False) -> list[dict]:
+    if not common.cbench_available():
+        common.skip_cbench("fig7_sota")
+        return []
     rows = []
     mib = 96 if quick else 192
     cols = 4096

@@ -1,5 +1,7 @@
 """Benchmark entry point — one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` also
+persists every table's rows as structured JSON so per-PR perf
+trajectories (``BENCH_*.json``) can be diffed.
 
   fig2_stream      paper Fig 2 (stream bw vs stride count)
   fig34_stalls     paper Fig 3/4 (stalls + hit ratios, modeled)
@@ -11,7 +13,29 @@ Prints ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def _json_payload(tables: dict[str, list[dict]], quick: bool) -> dict:
+    """Structured benchmark artifact: per-table rows annotated with the
+    machine context (backend, kernel mode) and microseconds per call."""
+    import jax
+
+    from repro.kernels.common import kernel_mode
+    meta = {
+        "backend": jax.default_backend(),
+        "mode": kernel_mode(),
+        "quick": quick,
+        "jax_version": jax.__version__,
+    }
+    out = {"meta": meta, "tables": {}}
+    for name, rows in tables.items():
+        out["tables"][name] = [
+            dict(r, us_per_call=round(float(r.get("seconds", 0.0)) * 1e6, 3))
+            for r in rows
+        ]
+    return out
 
 
 def main(argv=None) -> None:
@@ -19,6 +43,10 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated table names")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every table's rows as structured "
+                         "JSON (kernel, config, us_per_call, GiB/s, "
+                         "backend, mode)")
     args = ap.parse_args(argv)
 
     from benchmarks import (decode_kernel_sweep, fig2_stream,
@@ -34,11 +62,17 @@ def main(argv=None) -> None:
         "roofline": roofline_table.run,
     }
     only = set(args.only.split(",")) if args.only else None
+    results: dict[str, list[dict]] = {}
     for name, fn in tables.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        fn(quick=args.quick)
+        results[name] = fn(quick=args.quick) or []
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_json_payload(results, args.quick), f, indent=1,
+                      default=str)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

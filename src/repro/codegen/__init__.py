@@ -1,0 +1,39 @@
+"""``repro.codegen`` — loop-nest IR + multi-striding transform pipeline
+emitting Pallas kernels.
+
+The compiler-pipeline rendering of the paper's method (§7: multi-striding
+as a loop-unroll/interchange-family transform):
+
+  spec (``loopir.TraversalSpec``)          what to compute
+    → schedule (``transforms``)            unroll × interchange × stride
+                                           split into D streams of P
+                                           portions (StridingConfig)
+    → emit (``emit``)                      Pallas kernel (grouped or
+                                           interleaved arrangement,
+                                           lookahead ring), or the
+                                           pure-jnp ref interpreter
+
+``make_kernel_op`` packages the pipeline as a registry-compatible op;
+see ``repro.kernels.gen`` for the ported kernel families and
+``examples/codegen_kernel.py`` for an end-to-end walkthrough.
+"""
+from repro.codegen.emit import emit_scheduled, emit_spec, make_kernel_op
+from repro.codegen.loopir import (Access, Axis, NestInfo, TraversalSpec,
+                                  classify, evaluate, tap, to_loop_nest,
+                                  traffic_of)
+from repro.codegen.transforms import (BlockPlan, LoopAxis, Schedule,
+                                      default_schedule, interchange,
+                                      iteration_domain, multi_stride,
+                                      plan_blocks, preserves_domain,
+                                      schedule, stride_split, unroll,
+                                      vector_block)
+
+__all__ = [
+    "Axis", "Access", "TraversalSpec", "NestInfo", "tap", "to_loop_nest",
+    "classify", "traffic_of", "evaluate",
+    "LoopAxis", "Schedule", "BlockPlan", "schedule", "interchange",
+    "unroll", "stride_split", "vector_block", "multi_stride",
+    "plan_blocks", "default_schedule", "iteration_domain",
+    "preserves_domain",
+    "emit_spec", "emit_scheduled", "make_kernel_op",
+]

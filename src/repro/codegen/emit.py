@@ -1,0 +1,459 @@
+"""Emitter: lower a scheduled loop nest to a Pallas kernel.
+
+The scheduled nest's STREAM part becomes D operand refs per traversed
+array — D independent HBM→VMEM DMA pipelines, the TPU rendering of the
+paper's D concurrent strides (same machinery as ``core.pipeline``).  The
+GRID parts become the ``pallas_call`` grid, UNROLL the block rows, and
+VECTOR the lane dimension.  Three lowering strategies:
+
+  * ``_emit_streaming`` — elementwise/stencil nests: D (or D × taps, for
+    row stencils) input operands, a ``[D, bm, w]``-blocked output, body
+    applied per stream in grouped or interleaved arrangement (§4.1/§4.4).
+  * ``_emit_reduction`` — vector-axis reductions: f32 VMEM accumulator
+    per stream, written on the last reduction step (the mxv pattern).
+  * ``_emit_manual`` — explicit ``lookahead``-deep ring of
+    ``make_async_copy`` buffers per stream (the ``copy_manual`` pattern);
+    selected when ``config.lookahead != 2`` so the prefetch-off
+    (lookahead=1) and deeper-ring ablations work on generated kernels.
+
+``evaluate`` (in ``loopir``) is the ref-mode fallback; ``make_kernel_op``
+wraps the whole pipeline as a public op with the same mode dispatch,
+tune-cache/planner config resolution, and padding conventions as the
+hand-written ``ops.py`` wrappers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.codegen import loopir, transforms
+from repro.core.striding import StridingConfig
+
+__all__ = ["emit_spec", "emit_scheduled", "make_kernel_op"]
+
+
+# ------------------------------------------------------------ operands
+
+@dataclasses.dataclass
+class _Operand:
+    """One read access lowered to pallas operands (possibly one per
+    stream × stencil tap)."""
+
+    access: loopir.Access
+    arrays: list           # operand arrays, in_specs order
+    specs: list            # matching pl.BlockSpec list
+    per_stream: bool       # True: d (× taps) operands; False: shared
+    taps: int = 1          # row-tap operands per stream
+
+    def load(self, refs: Sequence, base: int, k: int, lanes=None):
+        """Build this access's env block for stream ``k`` (optionally a
+        lane sub-slice, for the interleaved arrangement)."""
+        if not self.per_stream:
+            blk = refs[base][0, :]
+            return blk if lanes is None else blk[lanes]
+        if self.taps == 1:
+            blk = refs[base + k][...]
+            return blk if lanes is None else blk[:, lanes]
+        rows = [refs[base + k * self.taps + t][...] for t in range(self.taps)]
+        return jnp.concatenate(rows, axis=0)   # halo-widened block
+
+
+def _lower_reads(sched: transforms.Schedule, bp: transforms.BlockPlan,
+                 arrays: Sequence) -> list[_Operand]:
+    spec, info = sched.spec, bp.info
+    stream = sched.find(info.stride_axis, transforms.STREAM)
+    d, seg_rows = stream.extent, stream.stride
+    grid_loops = sched.grid_loops()
+    row_pos = next(i for i, l in enumerate(grid_loops)
+                   if l.axis == info.stride_axis)
+    col_pos = next(i for i, l in enumerate(grid_loops)
+                   if l.axis == info.vector_axis)
+    segb = seg_rows // bp.bm
+    col_halo = bp.info.col_halo != (0, 0)
+
+    ops = []
+    for acc, x in zip(spec.reads, arrays):
+        if acc.index == (info.stride_axis, info.vector_axis):
+            lo, hi = acc.halo_of(info.stride_axis)
+            taps = 1 + lo + hi
+            if taps > 1 and bp.bm != 1:
+                raise NotImplementedError(
+                    f"{spec.name}: row-haloed access {acc.array!r} needs "
+                    "single-row blocks")
+            width = x.shape[1] if (col_halo or acc.halo_of(
+                info.vector_axis) != (0, 0)) else bp.bn
+            full_width = width != bp.bn or col_halo
+            specs, operands = [], []
+            for k in range(d):
+                for t in range(taps):
+                    def imap(*g, _k=k, _t=t, _taps=taps, _fw=full_width):
+                        i = g[row_pos]
+                        if _taps > 1:      # bm == 1: block idx == row idx
+                            i = i + _k * seg_rows + _t
+                        else:
+                            i = i + _k * segb
+                        j = 0 if _fw else g[col_pos]
+                        return (i, j)
+                    specs.append(pl.BlockSpec((bp.bm, width), imap))
+                    operands.append(x)
+            ops.append(_Operand(acc, operands, specs, True, taps))
+        elif acc.index == (info.vector_axis,):
+            lo, hi = acc.halo[0]
+            width = bp.cols + lo + hi if (col_halo or lo or hi) else bp.bn
+            full_width = width != bp.bn or col_halo
+
+            def imap(*g, _fw=full_width):
+                return (0, 0 if _fw else g[col_pos])
+            ops.append(_Operand(acc, [x.reshape(1, -1)],
+                                [pl.BlockSpec((1, width), imap)], False))
+        else:
+            raise NotImplementedError(
+                f"{spec.name}: access {acc.array!r}{acc.index} not "
+                "lowerable (supported: [stride, vector] and [vector]; "
+                "interchange the nest or transpose the operand)")
+    return ops
+
+
+def _scalar_specs(scalars: Sequence) -> tuple[list, list]:
+    arrays = [jnp.asarray(s).reshape(1, 1) for s in scalars]
+    specs = [pl.BlockSpec((1, 1), lambda *g: (0, 0)) for _ in scalars]
+    return arrays, specs
+
+
+def _env_builder(spec: loopir.TraversalSpec, ops: list[_Operand],
+                 n_reads_ops: int):
+    """Returns env(refs, k, lanes) mapping array/scalar names → blocks."""
+    bases, base = [], 0
+    for op in ops:
+        bases.append(base)
+        base += len(op.arrays)
+
+    def env(refs, k, lanes=None):
+        e = {}
+        for op, b in zip(ops, bases):
+            e[op.access.array] = op.load(refs, b, k, lanes)
+        for s, name in enumerate(spec.scalars):
+            e[name] = refs[n_reads_ops + s][0, 0]
+        return e
+    return env
+
+
+# ------------------------------------------------------------ lowering
+
+def _grid_of(sched: transforms.Schedule, bp: transforms.BlockPlan):
+    grid_loops = sched.grid_loops()
+    row_pos = next(i for i, l in enumerate(grid_loops)
+                   if l.axis == bp.info.stride_axis)
+    col_pos = next(i for i, l in enumerate(grid_loops)
+                   if l.axis == bp.info.vector_axis)
+    return tuple(l.extent for l in grid_loops), row_pos, col_pos
+
+
+def _lane_slices(cfg: StridingConfig, bn: int) -> list:
+    """Interleaved arrangement (§4.4): round-robin streams at 128-lane
+    sub-portion granularity; grouped keeps each stream's accesses
+    consecutive (§4.1 default)."""
+    if cfg.arrangement != "interleaved" or bn <= 128:
+        return [None]
+    sub = bn // 128
+    step = bn // sub
+    return [slice(s * step, (s + 1) * step) for s in range(sub)]
+
+
+def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
+    spec = sched.spec
+    d = sched.find(bp.info.stride_axis, transforms.STREAM).extent
+    seg_rows = sched.find(bp.info.stride_axis, transforms.STREAM).stride
+    grid, row_pos, col_pos = _grid_of(sched, bp)
+    ops = _lower_reads(sched, bp, arrays)
+    scal_arrays, scal_specs = _scalar_specs(scalars)
+    in_specs = [s for op in ops for s in op.specs] + scal_specs
+    operands = [a for op in ops for a in op.arrays] + scal_arrays
+    env = _env_builder(spec, ops, sum(len(op.arrays) for op in ops))
+    col_halo = bp.info.col_halo != (0, 0)
+    w_out = bp.cols if col_halo else bp.bn
+    has_taps = any(op.taps > 1 for op in ops)
+    lanes = ([None] if (col_halo or has_taps)
+             else _lane_slices(sched.config, bp.bn))
+    out_dtype = spec.out_dtype or arrays[0].dtype
+
+    def kernel(*refs):
+        o_ref = refs[len(operands)]
+        for sl in lanes:
+            for k in range(d):
+                res = spec.body(env(refs, k, sl)).astype(o_ref.dtype)
+                if sl is None:
+                    o_ref[k, ...] = res
+                else:
+                    o_ref[k, :, sl] = res
+
+    def out_imap(*g):
+        return (0, g[row_pos], 0 if col_halo else g[col_pos])
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bp.bm, w_out), out_imap),
+        out_shape=jax.ShapeDtypeStruct(
+            (d, seg_rows, bp.cols), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(d * seg_rows, bp.cols)
+
+
+def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
+    spec = sched.spec
+    stream = sched.find(bp.info.stride_axis, transforms.STREAM)
+    d, seg_rows = stream.extent, stream.stride
+    grid, row_pos, col_pos = _grid_of(sched, bp)
+    if col_pos != len(grid) - 1:
+        raise ValueError(f"{spec.name}: the reduction axis must be the "
+                         "innermost grid loop (interchange first)")
+    ops = _lower_reads(sched, bp, arrays)
+    scal_arrays, scal_specs = _scalar_specs(scalars)
+    in_specs = [s for op in ops for s in op.specs] + scal_specs
+    operands = [a for op in ops for a in op.arrays] + scal_arrays
+    env = _env_builder(spec, ops, sum(len(op.arrays) for op in ops))
+    has_taps = any(op.taps > 1 for op in ops)
+    lanes = ([None] if has_taps
+             else _lane_slices(sched.config, bp.bn))
+    out_dtype = spec.out_dtype or arrays[0].dtype
+
+    def kernel(*refs):
+        o_ref = refs[len(operands)]
+        acc = refs[len(operands) + 1]
+        j = pl.program_id(col_pos)
+
+        @pl.when(j == 0)
+        def _():
+            acc[...] = jnp.zeros_like(acc)
+
+        for sl in lanes:
+            for k in range(d):
+                acc[k, :] += spec.body(env(refs, k, sl)).astype(jnp.float32)
+
+        @pl.when(j == pl.num_programs(col_pos) - 1)
+        def _():
+            o_ref[...] = acc[...].astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((d, bp.bm), lambda *g: (0, g[row_pos])),
+        out_shape=jax.ShapeDtypeStruct((d, seg_rows), jnp.dtype(out_dtype)),
+        scratch_shapes=[pltpu.VMEM((d, bp.bm), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(d * seg_rows)
+
+
+def _manual_eligible(spec: loopir.TraversalSpec,
+                     bp: transforms.BlockPlan) -> bool:
+    if bp.info.reduction or bp.info.row_halo != (0, 0) \
+            or bp.info.col_halo != (0, 0):
+        return False
+    return all(a.index == (bp.info.stride_axis, bp.info.vector_axis)
+               and not a.has_halo for a in (*spec.reads, *spec.writes))
+
+
+def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
+    """Explicit D-stream, ``lookahead``-deep DMA ring (the
+    ``stream.copy_manual`` pattern with the spec body fused between the
+    load ring and the store)."""
+    spec = sched.spec
+    stream = sched.find(bp.info.stride_axis, transforms.STREAM)
+    d, seg_rows = stream.extent, stream.stride
+    la = sched.config.lookahead
+    bm = bp.bm
+    cols = bp.cols                      # manual path streams full rows
+    n_steps = seg_rows // bm
+    n_in = len(arrays)
+    n_scal = len(scalars)
+    scal_arrays = [jnp.asarray(s).reshape(1, 1) for s in scalars]
+    out_dtype = spec.out_dtype or arrays[0].dtype
+
+    def kernel(*refs):
+        in_hbm = refs[:n_in]
+        scal_refs = refs[n_in:n_in + n_scal]
+        o_hbm = refs[n_in + n_scal]
+        scratch = refs[n_in + n_scal + 1:]
+        bufs = scratch[:n_in]
+        obuf = scratch[n_in]
+        insems = scratch[n_in + 1:2 * n_in + 1]
+        outsem = scratch[2 * n_in + 1]
+
+        def start_in(r, k, t, slot):
+            pltpu.make_async_copy(
+                in_hbm[r].at[pl.ds(k * seg_rows + t * bm, bm), :],
+                bufs[r].at[k, slot], insems[r].at[k, slot]).start()
+
+        def env(k, slot):
+            e = {acc.array: bufs[r][k, slot]
+                 for r, acc in enumerate(spec.reads)}
+            for s, name in enumerate(spec.scalars):
+                e[name] = scal_refs[s][0, 0]
+            return e
+
+        # prologue: prime `lookahead` transfers per stream per array —
+        # the controllable prefetch depth (lookahead=1 = prefetch off)
+        for r in range(n_in):
+            for k in range(d):
+                for t in range(min(la, n_steps)):
+                    start_in(r, k, t, t % la)
+
+        def body(t, _):
+            slot = t % la
+            for k in range(d):
+                for r in range(n_in):
+                    pltpu.make_async_copy(
+                        bufs[r].at[k, slot], bufs[r].at[k, slot],
+                        insems[r].at[k, slot]).wait()
+                obuf[k] = spec.body(env(k, slot)).astype(obuf.dtype)
+                out_cp = pltpu.make_async_copy(
+                    obuf.at[k],
+                    o_hbm.at[pl.ds(k * seg_rows + t * bm, bm), :],
+                    outsem.at[k])
+                out_cp.start()
+                out_cp.wait()
+                nxt = t + la
+
+                @pl.when(nxt < n_steps)
+                def _():
+                    for r in range(n_in):
+                        start_in(r, k, nxt, slot)
+            return ()
+
+        jax.lax.fori_loop(0, n_steps, body, ())
+
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_in
+        + [pl.BlockSpec(memory_space=pltpu.VMEM)] * n_scal,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((d * seg_rows, cols),
+                                       jnp.dtype(out_dtype)),
+        scratch_shapes=(
+            [pltpu.VMEM((d, la, bm, cols), x.dtype) for x in arrays]
+            + [pltpu.VMEM((d, bm, cols), jnp.dtype(out_dtype))]
+            + [pltpu.SemaphoreType.DMA((d, la)) for _ in arrays]
+            + [pltpu.SemaphoreType.DMA((d,))]
+        ),
+        interpret=interpret,
+    )(*arrays, *scal_arrays)
+
+
+def emit_scheduled(sched: transforms.Schedule, bp: transforms.BlockPlan,
+                   arrays: Sequence, scalars: Sequence,
+                   interpret: bool):
+    """Dispatch a scheduled nest to the right lowering.  A non-default
+    lookahead selects the manual ring when the nest supports it; nests
+    the ring cannot express (stencils, reductions) keep the Pallas
+    auto-pipeline, whose ring depth is fixed at 2."""
+    if bp.info.reduction:
+        return _emit_reduction(sched, bp, arrays, scalars, interpret)
+    if sched.config.lookahead != 2 and _manual_eligible(sched.spec, bp):
+        return _emit_manual(sched, bp, arrays, scalars, interpret)
+    return _emit_streaming(sched, bp, arrays, scalars, interpret)
+
+
+# ------------------------------------------------- pad / crop / driver
+
+def _pad_dim(x, dim: int, target: int):
+    if x.shape[dim] == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[dim] = (0, target - x.shape[dim])
+    return jnp.pad(x, pads)
+
+
+def _pad_arrays(spec: loopir.TraversalSpec, bp: transforms.BlockPlan,
+                arrays: Sequence) -> list:
+    """Zero-pad every operand to the BlockPlan's extents (§5.1.2
+    divisibility — pad+crop instead of leftover loops).  Reduction
+    bodies see zeros in the padded vector region, which contributes
+    nothing to dot-like reductions."""
+    info = bp.info
+    padded = []
+    for acc, x in zip(spec.reads, arrays):
+        for dim, (var, (lo, hi)) in enumerate(zip(acc.index, acc.halo)):
+            target = {info.stride_axis: bp.rows,
+                      info.vector_axis: bp.cols}[var] + lo + hi
+            x = _pad_dim(x, dim, target)
+        padded.append(x)
+    return padded
+
+
+def emit_spec(spec: loopir.TraversalSpec, inputs: Sequence,
+              config: StridingConfig, *, interpret: bool):
+    """The whole pipeline for one call: plan blocks → pad operands →
+    rebuild the spec at padded extents → §5.1 default schedule →
+    emit → crop to the original domain."""
+    n = len(spec.reads)
+    if len(inputs) != n + len(spec.scalars):
+        raise ValueError(f"{spec.name}: expected {n} arrays + "
+                         f"{len(spec.scalars)} scalars")
+    arrays, scalars = list(inputs[:n]), list(inputs[n:])
+    bp = transforms.plan_blocks(spec, config)
+    arrays = _pad_arrays(spec, bp, arrays)
+    padded_axes = tuple(
+        dataclasses.replace(
+            ax, extent={bp.info.stride_axis: bp.rows,
+                        bp.info.vector_axis: bp.cols}[ax.name])
+        for ax in spec.axes)
+    spec_p = dataclasses.replace(spec, axes=padded_axes)
+    sched = transforms.default_schedule(spec_p, config, blocks=bp)
+    out = emit_scheduled(sched, bp, arrays, scalars, interpret)
+    return out[tuple(slice(0, s) for s in spec.out_shape())]
+
+
+# ------------------------------------------------------------- op glue
+
+def make_kernel_op(name: str,
+                   build_spec: Callable[..., loopir.TraversalSpec],
+                   default: StridingConfig = StridingConfig(4, 1),
+                   ) -> Callable:
+    """Wrap a spec builder as a public kernel op with the house
+    conventions: ``op(*arrays, *scalars, config=None, mode=None)``,
+    mode dispatch (ref = spec interpreter / interpret / pallas), and
+    config resolution (explicit > tune-cache > planner > default) run
+    outside jit — identical plumbing to the hand-written ``ops.py``
+    wrappers, but the kernel itself is derived from the spec."""
+    from repro.kernels import common   # deferred: avoids import cycle
+
+    @functools.partial(jax.jit, static_argnames=("config", "mode"))
+    def _run(inputs: tuple, config: StridingConfig, mode: str):
+        spec = build_spec(*inputs)
+        if mode == "ref":
+            return loopir.evaluate(spec, inputs)
+        return emit_spec(spec, inputs, config,
+                         interpret=(mode == "interpret"))
+
+    def op(*inputs, config: Optional[StridingConfig] = None,
+           mode: Optional[str] = None):
+        mode = mode or common.kernel_mode()
+        spec = build_spec(*inputs)
+        info = loopir.classify(spec)
+        rows = spec.axis(info.stride_axis).extent
+        lead = inputs[0]
+        # traffic is only consulted on a tune-cache miss; skip deriving
+        # it when an explicit config makes resolution trivial
+        traffic = (None if config is not None
+                   else loopir.traffic_of(spec, lead.dtype, info=info))
+        cfg = common.resolve_config(
+            name, lead.shape, lead.dtype, config, rows, default,
+            traffic=traffic, mode=mode)
+        return _run(tuple(inputs), cfg, mode)
+
+    op.__name__ = name
+    op.__qualname__ = name
+    op.__doc__ = (f"Generated multi-strided kernel {name!r} "
+                  "(repro.codegen: spec → schedule → Pallas).")
+    return op

@@ -1,0 +1,270 @@
+"""Loop-nest IR: the input language of the codegen pipeline.
+
+A kernel is described as a :class:`TraversalSpec` — an iteration domain
+(ordered :class:`Axis` list, outermost first), per-array affine access
+maps (:class:`Access`: one axis variable per array dimension, plus an
+optional halo for stencil taps), and a body expressed as a jnp-callable
+over the loaded blocks.  The spec is *schedule-free*: the multi-striding
+transform pipeline (``repro.codegen.transforms``) decides how the nest is
+blocked, interchanged and split into D concurrent streams, and the
+emitter (``repro.codegen.emit``) lowers the scheduled nest to a Pallas
+kernel.  This is the paper's closing observation made concrete: multi-
+striding "is a natural extension of the loop unroll and loop interchange
+techniques, allowing this method to be incorporated into compiler
+pipelines" (§7) — here the access pattern is a derived artifact of the
+spec, not hand-written kernel code.
+
+Body conventions (shape-polymorphic on purpose):
+
+  * ``body(env)`` receives a dict mapping each read array name to its
+    loaded block and each scalar name to a () value, and returns the
+    output block.
+  * For an access with a halo, the env value *includes* the halo border;
+    the body extracts taps with :func:`tap` (static lane/sublane shifts).
+  * For a spec whose vector axis is a reduction, the body must itself
+    reduce over that axis (e.g. ``jnp.dot``); the emitter accumulates
+    partial blocks in f32 scratch, and the ref interpreter evaluates the
+    body once over the full extent — both give the same totals.
+
+The same body therefore runs unchanged in three places: the Pallas
+kernel (per-stream blocks), ``pallas_call(interpret=True)``, and the
+pure-jnp ref interpreter :func:`evaluate`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import Traffic
+from repro.core.transform import ArrayAccess, LoopNest, plan_transform
+
+__all__ = [
+    "Axis", "Access", "TraversalSpec", "tap", "to_loop_nest",
+    "classify", "traffic_of", "evaluate",
+]
+
+PARALLEL = "parallel"
+REDUCTION = "reduction"
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One loop of the nest: ``for name in range(extent)``."""
+
+    name: str
+    extent: int
+    kind: str = PARALLEL  # "parallel" | "reduction"
+
+    def __post_init__(self):
+        if self.extent < 1:
+            raise ValueError(f"axis {self.name!r}: extent must be >= 1")
+        if self.kind not in (PARALLEL, REDUCTION):
+            raise ValueError(f"axis {self.name!r}: unknown kind {self.kind!r}")
+
+
+def _zero_halo(ndim: int) -> tuple[tuple[int, int], ...]:
+    return tuple((0, 0) for _ in range(ndim))
+
+
+@dataclasses.dataclass(frozen=True)
+class Access:
+    """Affine access map of one array: dim ``d`` is indexed by loop
+    variable ``index[d]`` plus any constant offset within ``halo[d]`` =
+    (lo, hi).  A non-zero halo widens the loaded block so the body can
+    take stencil taps with :func:`tap`."""
+
+    array: str
+    index: tuple[str, ...]
+    halo: Optional[tuple[tuple[int, int], ...]] = None
+
+    def __post_init__(self):
+        if self.halo is None:
+            object.__setattr__(self, "halo", _zero_halo(len(self.index)))
+        if len(self.halo) != len(self.index):
+            raise ValueError(f"access {self.array!r}: halo rank mismatch")
+        for lo, hi in self.halo:
+            if lo < 0 or hi < 0:
+                raise ValueError(f"access {self.array!r}: negative halo")
+
+    @property
+    def rank(self) -> int:
+        return len(self.index)
+
+    @property
+    def has_halo(self) -> bool:
+        return any(lo or hi for lo, hi in self.halo)
+
+    def halo_of(self, var: str) -> tuple[int, int]:
+        """Combined (lo, hi) halo over every dim indexed by ``var``."""
+        lo = hi = 0
+        for v, (l, h) in zip(self.index, self.halo):
+            if v == var:
+                lo, hi = max(lo, l), max(hi, h)
+        return lo, hi
+
+
+@dataclasses.dataclass(frozen=True)
+class TraversalSpec:
+    """A whole kernel: iteration domain + access maps + jnp body."""
+
+    name: str
+    axes: tuple[Axis, ...]
+    reads: tuple[Access, ...]
+    writes: tuple[Access, ...]
+    body: Callable[[Mapping[str, Any]], Any]
+    scalars: tuple[str, ...] = ()
+    out_dtype: Any = None   # default: dtype of the first read operand
+
+    def __post_init__(self):
+        names = [ax.name for ax in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"{self.name}: duplicate axis names {names}")
+        if len(self.writes) != 1:
+            raise ValueError(f"{self.name}: exactly one write access "
+                             f"supported, got {len(self.writes)}")
+        known = set(names)
+        for acc in (*self.reads, *self.writes):
+            for v in acc.index:
+                if v not in known:
+                    raise ValueError(
+                        f"{self.name}: access {acc.array!r} indexes unknown "
+                        f"axis {v!r}")
+        if self.writes[0].has_halo:
+            raise ValueError(f"{self.name}: write access cannot have a halo")
+
+    def axis(self, name: str) -> Axis:
+        for ax in self.axes:
+            if ax.name == name:
+                return ax
+        raise KeyError(name)
+
+    @property
+    def write(self) -> Access:
+        return self.writes[0]
+
+    def out_shape(self) -> tuple[int, ...]:
+        return tuple(self.axis(v).extent for v in self.write.index)
+
+
+def tap(block, halo: Sequence[tuple[int, int]], *offsets: int):
+    """Static stencil tap: the interior of a halo-widened block, shifted
+    by ``offsets`` (one per dim, each within [-lo, +hi]).  Pure
+    ``lax.slice`` so it lowers inside a Pallas body and evaluates on full
+    arrays in the ref interpreter alike."""
+    if len(offsets) != len(halo):
+        raise ValueError("one offset per dim required")
+    starts, limits = [], []
+    for dim, ((lo, hi), off) in enumerate(zip(halo, offsets)):
+        if not (-lo <= off <= hi):
+            raise ValueError(f"tap offset {off} outside halo ({lo},{hi})")
+        size = block.shape[dim] - lo - hi
+        starts.append(lo + off)
+        limits.append(lo + off + size)
+    return jax.lax.slice(block, starts, limits)
+
+
+# ------------------------------------------------------- classification
+
+def to_loop_nest(spec: TraversalSpec) -> LoopNest:
+    """Bridge to the symbolic §5.1 planner (``core.transform``)."""
+    return LoopNest(
+        loops=tuple(ax.name for ax in spec.axes),
+        accesses=tuple(ArrayAccess(a.array, a.index)
+                       for a in (*spec.reads, *spec.writes)),
+        writes=tuple(a.array for a in spec.writes),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class NestInfo:
+    """Scheduling-relevant facts derived from a spec (paper §5.1)."""
+
+    stride_axis: str      # axis split into D concurrent streams
+    vector_axis: str      # contiguous axis (lane dimension)
+    reduction: bool       # vector axis is reduced over
+    row_halo: tuple[int, int]   # max (lo, hi) halo along the stride axis
+    col_halo: tuple[int, int]   # max (lo, hi) halo along the vector axis
+    needs_interchange: bool
+
+
+def classify(spec: TraversalSpec) -> NestInfo:
+    """Apply the paper's critical-access selection to pick the stride and
+    vector axes, then collect the halo facts the emitter needs."""
+    plan = plan_transform(to_loop_nest(spec))
+    if plan.needs_blocking:
+        raise NotImplementedError(
+            f"{spec.name}: 1-D traversals (loop-blocked striding, §5.1.1) "
+            "are not supported by the emitter yet")
+    stride, vec = plan.stride_var, plan.contiguous_var
+    row_lo = row_hi = col_lo = col_hi = 0
+    for acc in spec.reads:
+        lo, hi = acc.halo_of(stride)
+        row_lo, row_hi = max(row_lo, lo), max(row_hi, hi)
+        lo, hi = acc.halo_of(vec)
+        col_lo, col_hi = max(col_lo, lo), max(col_hi, hi)
+    return NestInfo(
+        stride_axis=stride, vector_axis=vec,
+        reduction=spec.axis(vec).kind == REDUCTION,
+        row_halo=(row_lo, row_hi), col_halo=(col_lo, col_hi),
+        needs_interchange=plan.needs_interchange,
+    )
+
+
+def traffic_of(spec: TraversalSpec, dtype=jnp.float32,
+               info: Optional[NestInfo] = None) -> Traffic:
+    """Derive the planner's memory signature from the access maps: every
+    read indexed by the stride axis contributes one DMA stream per stride
+    (stencil row taps count once per tap, like the paper's Table 1 "n+2
+    load strides"); arrays not indexed by the stride axis are resident.
+    """
+    if info is None:
+        info = classify(spec)
+    itemsize = jnp.dtype(dtype).itemsize
+    reads = writes = 0
+    resident = 0
+    for acc in spec.reads:
+        if info.stride_axis in acc.index:
+            lo, hi = acc.halo_of(info.stride_axis)
+            reads += 1 + lo + hi
+        else:
+            n = 1
+            for v, (lo, hi) in zip(acc.index, acc.halo):
+                n *= spec.axis(v).extent + lo + hi
+            resident += n * itemsize
+    for acc in spec.writes:
+        if info.stride_axis in acc.index:
+            writes += 1
+    return Traffic(
+        rows=spec.axis(info.stride_axis).extent,
+        cols=spec.axis(info.vector_axis).extent,
+        dtype=dtype, read_arrays=reads, write_arrays=writes,
+        resident_bytes=resident,
+    )
+
+
+# ----------------------------------------------------- ref interpreter
+
+def evaluate(spec: TraversalSpec, inputs: Sequence[Any]):
+    """Ref-mode fallback: evaluate the spec with pure jnp, no Pallas.
+
+    The body is applied once over the full iteration domain — haloed
+    accesses see the whole input array (interior + border), reductions
+    reduce over the full vector extent.  This is the oracle the
+    ``*_gen`` registry variants run in ``mode='ref'``.
+    """
+    if len(inputs) != len(spec.reads) + len(spec.scalars):
+        raise ValueError(
+            f"{spec.name}: expected {len(spec.reads)} arrays + "
+            f"{len(spec.scalars)} scalars, got {len(inputs)} inputs")
+    arrays = list(inputs[:len(spec.reads)])
+    scalars = list(inputs[len(spec.reads):])
+    env: dict[str, Any] = {a.array: x for a, x in zip(spec.reads, arrays)}
+    env.update(zip(spec.scalars, scalars))
+    out = spec.body(env)
+    dtype = spec.out_dtype
+    if dtype is None:
+        dtype = arrays[0].dtype if arrays else out.dtype
+    return out.astype(dtype)

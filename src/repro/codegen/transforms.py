@@ -1,0 +1,251 @@
+"""Schedule transforms: unroll, interchange, and the multi-striding split.
+
+A :class:`Schedule` is a list of :class:`LoopAxis` entries (outermost
+first), each contributing ``position * stride`` to the original index of
+its source axis.  Transforms rewrite that list while preserving the
+iteration domain — the exact algebra the paper describes (§5.1/§7):
+multi-striding = loop splitting where the *outer* part becomes D
+concurrent streams instead of a sequential loop.
+
+  * :func:`unroll`       — axis(N) → grid(N/u, stride·u) × unroll(u)
+  * :func:`interchange`  — permute the nest
+  * :func:`stride_split` — axis(N) → stream(d, stride·N/d) × grid(N/d):
+    d maximally-spaced concurrent segments (paper Fig 1 right)
+  * :func:`vector_block` — like unroll but the inner part is the lane
+    (vector) dimension of the emitted block
+
+Every transform is checked by :func:`preserves_domain` (tests enumerate
+the domain).  :func:`default_schedule` runs the paper's full §5.1 recipe
+on a spec: critical-access selection (``core.transform.plan_transform``)
+→ interchange (contiguous axis innermost) → stride split into D streams
+× P lane portions per :class:`~repro.core.striding.StridingConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+from repro.codegen import loopir
+from repro.core.striding import (SINGLE_STRIDED, StridingConfig,
+                                 choose_block, pad_to_multiple)
+
+__all__ = [
+    "LoopAxis", "Schedule", "BlockPlan", "schedule", "interchange",
+    "unroll", "stride_split", "vector_block", "multi_stride",
+    "plan_blocks", "default_schedule", "iteration_domain",
+    "preserves_domain",
+]
+
+GRID = "grid"        # sequential pallas grid dimension
+STREAM = "stream"    # D concurrent streams (one operand/DMA pipeline each)
+UNROLL = "unroll"    # unrolled into the kernel body (block rows)
+VECTOR = "vector"    # lane dimension of the emitted block
+
+LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopAxis:
+    """One scheduled loop: contributes ``position * stride`` to the
+    original index of source axis ``axis``."""
+
+    axis: str
+    extent: int
+    stride: int
+    kind: str = GRID
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A scheduled nest: the spec plus the transformed loop list."""
+
+    spec: loopir.TraversalSpec
+    loops: tuple[LoopAxis, ...]
+    config: StridingConfig = SINGLE_STRIDED
+
+    def find(self, axis: str, kind: str) -> Optional[LoopAxis]:
+        for l in self.loops:
+            if l.axis == axis and l.kind == kind:
+                return l
+        return None
+
+    def grid_loops(self) -> list[LoopAxis]:
+        return [l for l in self.loops if l.kind == GRID]
+
+
+def schedule(spec: loopir.TraversalSpec,
+             config: StridingConfig = SINGLE_STRIDED) -> Schedule:
+    """Identity schedule: every axis one sequential grid loop."""
+    return Schedule(
+        spec=spec,
+        loops=tuple(LoopAxis(ax.name, ax.extent, 1, GRID)
+                    for ax in spec.axes),
+        config=config,
+    )
+
+
+def _locate(sched: Schedule, axis: str, kind: str = GRID) -> int:
+    for i, l in enumerate(sched.loops):
+        if l.axis == axis and l.kind == kind:
+            return i
+    raise ValueError(f"no {kind} loop over axis {axis!r} in schedule")
+
+
+def _split(sched: Schedule, axis: str, factor: int,
+           outer_kind: str, inner_kind: str) -> Schedule:
+    """axis(N, s) → outer(factor or N/factor) × inner, domain-preserving.
+
+    For ``outer_kind=STREAM`` the outer part has extent ``factor`` and
+    stride ``s*(N/factor)`` — ``factor`` maximally-spaced segments.  For
+    sequential splits (unroll/vector) the *inner* part has extent
+    ``factor`` and stride ``s`` — contiguous sub-blocks.
+    """
+    i = _locate(sched, axis)
+    loop = sched.loops[i]
+    if factor < 1 or loop.extent % factor != 0:
+        raise ValueError(
+            f"factor {factor} does not divide extent {loop.extent} of "
+            f"axis {axis!r} (paper §5.1.2 divisibility)")
+    if outer_kind == STREAM:
+        outer = LoopAxis(axis, factor, loop.stride * (loop.extent // factor),
+                         STREAM)
+        inner = LoopAxis(axis, loop.extent // factor, loop.stride, inner_kind)
+    else:
+        outer = LoopAxis(axis, loop.extent // factor, loop.stride * factor,
+                         outer_kind)
+        inner = LoopAxis(axis, factor, loop.stride, inner_kind)
+    loops = sched.loops[:i] + (outer, inner) + sched.loops[i + 1:]
+    return dataclasses.replace(sched, loops=loops)
+
+
+def unroll(sched: Schedule, axis: str, factor: int) -> Schedule:
+    """Classic loop unroll: ``factor`` consecutive iterations move into
+    the body (block rows, the paper's portion dimension ancestor)."""
+    return _split(sched, axis, factor, GRID, UNROLL)
+
+
+def vector_block(sched: Schedule, axis: str, width: int) -> Schedule:
+    """Block the contiguous axis into lane-width vector portions."""
+    return _split(sched, axis, width, GRID, VECTOR)
+
+
+def stride_split(sched: Schedule, axis: str, d: int) -> Schedule:
+    """THE multi-striding transform (paper §3): split ``axis`` into D
+    concurrent streams of maximally-spaced segments.  The stream part is
+    not a sequential loop — the emitter turns it into D operands, i.e. D
+    independent HBM→VMEM DMA pipelines."""
+    return _split(sched, axis, d, STREAM, GRID)
+
+
+def interchange(sched: Schedule, order: Sequence[int]) -> Schedule:
+    """Permute the nest (paper §5.1: vectorizable axis → innermost)."""
+    if sorted(order) != list(range(len(sched.loops))):
+        raise ValueError(f"order {order!r} is not a permutation of "
+                         f"{len(sched.loops)} loops")
+    return dataclasses.replace(
+        sched, loops=tuple(sched.loops[i] for i in order))
+
+
+def multi_stride(sched: Schedule, config: StridingConfig, *,
+                 block_rows: int, vector_width: int) -> Schedule:
+    """The composite §5.1 pipeline step on an already-interchanged nest:
+    stride-split the outer axis into D streams, unroll the per-stream
+    remainder into ``block_rows``-row blocks, and block the contiguous
+    axis into ``vector_width`` lanes (= 128·P)."""
+    info = loopir.classify(sched.spec)
+    s = stride_split(sched, info.stride_axis, config.stride_unroll)
+    s = unroll(s, info.stride_axis, block_rows)
+    s = vector_block(s, info.vector_axis, vector_width)
+    return dataclasses.replace(s, config=config)
+
+
+# ------------------------------------------------------------ blocking
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Concrete blocking decisions shared by padding and emission."""
+
+    info: loopir.NestInfo
+    d: int             # concurrent streams
+    bm: int            # block rows per stream per grid step
+    bn: int            # block lanes (128 * portions, or full width w/ halo)
+    rows: int          # padded stride-axis extent (d*bm | rows)
+    cols: int          # padded vector-axis extent (bn | cols)
+
+
+def plan_blocks(spec: loopir.TraversalSpec,
+                config: StridingConfig,
+                prefer_bm: int = 8) -> BlockPlan:
+    """Pick (bm, bn) and padded extents for a spec + config.
+
+    Row-haloed (stencil) nests use single-row blocks so each stencil tap
+    is its own stream operand; column-haloed nests keep the full padded
+    width in one block (taps are static lane shifts).  Everything else
+    follows the hand-written kernels' conventions: bn = 128·P lanes,
+    bm ≤ prefer_bm rows.
+    """
+    info = loopir.classify(spec)
+    d = config.stride_unroll
+    rows = spec.axis(info.stride_axis).extent
+    cols = spec.axis(info.vector_axis).extent
+    rows_p = pad_to_multiple(rows, d)
+    row_halo = info.row_halo != (0, 0)
+    col_halo = info.col_halo != (0, 0)
+    bm = 1 if row_halo else choose_block(rows_p // d, prefer_bm)
+    if col_halo:
+        bn, cols_p = cols, cols           # full-width blocks, no col grid
+    else:
+        cols_p = pad_to_multiple(cols, LANE)
+        bn = choose_block(cols_p, LANE * config.portion_unroll)
+    return BlockPlan(info=info, d=d, bm=bm, bn=bn, rows=rows_p, cols=cols_p)
+
+
+def default_schedule(spec: loopir.TraversalSpec,
+                     config: StridingConfig,
+                     blocks: Optional[BlockPlan] = None) -> Schedule:
+    """The paper's full §5.1 preparatory pipeline on a (padded) spec:
+    interchange so the contiguous axis is innermost, then
+    ``multi_stride`` with the planned blocking."""
+    bp = blocks if blocks is not None else plan_blocks(spec, config)
+    if (spec.axis(bp.info.stride_axis).extent != bp.rows
+            or spec.axis(bp.info.vector_axis).extent != bp.cols):
+        raise ValueError(
+            f"{spec.name}: spec extents must match the (padded) BlockPlan; "
+            "pad inputs and rebuild the spec first (see emit.emit_spec)")
+    s = schedule(spec, config)
+    vec_pos = _locate(s, bp.info.vector_axis)
+    if vec_pos != len(s.loops) - 1:
+        order = [i for i in range(len(s.loops)) if i != vec_pos] + [vec_pos]
+        s = interchange(s, order)
+    return multi_stride(s, config, block_rows=bp.bm, vector_width=bp.bn)
+
+
+# --------------------------------------------------- domain validation
+
+def iteration_domain(sched: Schedule) -> set[tuple[int, ...]]:
+    """Every original (axis₀, axis₁, …) index tuple the schedule covers.
+    Exponential in loop count — for tests and small specs only."""
+    axis_names = [ax.name for ax in sched.spec.axes]
+    pts = set()
+    for combo in itertools.product(*(range(l.extent) for l in sched.loops)):
+        idx = dict.fromkeys(axis_names, 0)
+        for loop, pos in zip(sched.loops, combo):
+            idx[loop.axis] += pos * loop.stride
+        pts.add(tuple(idx[a] for a in axis_names))
+    return pts
+
+
+def preserves_domain(sched: Schedule) -> bool:
+    """True iff the schedule covers the spec's iteration domain exactly
+    once (bijection: same point count and same point set)."""
+    total = 1
+    for l in sched.loops:
+        total *= l.extent
+    want = 1
+    for ax in sched.spec.axes:
+        want *= ax.extent
+    if total != want:
+        return False
+    full = set(itertools.product(*(range(ax.extent) for ax in sched.spec.axes)))
+    return iteration_domain(sched) == full

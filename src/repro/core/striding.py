@@ -21,6 +21,8 @@ __all__ = [
     "stream_offsets",
     "stream_spacing_bytes",
     "partition_rows",
+    "pad_to_multiple",
+    "choose_block",
 ]
 
 
@@ -124,3 +126,16 @@ def partition_rows(extent: int, d: int) -> int:
 def valid_stride_unrolls(extent: int, max_d: int = 32) -> list[int]:
     """Stride-unroll candidates that evenly divide ``extent``."""
     return [d for d in divisors(extent) if d <= max_d]
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    """Round n up to a multiple (paper §5.1.2: pad instead of leftovers)."""
+    return -(-n // multiple) * multiple
+
+
+def choose_block(extent: int, preferred: int) -> int:
+    """Largest divisor of ``extent`` that is <= preferred (>= 1)."""
+    b = min(preferred, extent)
+    while extent % b != 0:
+        b -= 1
+    return b

@@ -3,6 +3,9 @@
 Paper §6 kernel set: stream (read/copy/init), mxv/mxv_t, bicg, gemver,
 conv3x3, jacobi2d, doitgen.
 Framework set: decode_attn (flash-decode w/ D KV streams), rmsnorm, adamw.
+Generated set: ``gen`` — kernels expressed as ``repro.codegen``
+TraversalSpecs and lowered to Pallas by the transform pipeline
+(``*_gen`` variants; see README § Codegen).
 
 Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper w/ tune-cache + planner integration), ref.py (pure-jnp oracle),
@@ -17,7 +20,7 @@ conformance test matrix, the autotuner sweep, and the benchmark tables
 all pick it up from there.
 """
 from repro.kernels import (adamw, bicg, conv3x3, decode_attn, doitgen,
-                           gemver, jacobi2d, mxv, rmsnorm, stream)
+                           gemver, gen, jacobi2d, mxv, rmsnorm, stream)
 from repro.registry.base import registered_ops as _registered_ops
 
 _OPS = _registered_ops()

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.striding import StridingConfig
+from repro.core.striding import (StridingConfig, choose_block,
+                                 pad_to_multiple)
 
 __all__ = [
     "kernel_mode", "use_pallas", "interpret_mode",
@@ -63,16 +64,9 @@ def pad_axis(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
     return jnp.pad(x, pads, constant_values=value)
 
 
-def pad_to_multiple(n: int, multiple: int) -> int:
-    return -(-n // multiple) * multiple
-
-
-def choose_block(extent: int, preferred: int) -> int:
-    """Largest divisor of `extent` that is <= preferred (>=1)."""
-    b = min(preferred, extent)
-    while extent % b != 0:
-        b -= 1
-    return b
+# pad_to_multiple / choose_block live in repro.core.striding (shared
+# with repro.codegen.transforms) and are re-exported here for the ops
+# wrappers.
 
 
 def effective_config(config: StridingConfig | None, rows: int,

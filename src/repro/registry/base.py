@@ -65,7 +65,7 @@ _REGISTRY: dict[str, KernelSpec] = {}
 # only needs its package listed here and a register() call in its
 # __init__ — tests, benchmarks and exports then pick it up automatically.
 FAMILIES = ("stream", "mxv", "bicg", "gemver", "conv3x3", "jacobi2d",
-            "doitgen", "decode_attn", "rmsnorm", "adamw")
+            "doitgen", "decode_attn", "rmsnorm", "adamw", "gen")
 
 
 def register(spec: KernelSpec) -> KernelSpec:

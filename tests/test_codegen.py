@@ -1,0 +1,364 @@
+"""repro.codegen: transform algebra + generated-vs-hand-written parity.
+
+Two pillars (ISSUE acceptance):
+  (a) the transform algebra — unroll × interchange × stride-split
+      compose and preserve the iteration domain exactly;
+  (b) every codegen-emitted ``*_gen`` variant matches its hand-written
+      family's output at ≥4 (D, P) points, in the current
+      ``REPRO_KERNEL_MODE`` leg (ref and interpret in CI).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import registry
+from repro.codegen import (Access, Axis, TraversalSpec, classify,
+                           default_schedule, emit_spec, evaluate,
+                           interchange, iteration_domain, make_kernel_op,
+                           plan_blocks, preserves_domain, schedule,
+                           stride_split, tap, traffic_of, unroll,
+                           vector_block)
+from repro.codegen import transforms
+from repro.core.planner import plan
+from repro.core.striding import StridingConfig
+
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "interpret")
+if _MODE not in ("ref", "interpret"):
+    _MODE = "interpret"
+
+POINTS = [(1, 1), (2, 1), (2, 2), (4, 1), (4, 2)]
+
+
+def _spec2d(rows=12, cols=8, red=False):
+    return TraversalSpec(
+        name="t",
+        axes=(Axis("i", rows),
+              Axis("j", cols, kind="reduction" if red else "parallel")),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("i",)) if red else Access("y", ("i", "j")),),
+        body=(lambda env: env["x"].sum(axis=-1)) if red
+        else (lambda env: env["x"]),
+    )
+
+
+# ------------------------------------------------- (a) transform algebra
+
+def test_identity_schedule_preserves_domain():
+    assert preserves_domain(schedule(_spec2d()))
+
+
+def test_stride_split_preserves_domain():
+    s = stride_split(schedule(_spec2d()), "i", 4)
+    assert preserves_domain(s)
+    stream = s.find("i", transforms.STREAM)
+    assert stream.extent == 4 and stream.stride == 3  # maximally spaced
+
+
+def test_unroll_preserves_domain():
+    s = unroll(schedule(_spec2d()), "i", 3)
+    assert preserves_domain(s)
+
+
+def test_vector_block_preserves_domain():
+    assert preserves_domain(vector_block(schedule(_spec2d()), "j", 4))
+
+
+def test_interchange_preserves_domain_and_reorders():
+    s = interchange(schedule(_spec2d()), (1, 0))
+    assert [l.axis for l in s.loops] == ["j", "i"]
+    assert preserves_domain(s)
+
+
+def test_unroll_interchange_stride_split_compose():
+    """The ISSUE's algebra criterion: the three transforms compose in
+    any order and still cover the domain exactly once."""
+    s = schedule(_spec2d(rows=12, cols=8))
+    s = stride_split(s, "i", 2)       # 2 streams of 6
+    s = unroll(s, "i", 3)             # 2-row grid × 3-row blocks
+    s = vector_block(s, "j", 4)       # 2 col blocks × 4 lanes
+    s = interchange(s, (0, 3, 1, 2, 4))   # col grid outermost
+    assert len(s.loops) == 5
+    assert preserves_domain(s)
+    # domain is exactly the cross product, each point once
+    assert len(iteration_domain(s)) == 12 * 8
+
+
+def test_split_requires_divisibility():
+    with pytest.raises(ValueError, match="divide"):
+        stride_split(schedule(_spec2d(rows=10)), "i", 4)
+
+
+def test_interchange_rejects_non_permutation():
+    with pytest.raises(ValueError):
+        interchange(schedule(_spec2d()), (0, 0))
+
+
+def test_default_schedule_structure():
+    """§5.1 pipeline output: stream × row-grid × row-unroll × col-grid ×
+    vector, reduction axis innermost in the grid."""
+    spec = _spec2d(rows=32, cols=256, red=True)
+    cfg = StridingConfig(4, 2)
+    bp = plan_blocks(spec, cfg)
+    s = default_schedule(spec, cfg, blocks=bp)
+    kinds = [(l.axis, l.kind) for l in s.loops]
+    assert kinds == [("i", "stream"), ("i", "grid"), ("i", "unroll"),
+                     ("j", "grid"), ("j", "vector")]
+    assert s.find("i", transforms.STREAM).extent == 4
+    assert s.find("j", transforms.VECTOR).extent == 256  # 128 * P
+    assert preserves_domain(s)
+    grid = s.grid_loops()
+    assert grid[-1].axis == "j"  # reduction innermost
+    assert bp.bm * grid[0].extent * 4 == 32
+
+
+def test_default_schedule_interchanges_when_needed():
+    """A nest declared (j, i) with contiguous axis j gets interchanged
+    so the vector axis ends up innermost."""
+    spec = TraversalSpec(
+        name="t_swapped",
+        axes=(Axis("j", 128), Axis("i", 12)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: env["x"],
+    )
+    info = classify(spec)
+    assert info.stride_axis == "i" and info.vector_axis == "j"
+    s = default_schedule(spec, StridingConfig(2, 1))
+    assert s.loops[-1].axis == "j"
+    assert preserves_domain(s)
+
+
+# -------------------------------------- (b) generated == hand-written
+
+PAIRS = [("stream_copy_gen", "stream_copy"),
+         ("mxv_gen", "mxv"),
+         ("jacobi2d_gen", "jacobi2d")]
+
+
+@pytest.mark.parametrize("d,p", POINTS)
+@pytest.mark.parametrize("gen_name,hand_name", PAIRS)
+def test_generated_matches_handwritten(gen_name, hand_name, d, p):
+    gspec = registry.get(gen_name)
+    hspec = registry.get(hand_name)
+    sizes = dict(hspec.default_sizes)
+    inputs = hspec.make_inputs(sizes, jnp.float32)
+    cfg = StridingConfig(d, p)
+    got = gspec.run(inputs, cfg, _MODE)
+    want = hspec.run(inputs, cfg, _MODE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4,
+                               err_msg=f"{gen_name} vs {hand_name} "
+                                       f"at D={d} P={p}")
+
+
+def test_gen_variants_registered_and_in_matrix():
+    names = set(registry.names())
+    gen = {"stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen"}
+    assert gen <= names
+    matrix_kernels = {k for _, k, _, _ in registry.conformance_points()}
+    assert gen <= matrix_kernels
+
+
+# ----------------------------------------------- ref interpreter + ops
+
+def test_evaluate_matches_oracle():
+    b = jnp.arange(24.0).reshape(4, 6)
+    c = jnp.ones((4, 6)) * 2
+    spec = TraversalSpec(
+        name="triad_t",
+        axes=(Axis("i", 4), Axis("j", 6)),
+        reads=(Access("b", ("i", "j")), Access("c", ("i", "j"))),
+        writes=(Access("a", ("i", "j")),),
+        scalars=("alpha",),
+        body=lambda env: env["b"] + env["alpha"] * env["c"],
+    )
+    np.testing.assert_allclose(evaluate(spec, (b, c, 3.0)), b + 6.0)
+
+
+def test_tap_static_slices():
+    halo = ((1, 1), (1, 1))
+    x = jnp.arange(20.0).reshape(4, 5)
+    np.testing.assert_allclose(tap(x, halo, 0, 0), x[1:-1, 1:-1])
+    np.testing.assert_allclose(tap(x, halo, -1, 1), x[0:2, 2:])
+    with pytest.raises(ValueError):
+        tap(x, halo, 2, 0)
+
+
+@pytest.mark.parametrize("la", [1, 3])
+def test_manual_lookahead_ring(la):
+    """lookahead≠2 lowers through the explicit make_async_copy ring
+    (lookahead=1 = the paper's prefetch-off ablation)."""
+    from repro.kernels.gen import stream_copy_gen, stream_triad_gen
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 256), jnp.float32)
+    cfg = StridingConfig(2, 1, lookahead=la)
+    np.testing.assert_allclose(
+        stream_copy_gen(x, config=cfg, mode="interpret"), x)
+    b = jax.random.normal(jax.random.PRNGKey(1), (16, 256), jnp.float32)
+    got = stream_triad_gen(b, x, 2.0,
+                           config=StridingConfig(2, 2, lookahead=la),
+                           mode="interpret")
+    np.testing.assert_allclose(got, b + 2.0 * x, rtol=1e-5, atol=1e-5)
+
+
+def test_interleaved_arrangement():
+    from repro.kernels.gen import mxv_gen, stream_copy_gen
+    cfg = StridingConfig(4, 2, arrangement="interleaved")
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 256), jnp.float32)
+    np.testing.assert_allclose(
+        stream_copy_gen(x, config=cfg, mode="interpret"), x)
+    a = jax.random.normal(jax.random.PRNGKey(1), (32, 256), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (256,), jnp.float32)
+    np.testing.assert_allclose(
+        mxv_gen(a, v, config=cfg, mode="interpret"), a @ v,
+        rtol=1e-4, atol=1e-4)
+
+
+def test_pad_and_crop_non_divisible_sizes():
+    from repro.kernels.gen import mxv_gen, stream_copy_gen
+    a = jax.random.normal(jax.random.PRNGKey(7), (20, 100), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(8), (100,), jnp.float32)
+    got = mxv_gen(a, v, config=StridingConfig(4, 2), mode=_MODE)
+    np.testing.assert_allclose(got, a @ v, rtol=1e-4, atol=1e-4)
+    x = jax.random.normal(jax.random.PRNGKey(9), (10, 100), jnp.float32)
+    got = stream_copy_gen(x, config=StridingConfig(2, 1), mode=_MODE)
+    assert got.shape == (10, 100)
+    np.testing.assert_allclose(got, x)
+
+
+def test_mixed_halo_and_plain_reads():
+    """One spec mixing a row-haloed (stencil) read with a plain read:
+    each access's operands must keep its own taps/width in the emitted
+    index maps (regression for late-bound closure state)."""
+    halo = ((1, 1), (0, 0))
+    spec_fn = lambda x, b: TraversalSpec(  # noqa: E731
+        name="vstencil_plus",
+        axes=(Axis("i", x.shape[0] - 2), Axis("j", x.shape[1])),
+        reads=(Access("x", ("i", "j"), halo=halo),
+               Access("b", ("i", "j"))),
+        writes=(Access("z", ("i", "j")),),
+        body=lambda env: (tap(env["x"], halo, -1, 0)
+                          + tap(env["x"], halo, 0, 0)
+                          + tap(env["x"], halo, 1, 0)
+                          + env["b"]),
+    )
+    op = make_kernel_op("vstencil_plus", spec_fn)
+    x = jax.random.normal(jax.random.PRNGKey(0), (18, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (16, 256), jnp.float32)
+    want = x[:-2] + x[1:-1] + x[2:] + b
+    for d, p in [(1, 1), (2, 2), (4, 1)]:
+        got = op(x, b, config=StridingConfig(d, p), mode=_MODE)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"D={d} P={p}")
+
+
+# --------------------------------------------- planner/traffic bridge
+
+def test_traffic_derived_from_access_maps():
+    from repro.kernels.gen import jacobi_spec, mxv_spec
+    a = jax.ShapeDtypeStruct((48, 256), jnp.float32)
+    v = jax.ShapeDtypeStruct((256,), jnp.float32)
+    t = traffic_of(mxv_spec(a, v))
+    assert (t.rows, t.cols) == (48, 256)
+    assert t.read_arrays == 1 and t.write_arrays == 1
+    assert t.resident_bytes == 256 * 4          # x stays in VMEM
+    img = jax.ShapeDtypeStruct((34, 130), jnp.float32)
+    tj = traffic_of(jacobi_spec(img))
+    assert tj.read_arrays == 3                  # 3 row taps = 3 streams
+    assert (tj.rows, tj.cols) == (32, 128)
+    cfg = plan(tj).config                       # planner consumes it
+    assert tj.rows % cfg.stride_unroll == 0
+
+
+def test_unsupported_nests_fail_loudly():
+    spec_1d = TraversalSpec(
+        name="t1d",
+        axes=(Axis("i", 64),),
+        reads=(Access("x", ("i",)),),
+        writes=(Access("y", ("i",)),),
+        body=lambda env: env["x"],
+    )
+    with pytest.raises(NotImplementedError, match="1-D"):
+        classify(spec_1d)
+    spec_t = TraversalSpec(
+        name="tt",
+        axes=(Axis("i", 8), Axis("j", 8)),
+        reads=(Access("x", ("j", "i")),),     # transposed operand layout
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: env["x"],
+    )
+    with pytest.raises((NotImplementedError, ValueError)):
+        emit_spec(spec_t, (jnp.ones((8, 8)),), StridingConfig(2, 1),
+                  interpret=True)
+
+
+# ------------------------------------- end-to-end new kernel, no Pallas
+
+def _saxpy_spec(x, y, alpha=0.0):
+    rows, cols = x.shape
+    return TraversalSpec(
+        name="saxpy_offset",
+        axes=(Axis("i", rows), Axis("j", cols)),
+        reads=(Access("x", ("i", "j")),
+               Access("y", ("i", "j"), halo=((0, 0), (0, 2)))),
+        writes=(Access("z", ("i", "j")),),
+        scalars=("alpha",),
+        body=lambda env: (env["alpha"] * env["x"]
+                          + tap(env["y"], ((0, 0), (0, 2)), 0, 2)),
+    )
+
+
+def test_new_kernel_end_to_end_without_pallas():
+    """The acceptance walkthrough: a brand-new kernel defined purely as
+    a TraversalSpec flows spec → op → registry → conformance rows with
+    zero hand-written Pallas."""
+    from repro.kernels.common import example_input
+    from repro.registry import base as registry_base
+
+    op = make_kernel_op("saxpy_offset", _saxpy_spec,
+                        default=StridingConfig(4, 1))
+    x = example_input((16, 256), 0)
+    y = example_input((16, 258), 1)
+    want = 2.5 * x + y[:, 2:]
+    for d, p in [(1, 1), (2, 2), (4, 1)]:
+        got = op(x, y, 2.5, config=StridingConfig(d, p), mode=_MODE)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    spec = registry.KernelSpec(
+        name="saxpy_offset", family="gen", fn=op,
+        make_inputs=lambda s, dt: (example_input((s["rows"], s["cols"]), 0, dt),
+                                   example_input((s["rows"], s["cols"] + 2), 1, dt),
+                                   jnp.asarray(2.5, dt)),
+        run=lambda inp, cfg, mode: op(*inp, config=cfg, mode=mode),
+        ref=lambda inp, cfg: (inp[2] * inp[0] + inp[1][:, 2:]
+                              ).astype(inp[0].dtype),
+        default_sizes={"rows": 16, "cols": 256},
+        aliased_sizes={"rows": 16, "cols": 128})
+    try:
+        registry.register(spec)
+        pts = [pt for pt in registry.conformance_points()
+               if pt[1] == "saxpy_offset"]
+        assert len(pts) >= 4   # full generated matrix coverage
+        for _pid, kernel, sizes, cfg in pts[:2]:
+            s = registry.get(kernel)
+            inputs = s.make_inputs(sizes, jnp.float32)
+            np.testing.assert_allclose(
+                np.asarray(s.run(inputs, cfg, _MODE)),
+                np.asarray(s.ref(inputs, cfg)), rtol=1e-4, atol=1e-4)
+    finally:
+        registry_base._REGISTRY.pop("saxpy_offset", None)
+
+
+def test_autotune_sweeps_gen_kernel(tmp_path):
+    """Generated variants flow through the empirical autotuner with zero
+    bespoke plumbing."""
+    from repro.registry import TuneCache, tune
+    cache = TuneCache(str(tmp_path / "tune.json"))
+    res = tune("stream_copy_gen", mode="ref", cache=cache, iters=1,
+               warmup=0)
+    assert res.kernel == "stream_copy_gen" and not res.from_cache
+    assert 32 % res.config.stride_unroll == 0
+    again = tune("stream_copy_gen", mode="ref", cache=cache)
+    assert again.from_cache and again.config == res.config

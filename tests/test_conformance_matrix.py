@@ -72,7 +72,7 @@ def test_aliased_points_actually_alias():
         if shape is None or len(shape) != 2:
             continue
         rows, cols = shape
-        if spec.name in ("conv3x3", "jacobi2d"):
+        if spec.name in ("conv3x3", "jacobi2d", "jacobi2d_gen"):
             rows -= 2          # streams walk the interior rows
         if spec.name == "gemver_sum":
             continue           # 1-D kernel: blocking is internal
@@ -81,4 +81,21 @@ def test_aliased_points_actually_alias():
         spacing = (rows // 4) * cols * 4
         assert layout.collides(spacing), (spec.name, spacing)
         checked += 1
-    assert checked >= 8
+    assert checked >= 12
+
+
+def test_gen_variants_auto_included():
+    """Codegen-derived ``*_gen`` variants ride the generated matrix with
+    no bespoke wiring: every registered gen-family kernel gets the same
+    ≥4-config + aliased coverage as the hand-written families."""
+    gen_specs = registry.family_specs("gen")
+    assert {s.name for s in gen_specs} >= {
+        "stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen"}
+    by_kernel: dict[str, list] = {}
+    for point, kernel, _sizes, cfg in _POINTS:
+        by_kernel.setdefault(kernel, []).append((point, cfg))
+    for s in gen_specs:
+        pts = by_kernel[s.name]
+        assert len(pts) >= 4, s.name
+        assert any(cfg.is_single_strided for _, cfg in pts), s.name
+        assert any(p.endswith("-aliased") for p, _ in pts), s.name
