@@ -17,7 +17,8 @@ as a loop-unroll/interchange-family transform):
 see ``repro.kernels.gen`` for the ported kernel families and
 ``examples/codegen_kernel.py`` for an end-to-end walkthrough.
 """
-from repro.codegen.emit import emit_scheduled, emit_spec, make_kernel_op
+from repro.codegen.emit import (emit_scheduled, emit_spec, make_kernel_op,
+                                run_spec)
 from repro.codegen.loopir import (Access, Axis, NestInfo, TraversalSpec,
                                   classify, evaluate, tap, to_loop_nest,
                                   traffic_of)
@@ -35,5 +36,5 @@ __all__ = [
     "unroll", "stride_split", "vector_block", "multi_stride",
     "plan_blocks", "default_schedule", "iteration_domain",
     "preserves_domain",
-    "emit_spec", "emit_scheduled", "make_kernel_op",
+    "emit_spec", "emit_scheduled", "run_spec", "make_kernel_op",
 ]

@@ -3,18 +3,34 @@
 The scheduled nest's STREAM part becomes D operand refs per traversed
 array — D independent HBM→VMEM DMA pipelines, the TPU rendering of the
 paper's D concurrent strides (same machinery as ``core.pipeline``).  The
-GRID parts become the ``pallas_call`` grid, UNROLL the block rows, and
-VECTOR the lane dimension.  Three lowering strategies:
+GRID parts become the ``pallas_call`` grid (batch axes lead), UNROLL the
+block rows, VECTOR the lane dimension, and BLOCK tiles (free axes, the
+§5.1.1 cache blocks) ride whole inside every kernel block.  Four
+lowering strategies:
 
   * ``_emit_streaming`` — elementwise/stencil nests: D (or D × taps, for
-    row stencils) input operands, a ``[D, bm, w]``-blocked output, body
-    applied per stream in grouped or interleaved arrangement (§4.1/§4.4).
-  * ``_emit_reduction`` — vector-axis reductions: f32 VMEM accumulator
-    per stream, written on the last reduction step (the mxv pattern).
-  * ``_emit_manual`` — explicit ``lookahead``-deep ring of
-    ``make_async_copy`` buffers per stream (the ``copy_manual`` pattern);
-    selected when ``config.lookahead != 2`` so the prefetch-off
-    (lookahead=1) and deeper-ring ablations work on generated kernels.
+    row stencils) input operands, a ``[batch…, D, bm, …]``-blocked
+    output, body applied per stream in grouped or interleaved
+    arrangement (§4.1/§4.4).  Covers free-axis outputs (e.g. doitgen's
+    ``[q, p]`` tiles with the reduction contracted inside the body).
+  * ``_emit_reduction`` — vector-axis reductions written per stride row:
+    f32 VMEM accumulator per stream, written on the last reduction step
+    (the mxv pattern).
+  * ``_emit_stream_reduction`` — the stride axis itself is reduced (the
+    mxv_t / flash-decode pattern): every stream's partial results merge
+    across streams and row-grid steps with ``spec.reduce`` ("sum" or
+    "max") into one full-width f32 accumulator, written at the end.
+  * ``_emit_manual`` — explicit ``lookahead``-deep DMA rings (the
+    ``copy_manual`` pattern), one *fused* ring per operand: each step's
+    D stream copies issue back-to-back onto a single per-slot
+    semaphore, and stores drain through a double-buffered staging ring
+    instead of blocking each stream's compute.  Selected when
+    ``config.lookahead != 2`` (lookahead=1 = prefetch off).
+
+1-D nests take the §5.1.1 loop-blocking path first (``classify`` flags
+them): the single axis is tiled into a ``[rows, 128·P]`` grid — the
+``transforms.block`` shape — and the blocked 2-D spec then runs the
+standard multi-striding pipeline.
 
 ``evaluate`` (in ``loopir``) is the ref-mode fallback; ``make_kernel_op``
 wraps the whole pipeline as a public op with the same mode dispatch,
@@ -25,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +51,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.codegen import loopir, transforms
 from repro.core.striding import StridingConfig
 
-__all__ = ["emit_spec", "emit_scheduled", "make_kernel_op"]
+__all__ = ["emit_spec", "emit_scheduled", "run_spec", "make_kernel_op"]
+
+_NEG = -1e30   # max-reduce accumulator init
 
 
 # ------------------------------------------------------------ operands
@@ -48,15 +66,20 @@ class _Operand:
     access: loopir.Access
     arrays: list           # operand arrays, in_specs order
     specs: list            # matching pl.BlockSpec list
-    per_stream: bool       # True: d (× taps) operands; False: shared
+    kind: str              # "stream2d" | "stream1d" | "resident"
     taps: int = 1          # row-tap operands per stream
+    squeeze: bool = False  # drop the artificial leading dim of a 1-D read
 
     def load(self, refs: Sequence, base: int, k: int, lanes=None):
         """Build this access's env block for stream ``k`` (optionally a
         lane sub-slice, for the interleaved arrangement)."""
-        if not self.per_stream:
-            blk = refs[base][0, :]
+        if self.kind == "resident":
+            blk = refs[base][...]
+            if self.squeeze:
+                blk = blk[0]
             return blk if lanes is None else blk[lanes]
+        if self.kind == "stream1d":
+            return refs[base + k][0, :]
         if self.taps == 1:
             blk = refs[base + k][...]
             return blk if lanes is None else blk[:, lanes]
@@ -65,58 +88,106 @@ class _Operand:
 
 
 def _lower_reads(sched: transforms.Schedule, bp: transforms.BlockPlan,
-                 arrays: Sequence) -> list[_Operand]:
+                 arrays: Sequence, pos: dict) -> list[_Operand]:
+    """Lower every read access against the grid-position map ``pos``
+    (axis name → pallas grid dimension).
+
+    Streamed forms (stride axis in the index): ``[batch…, stride,
+    vector]`` (D operands × row taps) and ``[stride]`` (D rank-1 row
+    streams, e.g. gemver's u vectors or mxv_t's x).  Everything else is
+    resident: whole-extent blocks on the non-batch dims, one batch
+    element per grid step on the batch dims.
+    """
     spec, info = sched.spec, bp.info
     stream = sched.find(info.stride_axis, transforms.STREAM)
     d, seg_rows = stream.extent, stream.stride
-    grid_loops = sched.grid_loops()
-    row_pos = next(i for i, l in enumerate(grid_loops)
-                   if l.axis == info.stride_axis)
-    col_pos = next(i for i, l in enumerate(grid_loops)
-                   if l.axis == info.vector_axis)
     segb = seg_rows // bp.bm
-    col_halo = bp.info.col_halo != (0, 0)
+    full = info.col_halo != (0, 0) or spec.full_width
+    row_pos, col_pos = pos[info.stride_axis], pos[info.vector_axis]
 
     ops = []
     for acc, x in zip(spec.reads, arrays):
-        if acc.index == (info.stride_axis, info.vector_axis):
+        bvars = tuple(v for v in acc.index if v in info.batch_axes)
+        rest = tuple(v for v in acc.index if v not in info.batch_axes)
+        nb = len(bvars)
+        bpos = tuple(pos[v] for v in bvars)
+        if info.stride_axis not in rest:
+            # resident: whole extents, except a vector-indexed dim which
+            # follows the column grid at bn lanes (unless full-width)
+            squeeze = False
+            dim_vars = acc.index
+            if nb == 0 and x.ndim == 1:
+                x, squeeze = x.reshape(1, -1), True
+                dim_vars = (None,) + dim_vars
+            block, codes = [], []
+            for dv, size in zip(dim_vars, x.shape):
+                if dv in info.batch_axes:
+                    block.append(1)
+                    codes.append(pos[dv])
+                elif (dv == info.vector_axis and not full
+                        and acc.halo_of(dv) == (0, 0)):
+                    block.append(bp.bn)
+                    codes.append(col_pos)
+                else:
+                    block.append(size)
+                    codes.append(-1)
+
+            def imap(*g, _codes=tuple(codes)):
+                return tuple(0 if c < 0 else g[c] for c in _codes)
+            ops.append(_Operand(acc, [x], [pl.BlockSpec(tuple(block), imap)],
+                                "resident", squeeze=squeeze))
+        elif (len(rest) == 2 and rest[0] == info.stride_axis
+                and (rest[1] == info.vector_axis
+                     or rest[1] in info.free_axes)):
             lo, hi = acc.halo_of(info.stride_axis)
             taps = 1 + lo + hi
             if taps > 1 and bp.bm != 1:
                 raise NotImplementedError(
                     f"{spec.name}: row-haloed access {acc.array!r} needs "
                     "single-row blocks")
-            width = x.shape[1] if (col_halo or acc.halo_of(
-                info.vector_axis) != (0, 0)) else bp.bn
-            full_width = width != bp.bn or col_halo
+            if taps > 1 and nb:
+                raise NotImplementedError(
+                    f"{spec.name}: row halo on a batched access")
+            if rest[1] != info.vector_axis:       # free axis: whole dim
+                width, full_width = x.shape[-1], True
+            else:
+                width = (x.shape[-1] if (full or acc.halo_of(
+                    info.vector_axis) != (0, 0)) else bp.bn)
+                full_width = width != bp.bn or full
             specs, operands = [], []
             for k in range(d):
                 for t in range(taps):
-                    def imap(*g, _k=k, _t=t, _taps=taps, _fw=full_width):
+                    def imap(*g, _k=k, _t=t, _taps=taps, _fw=full_width,
+                             _bpos=bpos):
                         i = g[row_pos]
                         if _taps > 1:      # bm == 1: block idx == row idx
                             i = i + _k * seg_rows + _t
                         else:
                             i = i + _k * segb
                         j = 0 if _fw else g[col_pos]
-                        return (i, j)
-                    specs.append(pl.BlockSpec((bp.bm, width), imap))
+                        return tuple(g[p] for p in _bpos) + (i, j)
+                    specs.append(
+                        pl.BlockSpec((1,) * nb + (bp.bm, width), imap))
                     operands.append(x)
-            ops.append(_Operand(acc, operands, specs, True, taps))
-        elif acc.index == (info.vector_axis,):
-            lo, hi = acc.halo[0]
-            width = bp.cols + lo + hi if (col_halo or lo or hi) else bp.bn
-            full_width = width != bp.bn or col_halo
-
-            def imap(*g, _fw=full_width):
-                return (0, 0 if _fw else g[col_pos])
-            ops.append(_Operand(acc, [x.reshape(1, -1)],
-                                [pl.BlockSpec((1, width), imap)], False))
+            ops.append(_Operand(acc, operands, specs, "stream2d", taps=taps))
+        elif rest == (info.stride_axis,) and not nb:
+            if acc.has_halo:
+                raise NotImplementedError(
+                    f"{spec.name}: halo on rank-1 streamed {acc.array!r}")
+            x2 = x.reshape(1, -1)
+            specs, operands = [], []
+            for k in range(d):
+                def imap(*g, _k=k):
+                    return (0, g[row_pos] + _k * segb)
+                specs.append(pl.BlockSpec((1, bp.bm), imap))
+                operands.append(x2)
+            ops.append(_Operand(acc, operands, specs, "stream1d"))
         else:
             raise NotImplementedError(
                 f"{spec.name}: access {acc.array!r}{acc.index} not "
-                "lowerable (supported: [stride, vector] and [vector]; "
-                "interchange the nest or transpose the operand)")
+                "lowerable (supported: [batch…, stride, vector], [stride], "
+                "and stride-free resident reads; interchange the nest or "
+                "transpose the operand)")
     return ops
 
 
@@ -146,13 +217,25 @@ def _env_builder(spec: loopir.TraversalSpec, ops: list[_Operand],
 
 # ------------------------------------------------------------ lowering
 
-def _grid_of(sched: transforms.Schedule, bp: transforms.BlockPlan):
-    grid_loops = sched.grid_loops()
-    row_pos = next(i for i, l in enumerate(grid_loops)
-                   if l.axis == bp.info.stride_axis)
-    col_pos = next(i for i, l in enumerate(grid_loops)
-                   if l.axis == bp.info.vector_axis)
-    return tuple(l.extent for l in grid_loops), row_pos, col_pos
+def _geometry(sched: transforms.Schedule, bp: transforms.BlockPlan,
+              row_innermost: bool = False):
+    """Pallas grid tuple + axis→dimension map.  Batch axes lead; the
+    stride row grid and vector col grid follow (row innermost for
+    stride-axis reductions so partials accumulate per output block)."""
+    extents = {l.axis: l.extent for l in sched.grid_loops()}
+    inner = ([bp.info.vector_axis, bp.info.stride_axis] if row_innermost
+             else [bp.info.stride_axis, bp.info.vector_axis])
+    order = list(bp.info.batch_axes) + inner
+    grid = tuple(extents[a] for a in order)
+    return grid, {a: i for i, a in enumerate(order)}
+
+
+def _write_dims(spec: loopir.TraversalSpec, bp: transforms.BlockPlan):
+    """Split the write index into (batch vars, stride?, tail vars)."""
+    info = bp.info
+    bvars = tuple(v for v in spec.write.index if v in info.batch_axes)
+    rest = tuple(v for v in spec.write.index if v not in info.batch_axes)
+    return bvars, rest
 
 
 def _lane_slices(cfg: StridingConfig, bn: int) -> list:
@@ -167,56 +250,78 @@ def _lane_slices(cfg: StridingConfig, bn: int) -> list:
 
 
 def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
-    spec = sched.spec
-    d = sched.find(bp.info.stride_axis, transforms.STREAM).extent
-    seg_rows = sched.find(bp.info.stride_axis, transforms.STREAM).stride
-    grid, row_pos, col_pos = _grid_of(sched, bp)
-    ops = _lower_reads(sched, bp, arrays)
+    spec, info = sched.spec, bp.info
+    stream = sched.find(info.stride_axis, transforms.STREAM)
+    d, seg_rows = stream.extent, stream.stride
+    grid, pos = _geometry(sched, bp)
+    row_pos, col_pos = pos[info.stride_axis], pos[info.vector_axis]
+    ops = _lower_reads(sched, bp, arrays, pos)
     scal_arrays, scal_specs = _scalar_specs(scalars)
     in_specs = [s for op in ops for s in op.specs] + scal_specs
     operands = [a for op in ops for a in op.arrays] + scal_arrays
     env = _env_builder(spec, ops, sum(len(op.arrays) for op in ops))
-    col_halo = bp.info.col_halo != (0, 0)
-    w_out = bp.cols if col_halo else bp.bn
-    has_taps = any(op.taps > 1 for op in ops)
-    lanes = ([None] if (col_halo or has_taps)
-             else _lane_slices(sched.config, bp.bn))
+
+    bvars, rest = _write_dims(spec, bp)
+    if not rest or rest[0] != info.stride_axis:
+        raise NotImplementedError(
+            f"{spec.name}: streaming write {spec.write.index} must lead "
+            "with the stride axis")
+    nb = len(bvars)
+    full = info.col_halo != (0, 0) or spec.full_width
+    w_shape, w_block, w_imap = [], [], []
+    for v in rest[1:]:
+        if v == info.vector_axis:
+            w_shape.append(bp.cols)
+            w_block.append(bp.cols if full else bp.bn)
+            w_imap.append(None if full else col_pos)
+        else:                                   # free axis: whole extent
+            w_shape.append(spec.axis(v).extent)
+            w_block.append(spec.axis(v).extent)
+            w_imap.append(None)
+    plain = (nb == 0 and rest[1:] == (info.vector_axis,) and not full
+             and not info.free_axes and all(op.taps == 1 for op in ops))
+    lanes = _lane_slices(sched.config, bp.bn) if plain else [None]
     out_dtype = spec.out_dtype or arrays[0].dtype
+    batch_ext = tuple(spec.axis(v).extent for v in bvars)
+    bpos = tuple(pos[v] for v in bvars)
 
     def kernel(*refs):
         o_ref = refs[len(operands)]
         for sl in lanes:
             for k in range(d):
                 res = spec.body(env(refs, k, sl)).astype(o_ref.dtype)
+                idx = (0,) * nb + (k,)
                 if sl is None:
-                    o_ref[k, ...] = res
+                    o_ref[idx] = res.reshape((bp.bm, *w_block))
                 else:
-                    o_ref[k, :, sl] = res
+                    o_ref[idx + (slice(None), sl)] = res
 
     def out_imap(*g):
-        return (0, g[row_pos], 0 if col_halo else g[col_pos])
+        return (tuple(g[p] for p in bpos) + (0, g[row_pos])
+                + tuple(0 if p is None else g[p] for p in w_imap))
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((d, bp.bm, w_out), out_imap),
+        out_specs=pl.BlockSpec((1,) * nb + (d, bp.bm, *w_block), out_imap),
         out_shape=jax.ShapeDtypeStruct(
-            (d, seg_rows, bp.cols), jnp.dtype(out_dtype)),
+            batch_ext + (d, seg_rows, *w_shape), jnp.dtype(out_dtype)),
         interpret=interpret,
     )(*operands)
-    return out.reshape(d * seg_rows, bp.cols)
+    return out.reshape(*batch_ext, d * seg_rows, *w_shape)
 
 
 def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
-    spec = sched.spec
-    stream = sched.find(bp.info.stride_axis, transforms.STREAM)
+    spec, info = sched.spec, bp.info
+    if info.batch_axes:
+        raise NotImplementedError(
+            f"{spec.name}: batched vector-axis reduction")
+    stream = sched.find(info.stride_axis, transforms.STREAM)
     d, seg_rows = stream.extent, stream.stride
-    grid, row_pos, col_pos = _grid_of(sched, bp)
-    if col_pos != len(grid) - 1:
-        raise ValueError(f"{spec.name}: the reduction axis must be the "
-                         "innermost grid loop (interchange first)")
-    ops = _lower_reads(sched, bp, arrays)
+    grid, pos = _geometry(sched, bp)
+    row_pos, col_pos = pos[info.stride_axis], pos[info.vector_axis]
+    ops = _lower_reads(sched, bp, arrays, pos)
     scal_arrays, scal_specs = _scalar_specs(scalars)
     in_specs = [s for op in ops for s in op.specs] + scal_specs
     operands = [a for op in ops for a in op.arrays] + scal_arrays
@@ -255,19 +360,106 @@ def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
     return out.reshape(d * seg_rows)
 
 
+def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
+    """Stride axis is the reduction (mxv_t / flash-decode partials): all
+    D streams' body outputs merge with ``spec.reduce`` into one f32
+    accumulator across the row grid, written on the last row step."""
+    spec, info = sched.spec, bp.info
+    stream = sched.find(info.stride_axis, transforms.STREAM)
+    d = stream.extent
+    grid, pos = _geometry(sched, bp, row_innermost=True)
+    row_pos, col_pos = pos[info.stride_axis], pos[info.vector_axis]
+    ops = _lower_reads(sched, bp, arrays, pos)
+    scal_arrays, scal_specs = _scalar_specs(scalars)
+    in_specs = [s for op in ops for s in op.specs] + scal_specs
+    operands = [a for op in ops for a in op.arrays] + scal_arrays
+    env = _env_builder(spec, ops, sum(len(op.arrays) for op in ops))
+    out_dtype = spec.out_dtype or arrays[0].dtype
+
+    bvars, rest = _write_dims(spec, bp)
+    nb = len(bvars)
+    bpos = tuple(pos[v] for v in bvars)
+    batch_ext = tuple(spec.axis(v).extent for v in bvars)
+    if rest == (info.vector_axis,):
+        w = bp.bn                          # per-col-block partial outputs
+
+        def out_imap(*g):
+            return tuple(g[p] for p in bpos) + (0, g[col_pos])
+        out_shape = batch_ext + (1, bp.cols)
+        final = batch_ext + (bp.cols,)
+    elif len(rest) == 1 and rest[0] in info.free_axes:
+        if bp.bn != bp.cols:
+            raise NotImplementedError(
+                f"{spec.name}: free-axis reduction output needs "
+                "full_width=True (vector axis consumed in the body)")
+        w = spec.axis(rest[0]).extent
+
+        def out_imap(*g):
+            return tuple(g[p] for p in bpos) + (0,)
+        out_shape = batch_ext + (w,)
+        final = out_shape
+    else:
+        raise NotImplementedError(
+            f"{spec.name}: stride-reduction write {spec.write.index} must "
+            "be the vector axis or one free axis (plus batch)")
+
+    def kernel(*refs):
+        o_ref = refs[len(operands)]
+        acc = refs[len(operands) + 1]
+        i = pl.program_id(row_pos)
+
+        @pl.when(i == 0)
+        def _():
+            if spec.reduce == "max":
+                acc[...] = jnp.full_like(acc, _NEG)
+            else:
+                acc[...] = jnp.zeros_like(acc)
+
+        for k in range(d):
+            part = spec.body(env(refs, k)).astype(jnp.float32)
+            part = part.reshape(acc.shape)
+            if spec.reduce == "max":
+                acc[...] = jnp.maximum(acc[...], part)
+            else:
+                acc[...] += part
+
+        @pl.when(i == pl.num_programs(row_pos) - 1)
+        def _():
+            o_ref[...] = acc[...].reshape(o_ref.shape).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1,) * nb + ((1, w) if rest ==
+                               (info.vector_axis,) else (w,)), out_imap),
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.dtype(out_dtype)),
+        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(final)
+
+
 def _manual_eligible(spec: loopir.TraversalSpec,
                      bp: transforms.BlockPlan) -> bool:
-    if bp.info.reduction or bp.info.row_halo != (0, 0) \
-            or bp.info.col_halo != (0, 0):
+    if (bp.info.reduction or bp.info.stride_reduction
+            or bp.info.batch_axes or bp.info.free_axes or spec.full_width
+            or bp.info.row_halo != (0, 0) or bp.info.col_halo != (0, 0)):
         return False
     return all(a.index == (bp.info.stride_axis, bp.info.vector_axis)
                and not a.has_halo for a in (*spec.reads, *spec.writes))
 
 
 def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
-    """Explicit D-stream, ``lookahead``-deep DMA ring (the
-    ``stream.copy_manual`` pattern with the spec body fused between the
-    load ring and the store)."""
+    """Explicit D-stream, ``lookahead``-deep DMA rings with the spec body
+    fused between loads and stores (the ``stream.copy_manual`` pattern).
+
+    One fused ring per *operand*: each step's D stream copies issue
+    back-to-back onto a single per-slot semaphore (no interleaved
+    per-stream wait/start serializing the issue slots), and stores drain
+    through a double-buffered staging ring so a stream's store never
+    blocks the next stream's compute.
+    """
     spec = sched.spec
     stream = sched.find(bp.info.stride_axis, transforms.STREAM)
     d, seg_rows = stream.extent, stream.stride
@@ -279,59 +471,73 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
     n_scal = len(scalars)
     scal_arrays = [jnp.asarray(s).reshape(1, 1) for s in scalars]
     out_dtype = spec.out_dtype or arrays[0].dtype
+    ost = 2                             # output staging ring depth
 
     def kernel(*refs):
         in_hbm = refs[:n_in]
         scal_refs = refs[n_in:n_in + n_scal]
         o_hbm = refs[n_in + n_scal]
         scratch = refs[n_in + n_scal + 1:]
-        bufs = scratch[:n_in]
-        obuf = scratch[n_in]
-        insems = scratch[n_in + 1:2 * n_in + 1]
-        outsem = scratch[2 * n_in + 1]
+        bufs = scratch[:n_in]                     # (la, d, bm, cols)
+        obuf = scratch[n_in]                      # (ost, d, bm, cols)
+        insems = scratch[n_in + 1:2 * n_in + 1]   # (la,) per operand
+        outsem = scratch[2 * n_in + 1]            # (ost, d)
 
-        def start_in(r, k, t, slot):
-            pltpu.make_async_copy(
+        def in_copy(r, k, t, slot):
+            return pltpu.make_async_copy(
                 in_hbm[r].at[pl.ds(k * seg_rows + t * bm, bm), :],
-                bufs[r].at[k, slot], insems[r].at[k, slot]).start()
+                bufs[r].at[slot, k], insems[r].at[slot])
+
+        def out_copy(k, t, oslot):
+            return pltpu.make_async_copy(
+                obuf.at[oslot, k],
+                o_hbm.at[pl.ds(k * seg_rows + t * bm, bm), :],
+                outsem.at[oslot, k])
 
         def env(k, slot):
-            e = {acc.array: bufs[r][k, slot]
+            e = {acc.array: bufs[r][slot, k]
                  for r, acc in enumerate(spec.reads)}
             for s, name in enumerate(spec.scalars):
                 e[name] = scal_refs[s][0, 0]
             return e
 
-        # prologue: prime `lookahead` transfers per stream per array —
-        # the controllable prefetch depth (lookahead=1 = prefetch off)
+        # prologue: prime `lookahead` steps per operand ring — all D
+        # stream copies of a step issue back-to-back on one shared slot
+        # semaphore (lookahead=1 = prefetch off)
         for r in range(n_in):
-            for k in range(d):
-                for t in range(min(la, n_steps)):
-                    start_in(r, k, t, t % la)
+            for t in range(min(la, n_steps)):
+                for k in range(d):
+                    in_copy(r, k, t, t % la).start()
 
         def body(t, _):
             slot = t % la
-            for k in range(d):
-                for r in range(n_in):
-                    pltpu.make_async_copy(
-                        bufs[r].at[k, slot], bufs[r].at[k, slot],
-                        insems[r].at[k, slot]).wait()
-                obuf[k] = spec.body(env(k, slot)).astype(obuf.dtype)
-                out_cp = pltpu.make_async_copy(
-                    obuf.at[k],
-                    o_hbm.at[pl.ds(k * seg_rows + t * bm, bm), :],
-                    outsem.at[k])
-                out_cp.start()
-                out_cp.wait()
-                nxt = t + la
+            oslot = t % ost
 
-                @pl.when(nxt < n_steps)
-                def _():
-                    for r in range(n_in):
-                        start_in(r, k, nxt, slot)
+            @pl.when(t >= ost)         # drain the store last on this slot
+            def _():
+                for k in range(d):
+                    out_copy(k, t - ost, oslot).wait()
+            for r in range(n_in):      # one wait per copy; shared sem
+                for k in range(d):
+                    in_copy(r, k, t, slot).wait()
+            for k in range(d):
+                obuf[oslot, k] = spec.body(env(k, slot)).astype(obuf.dtype)
+            for k in range(d):
+                out_copy(k, t, oslot).start()
+            nxt = t + la
+
+            @pl.when(nxt < n_steps)    # refill the rings, again fused
+            def _():
+                for r in range(n_in):
+                    for k in range(d):
+                        in_copy(r, k, nxt, slot).start()
             return ()
 
         jax.lax.fori_loop(0, n_steps, body, ())
+        for tail in range(min(ost, n_steps)):      # drain pending stores
+            t = n_steps - 1 - tail
+            for k in range(d):
+                out_copy(k, t, t % ost).wait()
 
     return pl.pallas_call(
         kernel,
@@ -341,10 +547,10 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
         out_shape=jax.ShapeDtypeStruct((d * seg_rows, cols),
                                        jnp.dtype(out_dtype)),
         scratch_shapes=(
-            [pltpu.VMEM((d, la, bm, cols), x.dtype) for x in arrays]
-            + [pltpu.VMEM((d, bm, cols), jnp.dtype(out_dtype))]
-            + [pltpu.SemaphoreType.DMA((d, la)) for _ in arrays]
-            + [pltpu.SemaphoreType.DMA((d,))]
+            [pltpu.VMEM((la, d, bm, cols), x.dtype) for x in arrays]
+            + [pltpu.VMEM((ost, d, bm, cols), jnp.dtype(out_dtype))]
+            + [pltpu.SemaphoreType.DMA((la,)) for _ in arrays]
+            + [pltpu.SemaphoreType.DMA((ost, d))]
         ),
         interpret=interpret,
     )(*arrays, *scal_arrays)
@@ -355,11 +561,19 @@ def emit_scheduled(sched: transforms.Schedule, bp: transforms.BlockPlan,
                    interpret: bool):
     """Dispatch a scheduled nest to the right lowering.  A non-default
     lookahead selects the manual ring when the nest supports it; nests
-    the ring cannot express (stencils, reductions) keep the Pallas
-    auto-pipeline, whose ring depth is fixed at 2."""
-    if bp.info.reduction:
+    the ring cannot express (stencils, reductions, batched/free nests)
+    keep the Pallas auto-pipeline, whose ring depth is fixed at 2."""
+    spec, info = sched.spec, bp.info
+    if info.stride_reduction:
+        return _emit_stream_reduction(sched, bp, arrays, scalars, interpret)
+    _, rest = _write_dims(spec, bp)
+    if info.reduction and rest == (info.stride_axis,):
         return _emit_reduction(sched, bp, arrays, scalars, interpret)
-    if sched.config.lookahead != 2 and _manual_eligible(sched.spec, bp):
+    if info.reduction and bp.bn != bp.cols:
+        raise NotImplementedError(
+            f"{spec.name}: a body-contracted reduction axis needs "
+            "full_width=True")
+    if sched.config.lookahead != 2 and _manual_eligible(spec, bp):
         return _emit_manual(sched, bp, arrays, scalars, interpret)
     return _emit_streaming(sched, bp, arrays, scalars, interpret)
 
@@ -377,36 +591,80 @@ def _pad_dim(x, dim: int, target: int):
 def _pad_arrays(spec: loopir.TraversalSpec, bp: transforms.BlockPlan,
                 arrays: Sequence) -> list:
     """Zero-pad every operand to the BlockPlan's extents (§5.1.2
-    divisibility — pad+crop instead of leftover loops).  Reduction
-    bodies see zeros in the padded vector region, which contributes
-    nothing to dot-like reductions."""
+    divisibility — pad+crop instead of leftover loops).  Batch and free
+    dims keep their natural extents.  Reduction bodies see zeros in the
+    padded vector region, which contributes nothing to dot-like
+    reductions."""
     info = bp.info
+    targets = {info.stride_axis: bp.rows, info.vector_axis: bp.cols}
     padded = []
     for acc, x in zip(spec.reads, arrays):
         for dim, (var, (lo, hi)) in enumerate(zip(acc.index, acc.halo)):
-            target = {info.stride_axis: bp.rows,
-                      info.vector_axis: bp.cols}[var] + lo + hi
+            target = targets.get(var, spec.axis(var).extent) + lo + hi
             x = _pad_dim(x, dim, target)
         padded.append(x)
     return padded
+
+
+def _emit_blocked(spec: loopir.TraversalSpec, info: loopir.NestInfo,
+                  arrays: Sequence, scalars: Sequence,
+                  config: StridingConfig, interpret: bool):
+    """§5.1.1 loop blocking for 1-D nests: tile the single axis into a
+    ``[rows, 128·P]`` 2-D grid (the shape ``transforms.block`` gives the
+    schedule) and run the standard multi-striding pipeline on the
+    blocked spec — exactly the paper's gemversum/init recipe."""
+    ax = spec.axis(info.stride_axis)
+    n = ax.extent
+    cols = transforms.LANE * config.portion_unroll
+    rows = max(-(-n // cols), 1)
+    total = rows * cols
+    row_ax, lane_ax = ax.name + "__blk", ax.name + "__lane"
+
+    def remap(acc):
+        return dataclasses.replace(acc, index=(row_ax, lane_ax), halo=None)
+
+    spec2 = dataclasses.replace(
+        spec,
+        axes=(loopir.Axis(row_ax, rows), loopir.Axis(lane_ax, cols)),
+        reads=tuple(remap(a) for a in spec.reads),
+        writes=(remap(spec.write),),
+    )
+
+    def to2d(x):
+        return _pad_dim(x, 0, total).reshape(rows, cols)
+
+    out = emit_spec(spec2, [to2d(x) for x in arrays] + list(scalars),
+                    config, interpret=interpret)
+    return out.reshape(-1)[:n]
 
 
 def emit_spec(spec: loopir.TraversalSpec, inputs: Sequence,
               config: StridingConfig, *, interpret: bool):
     """The whole pipeline for one call: plan blocks → pad operands →
     rebuild the spec at padded extents → §5.1 default schedule →
-    emit → crop to the original domain."""
+    emit → crop to the original domain.  1-D nests are loop-blocked
+    into a 2-D tile grid first (§5.1.1)."""
     n = len(spec.reads)
     if len(inputs) != n + len(spec.scalars):
         raise ValueError(f"{spec.name}: expected {n} arrays + "
                          f"{len(spec.scalars)} scalars")
     arrays, scalars = list(inputs[:n]), list(inputs[n:])
+    info = loopir.classify(spec)
+    if info.blocked:
+        return _emit_blocked(spec, info, arrays, scalars, config, interpret)
     bp = transforms.plan_blocks(spec, config)
+    rows = spec.axis(bp.info.stride_axis).extent
+    if bp.info.stride_reduction and bp.rows != rows:
+        # zero-padded rows would have to contribute the combine identity,
+        # which only holds for bodies that are linear in the padded rows
+        # (and never for max) — refuse rather than silently corrupt
+        raise ValueError(
+            f"{spec.name}: a stride-axis reduction cannot pad the stride "
+            f"axis ({rows} rows, D={bp.d}); pick a D dividing the extent")
     arrays = _pad_arrays(spec, bp, arrays)
+    targets = {bp.info.stride_axis: bp.rows, bp.info.vector_axis: bp.cols}
     padded_axes = tuple(
-        dataclasses.replace(
-            ax, extent={bp.info.stride_axis: bp.rows,
-                        bp.info.vector_axis: bp.cols}[ax.name])
+        dataclasses.replace(ax, extent=targets.get(ax.name, ax.extent))
         for ax in spec.axes)
     spec_p = dataclasses.replace(spec, axes=padded_axes)
     sched = transforms.default_schedule(spec_p, config, blocks=bp)
@@ -415,6 +673,24 @@ def emit_spec(spec: loopir.TraversalSpec, inputs: Sequence,
 
 
 # ------------------------------------------------------------- op glue
+
+def run_spec(build_spec: Callable[..., loopir.TraversalSpec],
+             inputs: Sequence, config: StridingConfig, mode: str):
+    """Mode-dispatched spec execution (jit-traceable): the building block
+    composite gen ops fuse into one jitted program so multi-spec kernels
+    (bicg's two passes, adamw's triple write) cost one dispatch, like
+    their hand-written fused counterparts."""
+    spec = build_spec(*inputs)
+    if mode == "ref":
+        return loopir.evaluate(spec, inputs)
+    return emit_spec(spec, inputs, config, interpret=(mode == "interpret"))
+
+
+def _shape_key(inputs: Sequence) -> tuple:
+    # dtype objects hash/compare fast; str(dtype) costs ~15µs per call
+    return tuple((getattr(x, "shape", None), getattr(x, "dtype", None))
+                 for x in inputs)
+
 
 def make_kernel_op(name: str,
                    build_spec: Callable[..., loopir.TraversalSpec],
@@ -425,31 +701,37 @@ def make_kernel_op(name: str,
     mode dispatch (ref = spec interpreter / interpret / pallas), and
     config resolution (explicit > tune-cache > planner > default) run
     outside jit — identical plumbing to the hand-written ``ops.py``
-    wrappers, but the kernel itself is derived from the spec."""
+    wrappers, but the kernel itself is derived from the spec.
+
+    Classification and the Traffic signature are pure in the input
+    shapes/dtypes and memoized, so a hot-loop call costs the same
+    Python-side work as a hand ops wrapper."""
     from repro.kernels import common   # deferred: avoids import cycle
+
+    facts: dict[tuple, tuple] = {}     # shape key → (rows, traffic)
 
     @functools.partial(jax.jit, static_argnames=("config", "mode"))
     def _run(inputs: tuple, config: StridingConfig, mode: str):
-        spec = build_spec(*inputs)
-        if mode == "ref":
-            return loopir.evaluate(spec, inputs)
-        return emit_spec(spec, inputs, config,
-                         interpret=(mode == "interpret"))
+        return run_spec(build_spec, inputs, config, mode)
 
     def op(*inputs, config: Optional[StridingConfig] = None,
            mode: Optional[str] = None):
         mode = mode or common.kernel_mode()
-        spec = build_spec(*inputs)
-        info = loopir.classify(spec)
-        rows = spec.axis(info.stride_axis).extent
+        key = _shape_key(inputs)
+        if key not in facts:
+            spec = build_spec(*inputs)
+            info = loopir.classify(spec)
+            # blocked 1-D nests derive their tile grid from the config —
+            # pad+crop makes any D valid, so no divisibility clamp
+            rows = (None if info.blocked
+                    else spec.axis(info.stride_axis).extent)
+            facts[key] = (rows, loopir.traffic_of(spec, inputs[0].dtype,
+                                                  info=info))
+        rows, traffic = facts[key]
         lead = inputs[0]
-        # traffic is only consulted on a tune-cache miss; skip deriving
-        # it when an explicit config makes resolution trivial
-        traffic = (None if config is not None
-                   else loopir.traffic_of(spec, lead.dtype, info=info))
         cfg = common.resolve_config(
             name, lead.shape, lead.dtype, config, rows, default,
-            traffic=traffic, mode=mode)
+            traffic=(None if config is not None else traffic), mode=mode)
         return _run(tuple(inputs), cfg, mode)
 
     op.__name__ = name

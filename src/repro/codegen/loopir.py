@@ -48,20 +48,28 @@ __all__ = [
 
 PARALLEL = "parallel"
 REDUCTION = "reduction"
+BATCH = "batch"
 
 
 @dataclasses.dataclass(frozen=True)
 class Axis:
-    """One loop of the nest: ``for name in range(extent)``."""
+    """One loop of the nest: ``for name in range(extent)``.
+
+    ``kind="batch"`` marks an independent outer problem instance (e.g.
+    the batch dimension of a KV cache, or doitgen's ``r``): the emitter
+    lowers every batch axis to a leading ``pallas_call`` grid dimension,
+    outside the multi-striding transform entirely — streams, blocking
+    and vectorization all happen within one batch element.
+    """
 
     name: str
     extent: int
-    kind: str = PARALLEL  # "parallel" | "reduction"
+    kind: str = PARALLEL  # "parallel" | "reduction" | "batch"
 
     def __post_init__(self):
         if self.extent < 1:
             raise ValueError(f"axis {self.name!r}: extent must be >= 1")
-        if self.kind not in (PARALLEL, REDUCTION):
+        if self.kind not in (PARALLEL, REDUCTION, BATCH):
             raise ValueError(f"axis {self.name!r}: unknown kind {self.kind!r}")
 
 
@@ -108,7 +116,16 @@ class Access:
 
 @dataclasses.dataclass(frozen=True)
 class TraversalSpec:
-    """A whole kernel: iteration domain + access maps + jnp body."""
+    """A whole kernel: iteration domain + access maps + jnp body.
+
+    ``reduce`` is the combine op for nests whose *stride* axis is a
+    reduction ("sum" | "max"): per-stream partial results merge across
+    streams and grid steps with that op (the mxv_t / flash-decode
+    pattern).  ``full_width=True`` declares that the body needs the
+    entire vector extent in one block (e.g. a per-row mean, or a
+    reduction contracted inside the body) — the emitter then never
+    splits the vector axis across grid steps.
+    """
 
     name: str
     axes: tuple[Axis, ...]
@@ -117,6 +134,8 @@ class TraversalSpec:
     body: Callable[[Mapping[str, Any]], Any]
     scalars: tuple[str, ...] = ()
     out_dtype: Any = None   # default: dtype of the first read operand
+    reduce: str = "sum"     # stride-axis reduction combine ("sum" | "max")
+    full_width: bool = False
 
     def __post_init__(self):
         names = [ax.name for ax in self.axes]
@@ -125,13 +144,24 @@ class TraversalSpec:
         if len(self.writes) != 1:
             raise ValueError(f"{self.name}: exactly one write access "
                              f"supported, got {len(self.writes)}")
+        if self.reduce not in ("sum", "max"):
+            raise ValueError(f"{self.name}: unknown reduce {self.reduce!r}")
+        n_batch = sum(ax.kind == BATCH for ax in self.axes)
+        if any(ax.kind == BATCH for ax in self.axes[n_batch:]):
+            raise ValueError(f"{self.name}: batch axes must be outermost")
         known = set(names)
+        batch = {ax.name for ax in self.axes if ax.kind == BATCH}
         for acc in (*self.reads, *self.writes):
             for v in acc.index:
                 if v not in known:
                     raise ValueError(
                         f"{self.name}: access {acc.array!r} indexes unknown "
                         f"axis {v!r}")
+            n = sum(v in batch for v in acc.index)
+            if any(v in batch for v in acc.index[n:]):
+                raise ValueError(
+                    f"{self.name}: access {acc.array!r}: batch axis vars "
+                    "must form the leading index prefix")
         if self.writes[0].has_halo:
             raise ValueError(f"{self.name}: write access cannot have a halo")
 
@@ -188,29 +218,64 @@ class NestInfo:
     row_halo: tuple[int, int]   # max (lo, hi) halo along the stride axis
     col_halo: tuple[int, int]   # max (lo, hi) halo along the vector axis
     needs_interchange: bool
+    batch_axes: tuple[str, ...] = ()   # leading pallas grid dimensions
+    free_axes: tuple[str, ...] = ()    # whole-extent (resident) axes
+    stride_reduction: bool = False     # stride axis is reduced over
+    blocked: bool = False   # 1-D nest: loop-block into 2-D first (§5.1.1)
 
 
 def classify(spec: TraversalSpec) -> NestInfo:
     """Apply the paper's critical-access selection to pick the stride and
-    vector axes, then collect the halo facts the emitter needs."""
-    plan = plan_transform(to_loop_nest(spec))
-    if plan.needs_blocking:
-        raise NotImplementedError(
-            f"{spec.name}: 1-D traversals (loop-blocked striding, §5.1.1) "
-            "are not supported by the emitter yet")
+    vector axes, then collect the halo/batch/free facts the emitter
+    needs.  Batch axes sit outside the §5.1 selection; a 1-D non-batch
+    nest is flagged ``blocked`` (§5.1.1: the emitter loop-blocks it into
+    a 2-D tile grid before striding)."""
+    batch = tuple(ax.name for ax in spec.axes if ax.kind == BATCH)
+    inner = [ax for ax in spec.axes if ax.kind != BATCH]
+    if not inner:
+        raise ValueError(f"{spec.name}: nest has only batch axes")
+
+    def strip(idx: tuple[str, ...]) -> tuple[str, ...]:
+        return tuple(v for v in idx if v not in batch)
+
+    nest = LoopNest(
+        loops=tuple(ax.name for ax in inner),
+        accesses=tuple(ArrayAccess(a.array, strip(a.index))
+                       for a in (*spec.reads, *spec.writes)
+                       if strip(a.index)),
+        writes=tuple(a.array for a in spec.writes),
+    )
+    plan = plan_transform(nest)
     stride, vec = plan.stride_var, plan.contiguous_var
+    blocked = plan.needs_blocking
+    if blocked:
+        ax = spec.axis(stride)
+        if ax.kind != PARALLEL or batch:
+            raise NotImplementedError(
+                f"{spec.name}: 1-D loop-blocked nests must be a single "
+                "parallel axis (no reduction, no batch)")
+        if any(a.has_halo for a in spec.reads):
+            raise NotImplementedError(
+                f"{spec.name}: halos on a 1-D blocked nest")
+    free = tuple(ax.name for ax in inner if ax.name not in (stride, vec))
     row_lo = row_hi = col_lo = col_hi = 0
     for acc in spec.reads:
         lo, hi = acc.halo_of(stride)
         row_lo, row_hi = max(row_lo, lo), max(row_hi, hi)
         lo, hi = acc.halo_of(vec)
         col_lo, col_hi = max(col_lo, lo), max(col_hi, hi)
+    stride_red = (not blocked) and spec.axis(stride).kind == REDUCTION
     return NestInfo(
         stride_axis=stride, vector_axis=vec,
-        reduction=spec.axis(vec).kind == REDUCTION,
+        reduction=(not blocked) and spec.axis(vec).kind == REDUCTION,
         row_halo=(row_lo, row_hi), col_halo=(col_lo, col_hi),
         needs_interchange=plan.needs_interchange,
+        batch_axes=batch, free_axes=free,
+        stride_reduction=stride_red, blocked=blocked,
     )
+
+
+BLOCK_COLS = 1024   # nominal §5.1.1 tile width for 1-D blocked traffic
 
 
 def traffic_of(spec: TraversalSpec, dtype=jnp.float32,
@@ -218,7 +283,9 @@ def traffic_of(spec: TraversalSpec, dtype=jnp.float32,
     """Derive the planner's memory signature from the access maps: every
     read indexed by the stride axis contributes one DMA stream per stride
     (stencil row taps count once per tap, like the paper's Table 1 "n+2
-    load strides"); arrays not indexed by the stride axis are resident.
+    load strides"); arrays not indexed by the stride axis are resident
+    (batch extents are excluded — only one batch element is live).  A
+    1-D blocked nest reports the shape of its nominal 2-D tiling.
     """
     if info is None:
         info = classify(spec)
@@ -232,11 +299,19 @@ def traffic_of(spec: TraversalSpec, dtype=jnp.float32,
         else:
             n = 1
             for v, (lo, hi) in zip(acc.index, acc.halo):
+                if v in info.batch_axes:
+                    continue
                 n *= spec.axis(v).extent + lo + hi
             resident += n * itemsize
     for acc in spec.writes:
         if info.stride_axis in acc.index:
             writes += 1
+    if info.blocked:
+        n = spec.axis(info.stride_axis).extent
+        cols = min(n, BLOCK_COLS)
+        return Traffic(rows=max(-(-n // cols), 4), cols=cols, dtype=dtype,
+                       read_arrays=reads, write_arrays=writes,
+                       resident_bytes=resident)
     return Traffic(
         rows=spec.axis(info.stride_axis).extent,
         cols=spec.axis(info.vector_axis).extent,

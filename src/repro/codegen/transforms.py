@@ -13,6 +13,10 @@ concurrent streams instead of a sequential loop.
     d maximally-spaced concurrent segments (paper Fig 1 right)
   * :func:`vector_block` — like unroll but the inner part is the lane
     (vector) dimension of the emitted block
+  * :func:`block`        — §5.1.1 cache blocking: axis(N) →
+    grid(N/b, stride·b) × tile(b): contiguous tiles held in VMEM for
+    re-use; composes with the other transforms under the same
+    domain-preservation checker
 
 Every transform is checked by :func:`preserves_domain` (tests enumerate
 the domain).  :func:`default_schedule` runs the paper's full §5.1 recipe
@@ -32,7 +36,7 @@ from repro.core.striding import (SINGLE_STRIDED, StridingConfig,
 
 __all__ = [
     "LoopAxis", "Schedule", "BlockPlan", "schedule", "interchange",
-    "unroll", "stride_split", "vector_block", "multi_stride",
+    "unroll", "stride_split", "vector_block", "block", "multi_stride",
     "plan_blocks", "default_schedule", "iteration_domain",
     "preserves_domain",
 ]
@@ -41,6 +45,7 @@ GRID = "grid"        # sequential pallas grid dimension
 STREAM = "stream"    # D concurrent streams (one operand/DMA pipeline each)
 UNROLL = "unroll"    # unrolled into the kernel body (block rows)
 VECTOR = "vector"    # lane dimension of the emitted block
+BLOCK = "block"      # §5.1.1 cache tile materialized whole in VMEM
 
 LANE = 128
 
@@ -138,6 +143,17 @@ def stride_split(sched: Schedule, axis: str, d: int) -> Schedule:
     return _split(sched, axis, d, STREAM, GRID)
 
 
+def block(sched: Schedule, axis: str, size: int) -> Schedule:
+    """§5.1.1 cache blocking: tile ``axis`` into contiguous ``size``-wide
+    VMEM-resident tiles — grid(N/size) sequential steps, each holding one
+    whole tile for data re-use.  Multi-striding alone only fixes the
+    traversal order; blocking is what makes the streamed data *reused*
+    (the paper combines both for MXV/doitgen/PolyBench).  Composes with
+    :func:`stride_split` / :func:`unroll` / :func:`interchange` and is
+    checked by the same :func:`preserves_domain` algebra."""
+    return _split(sched, axis, size, GRID, BLOCK)
+
+
 def interchange(sched: Schedule, order: Sequence[int]) -> Schedule:
     """Permute the nest (paper §5.1: vectorizable axis → innermost)."""
     if sorted(order) != list(range(len(sched.loops))):
@@ -180,20 +196,28 @@ def plan_blocks(spec: loopir.TraversalSpec,
     """Pick (bm, bn) and padded extents for a spec + config.
 
     Row-haloed (stencil) nests use single-row blocks so each stencil tap
-    is its own stream operand; column-haloed nests keep the full padded
-    width in one block (taps are static lane shifts).  Everything else
-    follows the hand-written kernels' conventions: bn = 128·P lanes,
-    bm ≤ prefer_bm rows.
+    is its own stream operand; column-haloed and ``full_width`` nests
+    keep the full width in one block (taps are static lane shifts; body
+    row reductions see the whole row).  Everything else follows the
+    hand-written kernels' conventions: bn = 128·P lanes, and the §5.1.1
+    cache-block row count is ``config.block_rows`` when set (the planner/
+    autotuner sweep dimension), else ≤ ``prefer_bm`` rows.
     """
     info = loopir.classify(spec)
+    if info.blocked:
+        raise ValueError(
+            f"{spec.name}: 1-D nest — loop-block it into a 2-D tile grid "
+            "first (emit.emit_spec does this automatically)")
     d = config.stride_unroll
     rows = spec.axis(info.stride_axis).extent
     cols = spec.axis(info.vector_axis).extent
     rows_p = pad_to_multiple(rows, d)
     row_halo = info.row_halo != (0, 0)
     col_halo = info.col_halo != (0, 0)
+    if config.block_rows:
+        prefer_bm = config.block_rows
     bm = 1 if row_halo else choose_block(rows_p // d, prefer_bm)
-    if col_halo:
+    if col_halo or spec.full_width:
         bn, cols_p = cols, cols           # full-width blocks, no col grid
     else:
         cols_p = pad_to_multiple(cols, LANE)
@@ -205,8 +229,9 @@ def default_schedule(spec: loopir.TraversalSpec,
                      config: StridingConfig,
                      blocks: Optional[BlockPlan] = None) -> Schedule:
     """The paper's full §5.1 preparatory pipeline on a (padded) spec:
-    interchange so the contiguous axis is innermost, then
-    ``multi_stride`` with the planned blocking."""
+    batch axes stay leading grid loops, free axes become whole-extent
+    VMEM tiles (:data:`BLOCK`), then interchange so the contiguous axis
+    is innermost and ``multi_stride`` with the planned blocking."""
     bp = blocks if blocks is not None else plan_blocks(spec, config)
     if (spec.axis(bp.info.stride_axis).extent != bp.rows
             or spec.axis(bp.info.vector_axis).extent != bp.cols):
@@ -214,6 +239,10 @@ def default_schedule(spec: loopir.TraversalSpec,
             f"{spec.name}: spec extents must match the (padded) BlockPlan; "
             "pad inputs and rebuild the spec first (see emit.emit_spec)")
     s = schedule(spec, config)
+    if bp.info.free_axes:
+        s = dataclasses.replace(s, loops=tuple(
+            dataclasses.replace(l, kind=BLOCK) if l.axis in bp.info.free_axes
+            else l for l in s.loops))
     vec_pos = _locate(s, bp.info.vector_axis)
     if vec_pos != len(s.loops) - 1:
         order = [i for i in range(len(s.loops)) if i != vec_pos] + [vec_pos]

@@ -13,6 +13,7 @@ framework can auto-configure:
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import jax.numpy as jnp
 
@@ -53,13 +54,15 @@ class Plan:
     ranked: tuple = ()         # [(config, bw), ...] best-first (for sweeps)
 
 
-def _block_bytes(traffic: Traffic, portion: int) -> int:
+def _block_bytes(traffic: Traffic, portion: int, block_rows: int = 0) -> int:
     sub, lane = layout.sublane_tile(traffic.dtype)
-    return sub * lane * portion * jnp.dtype(traffic.dtype).itemsize
+    rows = block_rows or sub   # §5.1.1 cache block; default one sublane tile
+    return rows * lane * portion * jnp.dtype(traffic.dtype).itemsize
 
 
 def _vmem(traffic: Traffic, cfg: StridingConfig) -> int:
-    per_stream = _block_bytes(traffic, cfg.portion_unroll) * cfg.lookahead
+    per_stream = _block_bytes(traffic, cfg.portion_unroll,
+                              cfg.block_rows) * cfg.lookahead
     return (cfg.stride_unroll * traffic.arrays_per_stride * per_stream
             + traffic.resident_bytes)
 
@@ -70,8 +73,18 @@ def rank_configs(traffic: Traffic,
                  max_streams: int = 16,
                  max_unrolls: int = 32,
                  pad_layout: bool = True,
-                 lookahead: int = 2) -> list[tuple[StridingConfig, float, int]]:
-    """All feasible configs scored best-first: [(config, bw, padded_cols)]."""
+                 lookahead: int = 2,
+                 block_rows_candidates: Sequence[int] = (0,),
+                 ) -> list[tuple[StridingConfig, float, int]]:
+    """All feasible configs scored best-first: [(config, bw, padded_cols)].
+
+    ``block_rows_candidates`` adds the §5.1.1 cache-blocking dimension to
+    the sweep: each entry is a per-stream block-row tile (0 = emitter
+    default).  Larger blocks amortize DMA descriptors (bigger transfers)
+    but cost ``D · arrays · block · lookahead`` VMEM, so infeasible
+    (block, D, P) points are pruned against ``vmem_budget`` exactly like
+    plain (D, P) points.
+    """
     itemsize = jnp.dtype(traffic.dtype).itemsize
     out = []
     for d in valid_stride_unrolls(traffic.rows, max_d=max_streams):
@@ -90,19 +103,24 @@ def rank_configs(traffic: Traffic,
         for p in (1, 2, 4, 8):
             if d * p > max_unrolls:
                 continue
-            cfg = StridingConfig(d, p, lookahead=lookahead)
-            vmem = _vmem(traffic, cfg)
-            if vmem > vmem_budget:
-                continue
-            n_write = d * (traffic.write_arrays + traffic.rw_arrays)
-            bw = model.throughput(cfg, _block_bytes(traffic, 1),
-                                  spacing_bytes=spacing,
-                                  n_write_streams=n_write)
-            out.append((cfg, bw, cols))
+            for bm in block_rows_candidates:
+                if bm and bm > max(traffic.rows // d, 1):
+                    continue     # tile taller than a stream's segment
+                cfg = StridingConfig(d, p, lookahead=lookahead,
+                                     block_rows=bm)
+                vmem = _vmem(traffic, cfg)
+                if vmem > vmem_budget:
+                    continue
+                n_write = d * (traffic.write_arrays + traffic.rw_arrays)
+                bw = model.throughput(cfg, _block_bytes(traffic, 1, bm),
+                                      spacing_bytes=spacing,
+                                      n_write_streams=n_write)
+                out.append((cfg, bw, cols))
     if not out:
         raise ValueError(f"no feasible striding config for {traffic}")
-    # best bandwidth first; tie-break toward smaller D then smaller P
-    out.sort(key=lambda t: (-t[1], t[0].stride_unroll, t[0].portion_unroll))
+    # best bandwidth first; tie-break toward smaller D, P, then block
+    out.sort(key=lambda t: (-t[1], t[0].stride_unroll, t[0].portion_unroll,
+                            t[0].block_rows))
     return out
 
 

@@ -39,12 +39,17 @@ class StridingConfig:
         the loop body — the paper's default, higher throughput §4.1) or
         "interleaved" (round-robin across streams — used for the §4.4
         non-temporal store comparison).
+      block_rows: §5.1.1 cache-block size — rows each stream processes
+        per grid step (VMEM re-use tile).  0 = let the emitter pick its
+        default; the planner ranks explicit sizes against the VMEM
+        budget and the autotuner sweeps them.
     """
 
     stride_unroll: int = 1
     portion_unroll: int = 1
     lookahead: int = 2
     arrangement: str = "grouped"
+    block_rows: int = 0
 
     def __post_init__(self):
         if self.stride_unroll < 1:
@@ -55,6 +60,8 @@ class StridingConfig:
             raise ValueError(f"lookahead must be >= 1, got {self.lookahead}")
         if self.arrangement not in ("grouped", "interleaved"):
             raise ValueError(f"unknown arrangement {self.arrangement!r}")
+        if self.block_rows < 0:
+            raise ValueError(f"block_rows must be >= 0, got {self.block_rows}")
 
     @property
     def unrolls(self) -> int:

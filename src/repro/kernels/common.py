@@ -69,10 +69,13 @@ def pad_axis(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
 # wrappers.
 
 
-def effective_config(config: StridingConfig | None, rows: int,
+def effective_config(config: StridingConfig | None, rows: int | None,
                      default: StridingConfig) -> StridingConfig:
-    """Clamp a config's stride_unroll to divide `rows`."""
+    """Clamp a config's stride_unroll to divide `rows` (``rows=None`` =
+    no divisibility constraint — the kernel pads+crops instead)."""
     cfg = config or default
+    if rows is None:
+        return cfg
     d = cfg.stride_unroll
     while rows % d != 0:
         d -= 1
@@ -87,7 +90,7 @@ def effective_config(config: StridingConfig | None, rows: int,
 _plan_memo: dict[tuple, StridingConfig | None] = {}
 
 
-def resolve_config(kernel: str, shape, dtype, config, rows: int,
+def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
                    default: StridingConfig, traffic=None,
                    mode: str | None = None) -> StridingConfig:
     """Config resolution chain for an op wrapper (paper §6.3 policy):
@@ -97,7 +100,9 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int,
 
     Runs *outside* jax.jit on purpose: a tune-cache write must be visible
     to the next call, which a jit-cached trace would freeze out.  The
-    result is always clamped so stride_unroll divides ``rows``.
+    result is clamped so stride_unroll divides ``rows``; pass
+    ``rows=None`` when the kernel's pad+crop makes any D valid (§5.1.1
+    loop-blocked 1-D nests).
     """
     if config is None:
         from repro.registry import tunecache

@@ -1,7 +1,8 @@
 """Codegen-derived kernel family: hand-written families re-expressed as
 ``TraversalSpec``s and lowered by ``repro.codegen`` — no Pallas by hand.
 
-Three ported archetypes (each ~15-line spec vs a ~100-line hand kernel):
+This module holds the first three ported archetypes (each a ~15-line
+spec vs a ~100-line hand kernel):
 
   * ``stream_copy_gen``  — streaming elementwise (the hand ``stream.copy``)
   * ``mxv_gen``          — vector-axis reduction (the hand ``mxv``)
@@ -10,6 +11,15 @@ Three ported archetypes (each ~15-line spec vs a ~100-line hand kernel):
 plus ``stream_triad_gen`` (STREAM triad a = b + αc, paper Table 1 class),
 which exists *only* as a spec — the registry, conformance matrix,
 autotuner, and fig6 benchmark all pick it up with zero bespoke plumbing.
+
+The remaining families live in sibling modules (every hand family now
+has a generated counterpart):
+
+  * ``polybench``  — bicg, the four gemver steps, conv3x3, doitgen
+    (stride-axis reductions, rank-1 row streams, §5.1.1 loop blocking,
+    batch axes);
+  * ``framework``  — decode_attn, rmsnorm, adamw (batched two-pass
+    stream reductions, full-width rows, blocked 1-D optimizer nests).
 
 Each ``*_gen`` variant registers with the hand family's problem sizes and
 oracle, so the generated kernels are conformance-tested on exactly the
@@ -27,7 +37,12 @@ from repro.kernels.mxv import ref as _mxv_ref
 from repro.kernels.stream import ref as _stream_ref
 from repro.registry.base import KernelSpec, register
 
-__all__ = ["stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen"]
+__all__ = [
+    "stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen",
+    "bicg_gen", "gemver_outer_gen", "gemver_sum_gen", "gemver_mxv1_gen",
+    "gemver_mxv2_gen", "conv3x3_gen", "doitgen_gen",
+    "decode_attn_gen", "rmsnorm_gen", "adamw_update_gen",
+]
 
 
 # ------------------------------------------------------------- specs
@@ -176,3 +191,13 @@ register(KernelSpec(
     cache_shape=lambda s: (s["h"], s["w"]),
     bench_sizes=_JAC_BENCH,
     rtol=1e-5, atol=1e-5, tags=("paper", "gen")))
+
+
+# the remaining ported families register on import (they self-register
+# exactly like the family packages do)
+from repro.kernels.gen.polybench import (bicg_gen, conv3x3_gen,   # noqa: E402
+                                         doitgen_gen, gemver_mxv1_gen,
+                                         gemver_mxv2_gen, gemver_outer_gen,
+                                         gemver_sum_gen)
+from repro.kernels.gen.framework import (adamw_update_gen,        # noqa: E402
+                                         decode_attn_gen, rmsnorm_gen)

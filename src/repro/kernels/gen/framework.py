@@ -1,0 +1,324 @@
+"""Codegen ports of the framework kernel families: flash-decode GQA
+attention, fused RMSNorm, and the fused AdamW step — as
+``TraversalSpec``s, no hand-written Pallas.
+
+  * ``decode_attn_gen`` — two generated *stride-axis reduction* passes
+    over the KV cache, both batched (``b`` is a batch grid dim) with the
+    sequence axis split into D streams: pass 1 is a ``reduce="max"``
+    sweep producing the global score max per head (numerical stability),
+    pass 2 a ``reduce="sum"`` sweep producing ``[Σ softmax·V | Σ w]``
+    concatenated along one write axis; the wrapper divides.  This
+    decomposes online softmax into two linear stream-reductions —
+    exactly what the generic combine can merge across streams.
+  * ``rmsnorm_gen``     — ``full_width`` streaming nest: the body takes
+    a per-row mean over the whole vector extent.
+  * ``adamw_update_gen`` — three 1-D nests over the flattened parameter,
+    each loop-blocked into a ``[rows, 128·P]`` tile grid (§5.1.1) — the
+    p′/m′/v′ outputs of the hand kernel's fused triple write.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec, run_spec
+from repro.core import Traffic
+from repro.core.striding import StridingConfig
+from repro.kernels.adamw import ref as _adamw_ref
+from repro.kernels.common import example_input as _rand
+from repro.kernels.decode_attn import ref as _da_ref
+from repro.kernels.gen.polybench import _mode, _resolve
+from repro.kernels.rmsnorm import ref as _rms_ref
+from repro.registry.base import KernelSpec, register
+
+__all__ = ["decode_attn_gen", "rmsnorm_gen", "adamw_update_gen"]
+
+
+# --------------------------------------------------------- decode attn
+
+def _decode_axes(b, s, e, hq, dh):
+    return (Axis("b", b, kind="batch"), Axis("s", s, kind="reduction"),
+            Axis("e", e), Axis("f", hq * dh))
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_specs(hkv: int, dh: int):
+    """Per-(Hkv, dh) pair of generated spec builders (the head split is
+    a static reshape inside the bodies)."""
+
+    def heads(block, rows):
+        return block.reshape(block.shape[0], rows, hkv, dh)
+
+    def scores(env, scale):
+        kb = env["K"]
+        b, rows = kb.shape[0], kb.shape[1]
+        hq = env["q"].shape[-1] // dh
+        g = hq // hkv
+        q4 = env["q"].reshape(b, hkv, g, dh).astype(jnp.float32)
+        k4 = heads(kb, rows).astype(jnp.float32)
+        s4 = jnp.einsum("bhgd,bshd->bhgs", q4, k4) * scale
+        return s4.reshape(b, hq, rows)
+
+    def mx_spec(kc2, q2):
+        b, s, e = kc2.shape
+        hq = q2.shape[-1] // dh
+        scale = 1.0 / (dh ** 0.5)
+        return TraversalSpec(
+            name="decode_attn_mx_gen",
+            axes=_decode_axes(b, s, e, hq, dh) + (Axis("h", hq),),
+            reads=(Access("K", ("b", "s", "e")), Access("q", ("b", "f"))),
+            writes=(Access("m", ("b", "h")),),
+            body=lambda env: scores(env, scale).max(axis=-1),
+            out_dtype=jnp.float32, reduce="max", full_width=True,
+        )
+
+    def av_spec(kc2, vc2, q2, m):
+        b, s, e = kc2.shape
+        hq = q2.shape[-1] // dh
+        g = hq // hkv
+        scale = 1.0 / (dh ** 0.5)
+
+        def body(env):
+            sc = scores(env, scale)                       # (B, Hq, rows)
+            w = jnp.exp(sc - env["m"][..., None])
+            b_, rows = w.shape[0], w.shape[-1]
+            v4 = heads(env["V"], rows).astype(jnp.float32)
+            pv = jnp.einsum("bhgs,bshd->bhgd",
+                            w.reshape(b_, hkv, g, rows), v4)
+            num = pv.reshape(b_, hq, dh)
+            den = w.sum(axis=-1)[..., None]
+            return jnp.concatenate([num, den], axis=-1
+                                   ).reshape(b_, hq * (dh + 1))
+
+        return TraversalSpec(
+            name="decode_attn_av_gen",
+            axes=_decode_axes(b, s, e, hq, dh)
+            + (Axis("h", hq), Axis("z", hq * (dh + 1))),
+            reads=(Access("K", ("b", "s", "e")),
+                   Access("V", ("b", "s", "e")),
+                   Access("q", ("b", "f")), Access("m", ("b", "h"))),
+            writes=(Access("o", ("b", "z")),),
+            body=body, out_dtype=jnp.float32, full_width=True,
+        )
+
+    return mx_spec, av_spec
+
+
+@functools.partial(jax.jit, static_argnames=("hkv", "dh", "config", "mode"))
+def _decode_run(q, kc, vc, hkv, dh, config, mode):
+    b, hq = q.shape[0], q.shape[1]
+    s, e = kc.shape[1], hkv * dh
+    kc2, vc2 = kc.reshape(b, s, e), vc.reshape(b, s, e)
+    q2 = q.reshape(b, hq * dh)
+    mx_spec, av_spec = _decode_specs(hkv, dh)
+    m = run_spec(mx_spec, (kc2, q2), config, mode)         # (b, hq) f32
+    out = run_spec(av_spec, (kc2, vc2, q2, m), config, mode)
+    out = out.reshape(b, hq, dh + 1)
+    o = out[..., :dh] / jnp.maximum(out[..., dh:], 1e-20)
+    return o.astype(q.dtype)
+
+
+def decode_attn_gen(q, kc, vc, config=None, mode=None):
+    """One-token GQA attention against a [B, S, Hkv, dh] KV cache,
+    generated: two stream-reduction sweeps of the (flattened) cache
+    fused into one program."""
+    mode = _mode(mode)
+    s, hkv, dh = kc.shape[1], kc.shape[2], kc.shape[3]
+    cfg = _resolve("decode_attn_gen", kc, config, mode, s,
+                   StridingConfig(4, 1),
+                   Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype,
+                           read_arrays=2))
+    return _decode_run(q, kc, vc, hkv=hkv, dh=dh, config=cfg, mode=mode)
+
+
+# ------------------------------------------------------------- rmsnorm
+
+def _rms_body(env):
+    xf = env["x"].astype(jnp.float32)
+    rms = jnp.sqrt((xf * xf).mean(axis=-1, keepdims=True) + env["eps"])
+    return (xf / rms) * env["w"].astype(jnp.float32)
+
+
+def rmsnorm_spec(x, w, eps=0.0) -> TraversalSpec:
+    t, dm = x.shape
+    return TraversalSpec(
+        name="rmsnorm_gen",
+        axes=(Axis("i", t), Axis("j", dm)),
+        reads=(Access("x", ("i", "j")), Access("w", ("j",))),
+        writes=(Access("o", ("i", "j")),),
+        scalars=("eps",),
+        body=_rms_body,
+        full_width=True,   # the per-row mean needs the whole row
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _rms_run(x, w, eps, config, mode):
+    shape = x.shape
+    out = run_spec(rmsnorm_spec, (x.reshape(-1, shape[-1]), w, eps),
+                   config, mode)
+    return out.reshape(shape)
+
+
+def rmsnorm_gen(x, w, eps=1e-6, config=None, mode=None):
+    mode = _mode(mode)
+    t = 1
+    for s in x.shape[:-1]:
+        t *= s
+    cfg = _resolve("rmsnorm_gen", x, config, mode, max(t, 1),
+                   StridingConfig(4, 1),
+                   Traffic(rows=max(t, 1), cols=x.shape[-1], dtype=x.dtype,
+                           read_arrays=1, write_arrays=1,
+                           resident_bytes=x.shape[-1] * 4))
+    return _rms_run(x, w, eps, config=cfg, mode=mode)
+
+
+# --------------------------------------------------------------- adamw
+
+_ADAMW_COLS = 512   # §5.1.1 blocking of the flattened tensor (hand _COLS)
+
+
+def adamw_spec(p2, g2, m2, v2, lr=0.0, b1=0.0, b2=0.0, eps=0.0, wd=0.0,
+               bc1=1.0, bc2=1.0) -> TraversalSpec:
+    """One fused spec for all three outputs: the free axis ``t`` stacks
+    (p', m', v') so the single write carries the hand kernel's triple
+    store — 4 load + 3 store streams per stride, no re-reads."""
+    rows, cols = p2.shape
+
+    def body(env):
+        pf = env["p"].astype(jnp.float32)
+        gf = env["g"].astype(jnp.float32)
+        m_new = env["b1"] * env["m"] + (1.0 - env["b1"]) * gf
+        v_new = env["b2"] * env["v"] + (1.0 - env["b2"]) * gf * gf
+        update = ((m_new / env["bc1"])
+                  / (jnp.sqrt(v_new / env["bc2"]) + env["eps"])
+                  + env["wd"] * pf)
+        return jnp.stack([pf - env["lr"] * update, m_new, v_new], axis=-2)
+
+    return TraversalSpec(
+        name="adamw_update_gen",
+        axes=(Axis("i", rows), Axis("t", 3), Axis("j", cols)),
+        reads=(Access("p", ("i", "j")), Access("g", ("i", "j")),
+               Access("m", ("i", "j")), Access("v", ("i", "j"))),
+        writes=(Access("o", ("i", "t", "j")),),
+        scalars=("lr", "b1", "b2", "eps", "wd", "bc1", "bc2"),
+        body=body,
+        out_dtype=jnp.float32,
+    )
+
+
+_ADAMW_DEFAULT = StridingConfig(2, 2)
+
+
+def _adamw_blocking(n: int) -> tuple[int, int]:
+    cols = min(_ADAMW_COLS, max(128, n))
+    return -(-n // cols), cols
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _adamw_run(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2, config, mode):
+    shape = p.shape
+    n = p.size
+    rows, cols = _adamw_blocking(max(n, 1))
+
+    def flat(a, dt):
+        a = a.reshape(-1).astype(dt)
+        return jnp.pad(a, (0, rows * cols - n)).reshape(rows, cols)
+
+    out = run_spec(adamw_spec,
+                   (flat(p, p.dtype), flat(g, g.dtype),
+                    flat(m, jnp.float32), flat(v, jnp.float32),
+                    lr, b1, b2, eps, wd, bc1, bc2), config, mode)
+
+    def unflat(a, dt):
+        return a.reshape(-1)[:n].reshape(shape).astype(dt)
+
+    return (unflat(out[:, 0, :], p.dtype), unflat(out[:, 1, :], jnp.float32),
+            unflat(out[:, 2, :], jnp.float32))
+
+
+def adamw_update_gen(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
+                     bc1=1.0, bc2=1.0, config=None, mode=None):
+    """Fused-AdamW step (generated): the flattened tensor is §5.1.1
+    loop-blocked into [rows, 512] tiles and one spec writes (p', m', v')
+    through a stacked free axis.  Returns (p', m', v')."""
+    mode = _mode(mode)
+    n = 1
+    for s in p.shape:
+        n *= s
+    rows, cols = _adamw_blocking(max(n, 1))
+    # rows=None: pad+crop inside the emitter makes any D valid, no
+    # divisibility clamp against the tile count
+    cfg = _resolve("adamw_update_gen", p, config, mode, None,
+                   _ADAMW_DEFAULT,
+                   Traffic(rows=rows, cols=cols, dtype=p.dtype,
+                           read_arrays=4, write_arrays=3))
+    return _adamw_run(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2,
+                      config=cfg, mode=mode)
+
+
+# ---------------------------------------------------------- registry
+
+_DA_SIZES = {"b": 1, "s": 256, "hq": 4, "hkv": 2, "dh": 64}
+_DA_ALIASED = {"b": 1, "s": 512, "hq": 4, "hkv": 2, "dh": 64}
+
+
+def _da_inputs(s, dt):
+    return (_rand((s["b"], s["hq"], s["dh"]), 0, dt),
+            _rand((s["b"], s["s"], s["hkv"], s["dh"]), 1, dt),
+            _rand((s["b"], s["s"], s["hkv"], s["dh"]), 2, dt))
+
+
+register(KernelSpec(
+    name="decode_attn_gen", family="gen", fn=decode_attn_gen,
+    make_inputs=_da_inputs,
+    run=lambda inp, cfg, mode: decode_attn_gen(inp[0], inp[1], inp[2],
+                                               config=cfg, mode=mode),
+    ref=lambda inp, cfg: _da_ref.decode_attn_ref(inp[0], inp[1], inp[2]),
+    default_sizes=_DA_SIZES, aliased_sizes=_DA_ALIASED,
+    traffic=lambda s, dt: Traffic(rows=s["s"], cols=s["hkv"] * s["dh"],
+                                  dtype=dt, read_arrays=2),
+    cache_shape=lambda s: (s["b"], s["s"], s["hkv"], s["dh"]),
+    bench_sizes={"b": 8, "s": 8192, "hq": 32, "hkv": 8, "dh": 128},
+    rtol=2e-5, atol=2e-5, tags=("framework", "gen")))
+
+register(KernelSpec(
+    name="rmsnorm_gen", family="gen", fn=rmsnorm_gen,
+    make_inputs=lambda s, dt: (_rand((s["t"], s["dm"]), 0, dt),
+                               _rand((s["dm"],), 1, dt)),
+    run=lambda inp, cfg, mode: rmsnorm_gen(inp[0], inp[1], config=cfg,
+                                           mode=mode),
+    ref=lambda inp, cfg: _rms_ref.rmsnorm_ref(inp[0], inp[1]),
+    default_sizes={"t": 32, "dm": 256}, aliased_sizes={"t": 32, "dm": 128},
+    traffic=lambda s, dt: Traffic(rows=s["t"], cols=s["dm"], dtype=dt,
+                                  read_arrays=1, write_arrays=1,
+                                  resident_bytes=s["dm"] * 4),
+    cache_shape=lambda s: (s["t"], s["dm"]),
+    bench_sizes={"t": 4096, "dm": 4096},
+    rtol=1e-5, atol=1e-5, tags=("framework", "gen")))
+
+_ADAMW_HYPER = dict(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=0.01,
+                    bc1=0.5, bc2=0.25)
+
+
+def _adamw_inputs(s, dt):
+    shape = (s["rows"], s["cols"])
+    return (_rand(shape, 0, dt), _rand(shape, 1, dt), _rand(shape, 2, dt),
+            jnp.abs(_rand(shape, 3)))
+
+
+register(KernelSpec(
+    name="adamw_update_gen", family="gen", fn=adamw_update_gen,
+    make_inputs=_adamw_inputs,
+    run=lambda inp, cfg, mode: adamw_update_gen(*inp, config=cfg,
+                                                mode=mode, **_ADAMW_HYPER),
+    ref=lambda inp, cfg: _adamw_ref.adamw_ref(*inp, **_ADAMW_HYPER),
+    default_sizes={"rows": 60, "cols": 100},
+    aliased_sizes={"rows": 128, "cols": 128},
+    # 4 read + 3 write arrays per stride at the nominal 1-D blocking
+    traffic=lambda s, dt: Traffic(
+        rows=max(s["rows"] * s["cols"] // 1024, 4), cols=1024, dtype=dt,
+        read_arrays=4, write_arrays=3),
+    cache_shape=lambda s: (s["rows"], s["cols"]),
+    bench_sizes={"rows": 4096, "cols": 1024},
+    rtol=1e-5, atol=1e-6, tags=("framework", "gen")))

@@ -1,0 +1,361 @@
+"""Codegen ports of the PolyBench paper families (§5.1.1 blocking wave):
+bicg, the four gemver steps, conv3x3 and doitgen as ``TraversalSpec``s —
+no hand-written Pallas.  Each variant registers with its hand family's
+problem sizes and oracle so it runs on the identical conformance matrix.
+
+Archetypes exercised here (all new emitter paths):
+
+  * ``bicg_s`` / ``gemver_mxv1`` — *stride-axis* reduction: the streamed
+    axis itself is reduced, D partial rows merge into one full-width
+    accumulator (the mxv_t pattern).
+  * ``gemver_outer``            — rank-1 row streams (u vectors ride the
+    same D-stream split as the matrix).
+  * ``gemver_sum``              — 1-D nest, loop-blocked into a
+    ``[rows, 128·P]`` tile grid before striding (paper gemversum).
+  * ``conv3x3``                 — row+column stencil halo with the nine
+    weights lowered as scalars.
+  * ``doitgen``                 — batched 3-D nest: ``r`` is a batch
+    grid dimension, ``q`` the stride axis, ``s`` contracted inside the
+    body against the VMEM-resident ``C4`` (vectorize ``p``, the paper's
+    own critical-access analysis).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.codegen import (Access, Axis, TraversalSpec, make_kernel_op,
+                           run_spec, tap, traffic_of)
+from repro.core import Traffic
+from repro.core.striding import StridingConfig
+from repro.kernels.bicg import ref as _bicg_ref
+from repro.kernels.common import example_input as _rand
+from repro.kernels.conv3x3 import ref as _conv_ref
+from repro.kernels.doitgen import ref as _doit_ref
+from repro.kernels.gemver import ref as _gem_ref
+from repro.registry.base import KernelSpec, register
+
+__all__ = ["bicg_gen", "gemver_outer_gen", "gemver_sum_gen",
+           "gemver_mxv1_gen", "gemver_mxv2_gen", "conv3x3_gen",
+           "doitgen_gen"]
+
+
+def _resolve(kernel: str, lead, config, mode, rows: int,
+             default: StridingConfig, traffic):
+    """Composite ops resolve one config under their own name (explicit >
+    tune-cache > planner > default) and fuse every inner generated spec
+    into a single jitted program — one dispatch, like the hand-written
+    fused kernels."""
+    from repro.kernels import common
+    return common.resolve_config(
+        kernel, lead.shape, lead.dtype, config, rows, default,
+        traffic=(None if config is not None else traffic), mode=mode)
+
+
+def _mode(mode):
+    if mode is None:
+        from repro.kernels import common
+        return common.kernel_mode()
+    return mode
+
+
+# ---------------------------------------------------------------- bicg
+
+def bicg_q_spec(a, p) -> TraversalSpec:
+    m, n = a.shape
+    return TraversalSpec(
+        name="bicg_q_gen",
+        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
+        reads=(Access("A", ("i", "j")), Access("p", ("j",))),
+        writes=(Access("q", ("i",)),),
+        body=lambda env: jnp.dot(env["A"], env["p"],
+                                 preferred_element_type=jnp.float32),
+    )
+
+
+def bicg_s_spec(a, r) -> TraversalSpec:
+    """s = rᵀA: the reduction runs over the *streamed* rows — every
+    stream's partial row of s merges across D streams and grid steps."""
+    m, n = a.shape
+    return TraversalSpec(
+        name="bicg_s_gen",
+        axes=(Axis("i", m, kind="reduction"), Axis("j", n)),
+        reads=(Access("A", ("i", "j")), Access("r", ("i",))),
+        writes=(Access("s", ("j",)),),
+        body=lambda env: jnp.dot(env["r"], env["A"],
+                                 preferred_element_type=jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _bicg_run(a, r, p, config, mode):
+    return (run_spec(bicg_q_spec, (a, p), config, mode),
+            run_spec(bicg_s_spec, (a, r), config, mode))
+
+
+def bicg_gen(a, r, p, config=None, mode=None):
+    """q = A p ; s = Aᵀ r (generated; two specs fused in one program)."""
+    mode = _mode(mode)
+    m, n = a.shape
+    cfg = _resolve("bicg_gen", a, config, mode, m, StridingConfig(4, 2),
+                   Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2))
+    return _bicg_run(a, r, p, config=cfg, mode=mode)
+
+
+# -------------------------------------------------------------- gemver
+
+def gemver_outer_spec(a, u1, v1, u2, v2) -> TraversalSpec:
+    m, n = a.shape
+    return TraversalSpec(
+        name="gemver_outer_gen",
+        axes=(Axis("i", m), Axis("j", n)),
+        reads=(Access("A", ("i", "j")),
+               Access("u1", ("i",)), Access("v1", ("j",)),
+               Access("u2", ("i",)), Access("v2", ("j",))),
+        writes=(Access("o", ("i", "j")),),
+        body=lambda env: (env["A"]
+                          + env["u1"][..., None] * env["v1"][None, :]
+                          + env["u2"][..., None] * env["v2"][None, :]),
+    )
+
+
+def gemver_sum_spec(x, z) -> TraversalSpec:
+    """1-D x+z: classified ``blocked`` — the emitter tiles it into a
+    ``[rows, 128·P]`` grid (§5.1.1) before the D-stream split."""
+    n = x.shape[0]
+    return TraversalSpec(
+        name="gemver_sum_gen",
+        axes=(Axis("i", n),),
+        reads=(Access("x", ("i",)), Access("z", ("i",))),
+        writes=(Access("o", ("i",)),),
+        body=lambda env: env["x"] + env["z"],
+    )
+
+
+def gemver_mxv1_spec(a, y, beta=0.0) -> TraversalSpec:
+    """β·(Aᵀy): pure stride-axis reduction (the affine +x lives in the
+    composite wrapper — partials must stay linear to merge)."""
+    m, n = a.shape
+    return TraversalSpec(
+        name="gemver_mxv1_gen",
+        axes=(Axis("i", m, kind="reduction"), Axis("j", n)),
+        reads=(Access("A", ("i", "j")), Access("y", ("i",))),
+        writes=(Access("s", ("j",)),),
+        scalars=("beta",),
+        body=lambda env: env["beta"] * jnp.dot(
+            env["y"], env["A"], preferred_element_type=jnp.float32),
+    )
+
+
+def gemver_mxv2_spec(a, x, alpha=0.0) -> TraversalSpec:
+    m, n = a.shape
+    return TraversalSpec(
+        name="gemver_mxv2_gen",
+        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
+        reads=(Access("A", ("i", "j")), Access("x", ("j",))),
+        writes=(Access("w", ("i",)),),
+        scalars=("alpha",),
+        body=lambda env: env["alpha"] * jnp.dot(
+            env["A"], env["x"], preferred_element_type=jnp.float32),
+    )
+
+
+gemver_outer_gen = make_kernel_op("gemver_outer_gen", gemver_outer_spec,
+                                  default=StridingConfig(4, 2))
+gemver_sum_gen = make_kernel_op("gemver_sum_gen", gemver_sum_spec,
+                                default=StridingConfig(4, 2))
+gemver_mxv2_gen = make_kernel_op("gemver_mxv2_gen", gemver_mxv2_spec,
+                                 default=StridingConfig(4, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _mxv1_run(a, y, x, beta, config, mode):
+    return x + run_spec(gemver_mxv1_spec, (a, y, beta), config, mode)
+
+
+def gemver_mxv1_gen(a, y, x, beta, config=None, mode=None):
+    """x = x + β Aᵀ y (generated core + affine update, one program)."""
+    mode = _mode(mode)
+    m, n = a.shape
+    cfg = _resolve("gemver_mxv1_gen", a, config, mode, m,
+                   StridingConfig(4, 2),
+                   Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2))
+    return _mxv1_run(a, y, x, beta, config=cfg, mode=mode)
+
+
+# ------------------------------------------------------------- conv3x3
+
+_C3_HALO = ((1, 1), (1, 1))
+_C3_NAMES = tuple(f"w{r}{c}" for r in range(3) for c in range(3))
+
+
+def _conv_body(env):
+    x = env["x"].astype(jnp.float32)
+    acc = None
+    for idx, name in enumerate(_C3_NAMES):
+        r, c = divmod(idx, 3)
+        term = env[name] * tap(x, _C3_HALO, r - 1, c - 1)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def conv3x3_spec(x, *w9) -> TraversalSpec:
+    h, w = x.shape
+    return TraversalSpec(
+        name="conv3x3_gen",
+        axes=(Axis("i", h - 2), Axis("j", w - 2)),
+        reads=(Access("x", ("i", "j"), halo=_C3_HALO),),
+        writes=(Access("o", ("i", "j")),),
+        scalars=_C3_NAMES,
+        body=_conv_body,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _conv_run(x, w, config, mode):
+    w9 = [w[r, c] for r in range(3) for c in range(3)]
+    return run_spec(conv3x3_spec, (x, *w9), config, mode)
+
+
+def conv3x3_gen(x, w, config=None, mode=None):
+    """3x3 correlation stencil (generated; weights lowered as scalars)."""
+    mode = _mode(mode)
+    h_out = max(x.shape[0] - 2, 1)
+    cfg = _resolve("conv3x3_gen", x, config, mode, h_out,
+                   StridingConfig(4, 1),
+                   Traffic(rows=h_out, cols=max(x.shape[1] - 2, 1),
+                           dtype=x.dtype, read_arrays=3, write_arrays=1))
+    return _conv_run(x, w, config=cfg, mode=mode)
+
+
+# ------------------------------------------------------------- doitgen
+
+def doitgen_spec(a, c4) -> TraversalSpec:
+    """Batched 3-D nest: ``r`` is a batch grid dim, ``q`` streams, ``s``
+    contracts inside the body against resident C4 — the §5.1 analysis
+    picks the *written* array as critical (vectorize ``p``), exactly as
+    the paper and the hand kernel derive."""
+    r, q, s = a.shape
+    p = c4.shape[1]
+    return TraversalSpec(
+        name="doitgen_gen",
+        axes=(Axis("r", r, kind="batch"), Axis("q", q),
+              Axis("s", s, kind="reduction"), Axis("p", p)),
+        reads=(Access("A", ("r", "q", "s")), Access("C4", ("s", "p"))),
+        writes=(Access("o", ("r", "q", "p")),),
+        body=lambda env: jnp.einsum("bqs,sp->bqp", env["A"], env["C4"],
+                                    preferred_element_type=jnp.float32),
+        full_width=True,
+    )
+
+
+doitgen_gen = make_kernel_op("doitgen_gen", doitgen_spec,
+                             default=StridingConfig(4, 1))
+
+
+# ---------------------------------------------------------- registry
+
+# problem sizes/oracles mirror the hand families: identical conformance
+# (sizes × (D,P)) coverage for hand and generated variants
+_MN_SIZES = {"m": 48, "n": 256}
+_MN_ALIASED = {"m": 32, "n": 128}
+_MN_BENCH = {"m": 4096, "n": 4096}
+
+
+def _mn(s):
+    return (s["m"], s["n"])
+
+
+register(KernelSpec(
+    name="bicg_gen", family="gen", fn=bicg_gen,
+    make_inputs=lambda s, dt: (_rand(_mn(s), 0, dt),
+                               _rand((s["m"],), 1, dt),
+                               _rand((s["n"],), 2, dt)),
+    run=lambda inp, cfg, mode: bicg_gen(inp[0], inp[1], inp[2], config=cfg,
+                                        mode=mode),
+    ref=lambda inp, cfg: _bicg_ref.bicg_ref(inp[0], inp[1], inp[2]),
+    default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
+    traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
+                                  read_arrays=2),
+    cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="gemver_outer_gen", family="gen", fn=gemver_outer_gen,
+    make_inputs=lambda s, dt: (
+        _rand(_mn(s), 0, dt), _rand((s["m"],), 1, dt),
+        _rand((s["n"],), 2, dt), _rand((s["m"],), 3, dt),
+        _rand((s["n"],), 4, dt)),
+    run=lambda inp, cfg, mode: gemver_outer_gen(*inp, config=cfg,
+                                                mode=mode),
+    ref=lambda inp, cfg: _gem_ref.outer_ref(*inp),
+    default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
+    traffic=lambda s, dt: traffic_of(
+        gemver_outer_spec(jnp.zeros(_mn(s), dt), *(None,) * 4), dt),
+    cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="gemver_sum_gen", family="gen", fn=gemver_sum_gen,
+    make_inputs=lambda s, dt: (_rand((s["vn"],), 0, dt),
+                               _rand((s["vn"],), 1, dt)),
+    run=lambda inp, cfg, mode: gemver_sum_gen(inp[0], inp[1], config=cfg,
+                                              mode=mode),
+    ref=lambda inp, cfg: _gem_ref.sum_ref(inp[0], inp[1]),
+    default_sizes={"vn": 1000}, aliased_sizes={"vn": 2048},
+    traffic=lambda s, dt: traffic_of(
+        gemver_sum_spec(jnp.zeros((s["vn"],), dt), None), dt),
+    cache_shape=lambda s: (s["vn"],),
+    bench_sizes={"vn": 4 * 2**20}, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="gemver_mxv1_gen", family="gen", fn=gemver_mxv1_gen,
+    make_inputs=lambda s, dt: (_rand(_mn(s), 0, dt),
+                               _rand((s["m"],), 1, dt),
+                               _rand((s["n"],), 2, dt), 1.2),
+    run=lambda inp, cfg, mode: gemver_mxv1_gen(inp[0], inp[1], inp[2],
+                                               inp[3], config=cfg,
+                                               mode=mode),
+    ref=lambda inp, cfg: _gem_ref.mxv1_ref(inp[0], inp[1], inp[2], inp[3]),
+    default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
+    traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
+                                  read_arrays=2),
+    cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="gemver_mxv2_gen", family="gen", fn=gemver_mxv2_gen,
+    make_inputs=lambda s, dt: (_rand(_mn(s), 0, dt),
+                               _rand((s["n"],), 1, dt), 1.5),
+    run=lambda inp, cfg, mode: gemver_mxv2_gen(inp[0], inp[1], inp[2],
+                                               config=cfg, mode=mode),
+    ref=lambda inp, cfg: _gem_ref.mxv2_ref(inp[0], inp[1], inp[2]),
+    default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
+    traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
+                                  read_arrays=1),
+    cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="conv3x3_gen", family="gen", fn=conv3x3_gen,
+    make_inputs=lambda s, dt: (_rand((s["h"], s["w"]), 0, dt),
+                               _rand((3, 3), 1, dt)),
+    run=lambda inp, cfg, mode: conv3x3_gen(inp[0], inp[1], config=cfg,
+                                           mode=mode),
+    ref=lambda inp, cfg: _conv_ref.conv3x3_ref(inp[0], inp[1]),
+    default_sizes={"h": 34, "w": 130}, aliased_sizes={"h": 34, "w": 128},
+    traffic=lambda s, dt: traffic_of(
+        conv3x3_spec(jnp.zeros((s["h"], s["w"]), dt)), dt),
+    cache_shape=lambda s: (s["h"], s["w"]),
+    bench_sizes={"h": 2050, "w": 2048}, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="doitgen_gen", family="gen", fn=doitgen_gen,
+    make_inputs=lambda s, dt: (_rand((s["r"], s["q"], s["s"]), 0, dt),
+                               _rand((s["s"], s["s"]), 1, dt)),
+    run=lambda inp, cfg, mode: doitgen_gen(inp[0], inp[1], config=cfg,
+                                           mode=mode),
+    ref=lambda inp, cfg: _doit_ref.doitgen_ref(inp[0], inp[1]),
+    default_sizes={"r": 4, "q": 8, "s": 32},
+    aliased_sizes={"r": 8, "q": 16, "s": 32},
+    traffic=lambda s, dt: traffic_of(
+        doitgen_spec(jnp.zeros((s["r"], s["q"], s["s"]), dt),
+                     jnp.zeros((s["s"], s["s"]), dt)), dt),
+    cache_shape=lambda s: (s["r"], s["q"], s["s"]),
+    bench_sizes={"r": 16, "q": 256, "s": 256}, tags=("paper", "gen")))

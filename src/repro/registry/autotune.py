@@ -14,6 +14,7 @@ without re-measuring.  ``tune_all`` sweeps every registered kernel.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Mapping, Optional, Sequence
 
@@ -52,20 +53,35 @@ def _kernel_mode(mode: Optional[str]) -> str:
     return common.kernel_mode()
 
 
+# §5.1.1 cache-block tiles added to every (D, P) sweep (0 = emitter
+# default): the planner prunes infeasible (block, D, P) points against
+# the VMEM budget before anything is measured.
+_BLOCK_CANDIDATES = (0, 4, 16)
+
+
 def candidate_configs(spec: base.KernelSpec, sizes: Mapping[str, int],
                       dtype, max_candidates: int = 8,
                       ) -> list[tuple[StridingConfig, float]]:
     """Planner-ranked (config, predicted_bw) candidates for one problem."""
     if spec.traffic is not None:
         try:
-            ranked = rank_configs(spec.traffic(sizes, dtype))
-            out, seen = [], set()
+            ranked = rank_configs(spec.traffic(sizes, dtype),
+                                  block_rows_candidates=_BLOCK_CANDIDATES)
+            out, seen, dp_seen = [], set(), set()
             for cfg, bw, _cols in ranked:
-                if (cfg.stride_unroll, cfg.portion_unroll) in seen:
+                key = (cfg.stride_unroll, cfg.portion_unroll, cfg.block_rows)
+                if key in seen:
                     continue
-                seen.add((cfg.stride_unroll, cfg.portion_unroll))
+                seen.add(key)
                 out.append((cfg, bw))
-                if len(out) >= max_candidates:
+                dp_seen.add(key[:2])
+                # the block dimension must not crowd out distinct (D, P)
+                # coverage (kernels that ignore block_rows — e.g. forced
+                # single-row stencils — would otherwise re-measure
+                # identical kernels): fill until max_candidates distinct
+                # (D, P) pairs, capped at 2x total measurements
+                if (len(dp_seen) >= max_candidates
+                        or len(out) >= 2 * max_candidates):
                     break
             return out
         except ValueError:
@@ -73,8 +89,19 @@ def candidate_configs(spec: base.KernelSpec, sizes: Mapping[str, int],
     return [(c, 0.0) for c in _FALLBACK[:max_candidates]]
 
 
+def _timing_knobs(iters: int, warmup: int) -> tuple[int, int]:
+    """Measurement repetitions, overridable per machine: a winner picked
+    from a single cold call is noise, so every candidate gets ``warmup``
+    discarded calls (jit compile + cache fill) and the median of
+    ``iters`` timed calls."""
+    iters = int(os.environ.get("REPRO_TUNE_ITERS", iters))
+    warmup = int(os.environ.get("REPRO_TUNE_WARMUP", warmup))
+    return max(iters, 1), max(warmup, 0)
+
+
 def _measure(spec: base.KernelSpec, inputs: tuple, cfg: StridingConfig,
              mode: str, iters: int, warmup: int) -> float:
+    """Median-of-``iters`` wall-clock seconds after ``warmup`` calls."""
     def call():
         return jax.block_until_ready(spec.run(inputs, cfg, mode))
 
@@ -96,9 +123,15 @@ def tune(kernel: str | base.KernelSpec,
          cache: Optional[tunecache.TuneCache] = None,
          force: bool = False,
          max_candidates: int = 8,
-         iters: int = 3,
-         warmup: int = 1) -> TuneResult:
-    """Measured sweep for one kernel; cached on disk, hit on re-tune."""
+         iters: int = 5,
+         warmup: int = 2) -> TuneResult:
+    """Measured sweep for one kernel; cached on disk, hit on re-tune.
+
+    ``iters``/``warmup`` (env: ``REPRO_TUNE_ITERS``/``REPRO_TUNE_WARMUP``)
+    control the per-candidate timing: warmup calls are discarded (jit
+    compile, first-touch) and the median of the timed calls is kept, so
+    the cached winner is not a cold-start artifact.
+    """
     spec = kernel if isinstance(kernel, base.KernelSpec) else base.get(kernel)
     sizes = dict(sizes if sizes is not None else spec.default_sizes)
     mode = _kernel_mode(mode)
@@ -115,12 +148,15 @@ def tune(kernel: str | base.KernelSpec,
                 config=StridingConfig(int(entry["d"]), int(entry["p"]),
                                       lookahead=int(entry.get("lookahead", 2)),
                                       arrangement=entry.get("arrangement",
-                                                            "grouped")),
+                                                            "grouped"),
+                                      block_rows=int(entry.get("block_rows",
+                                                               0))),
                 seconds=float(entry.get("seconds", 0.0)), mode=mode,
                 from_cache=True,
                 predicted_bw=float(entry.get("predicted_bw", 0.0)))
 
     inputs = spec.make_inputs(sizes, dtype)
+    iters, warmup = _timing_knobs(iters, warmup)
     trials = []
     for cfg, bw in candidate_configs(spec, sizes, dtype, max_candidates):
         sec = _measure(spec, inputs, cfg, mode, iters, warmup)
@@ -131,9 +167,11 @@ def tune(kernel: str | base.KernelSpec,
         "d": best_cfg.stride_unroll, "p": best_cfg.portion_unroll,
         "lookahead": best_cfg.lookahead,
         "arrangement": best_cfg.arrangement,
+        "block_rows": best_cfg.block_rows,
         "seconds": best_sec, "predicted_bw": best_bw, "mode": mode,
         "source": "autotune",
         "trials": [{"d": c.stride_unroll, "p": c.portion_unroll,
+                    "block_rows": c.block_rows,
                     "seconds": s} for c, s, _ in trials],
     })
     return TuneResult(kernel=spec.name, key=key, config=best_cfg,

@@ -124,7 +124,8 @@ class TuneCache:
                     stride_unroll=int(entry["d"]),
                     portion_unroll=int(entry["p"]),
                     lookahead=int(entry.get("lookahead", 2)),
-                    arrangement=entry.get("arrangement", "grouped"))
+                    arrangement=entry.get("arrangement", "grouped"),
+                    block_rows=int(entry.get("block_rows", 0)))
         return None
 
 

@@ -7,6 +7,7 @@ Two pillars (ISSUE acceptance):
       family's output at ≥4 (D, P) points, in the current
       ``REPRO_KERNEL_MODE`` leg (ref and interpret in CI).
 """
+import dataclasses
 import os
 
 import jax
@@ -91,6 +92,154 @@ def test_split_requires_divisibility():
         stride_split(schedule(_spec2d(rows=10)), "i", 4)
 
 
+def test_block_preserves_domain():
+    """§5.1.1 cache blocking: grid(N/b) × contiguous VMEM tile(b)."""
+    s = transforms.block(schedule(_spec2d(rows=12, cols=8)), "i", 3)
+    assert preserves_domain(s)
+    outer, tile = s.loops[0], s.loops[1]
+    assert outer.kind == transforms.GRID
+    assert outer.extent == 4 and outer.stride == 3
+    assert tile.kind == transforms.BLOCK
+    assert tile.extent == 3 and tile.stride == 1
+
+
+def test_block_composes_with_other_transforms():
+    """The ISSUE's blocking criterion: block × stride_split × unroll ×
+    interchange compose in any order and still cover the domain once."""
+    s = schedule(_spec2d(rows=24, cols=8))
+    s = transforms.block(s, "j", 4)       # column cache tiles
+    s = stride_split(s, "i", 2)           # 2 concurrent streams
+    s = unroll(s, "i", 3)                 # 3-row blocks per stream
+    s = interchange(s, (3, 0, 1, 2, 4))   # col grid outermost
+    assert len(s.loops) == 5
+    assert preserves_domain(s)
+    assert len(iteration_domain(s)) == 24 * 8
+
+
+def test_block_requires_divisibility():
+    with pytest.raises(ValueError, match="divide"):
+        transforms.block(schedule(_spec2d(rows=10)), "i", 4)
+
+
+def test_batch_axis_schedule_and_domain():
+    """A batch axis stays a leading sequential grid loop, outside the
+    stride split, and the schedule still covers the domain exactly."""
+    spec = TraversalSpec(
+        name="t_batch",
+        axes=(Axis("b", 3, kind="batch"), Axis("i", 8), Axis("j", 128)),
+        reads=(Access("x", ("b", "i", "j")),),
+        writes=(Access("y", ("b", "i", "j")),),
+        body=lambda env: env["x"],
+    )
+    info = classify(spec)
+    assert info.batch_axes == ("b",)
+    cfg = StridingConfig(2, 1)
+    bp = plan_blocks(spec, cfg)
+    s = default_schedule(spec, cfg, blocks=bp)
+    assert preserves_domain(s)
+    grid = s.grid_loops()
+    assert grid[0].axis == "b" and grid[0].extent == 3
+    assert s.find("i", transforms.STREAM).extent == 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 128), jnp.float32)
+    np.testing.assert_allclose(
+        emit_spec(spec, (x,), cfg, interpret=True), x)
+
+
+def test_free_axes_become_whole_blocks():
+    """Axes that are neither stride nor vector (doitgen's contracted s /
+    output p) turn into whole-extent BLOCK tiles, not grid loops."""
+    from repro.kernels.gen.polybench import doitgen_spec
+    a = jax.ShapeDtypeStruct((4, 8, 32), jnp.float32)
+    c4 = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    spec = doitgen_spec(a, c4)
+    info = classify(spec)
+    assert info.batch_axes == ("r",) and info.stride_axis == "q"
+    assert info.vector_axis == "p" and set(info.free_axes) == {"s"}
+    s = default_schedule(spec, StridingConfig(2, 1))
+    assert preserves_domain(s)
+    assert {l.axis for l in s.loops if l.kind == transforms.BLOCK} == {"s"}
+    assert all(l.axis != "s" for l in s.grid_loops())
+
+
+def test_stride_axis_reduction_merges_streams():
+    """Column sums with the *streamed* axis reduced: D partial rows must
+    merge exactly once across streams and grid steps."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 256), jnp.float32)
+    spec = TraversalSpec(
+        name="t_colsum",
+        axes=(Axis("i", 32, kind="reduction"), Axis("j", 256)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("j",)),),
+        body=lambda env: env["x"].sum(axis=0),
+    )
+    assert classify(spec).stride_reduction
+    for d, p in [(1, 1), (2, 2), (4, 1)]:
+        got = emit_spec(spec, (x,), StridingConfig(d, p),
+                        interpret=True)
+        np.testing.assert_allclose(got, x.sum(axis=0), rtol=1e-4,
+                                   atol=1e-4, err_msg=f"D={d} P={p}")
+
+
+def test_stride_axis_max_reduction_and_pad_guard():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 128), jnp.float32)
+    spec = TraversalSpec(
+        name="t_colmax",
+        axes=(Axis("i", 32, kind="reduction"), Axis("j", 128)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("j",)),),
+        body=lambda env: env["x"].max(axis=0),
+        reduce="max",
+    )
+    got = emit_spec(spec, (x,), StridingConfig(4, 1),
+                    interpret=True)
+    np.testing.assert_allclose(got, x.max(axis=0), rtol=1e-6, atol=1e-6)
+    # zero-padded stride rows would corrupt the combine (max always;
+    # sum whenever the body is non-linear, e.g. exp) — refused, not
+    # silent, for every stride-axis reduction
+    for red, body in (("max", lambda env: env["x"].max(axis=0)),
+                      ("sum", lambda env: jnp.exp(env["x"]).sum(axis=0))):
+        bad = dataclasses.replace(
+            spec, axes=(Axis("i", 30, kind="reduction"), Axis("j", 128)),
+            body=body, reduce=red)
+        with pytest.raises(ValueError, match="cannot pad"):
+            emit_spec(bad, (x[:30],), StridingConfig(4, 1),
+                      interpret=True)
+
+
+def test_blocked_1d_nest_emits_via_tile_grid():
+    """1-D nests loop-block into [rows, 128·P] tiles (§5.1.1) — padding
+    and cropping included, any (D, P)."""
+    spec_fn = lambda x: TraversalSpec(  # noqa: E731
+        name="t_scale1d",
+        axes=(Axis("i", x.shape[0]),),
+        reads=(Access("x", ("i",)),),
+        writes=(Access("y", ("i",)),),
+        body=lambda env: 2.0 * env["x"],
+    )
+    for n in (1000, 4096, 100):
+        x = jax.random.normal(jax.random.PRNGKey(3), (n,), jnp.float32)
+        info = classify(spec_fn(x))
+        assert info.blocked
+        for d, p in [(1, 1), (2, 2), (4, 1)]:
+            got = emit_spec(spec_fn(x), (x,), StridingConfig(d, p),
+                            interpret=True)
+            np.testing.assert_allclose(got, 2.0 * x, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"n={n} D={d} P={p}")
+
+
+def test_block_rows_config_flows_to_emitter():
+    """StridingConfig.block_rows is the §5.1.1 sweep knob: plan_blocks
+    honors it and the emitted kernel stays correct."""
+    from repro.kernels.gen import copy_spec, stream_copy_gen
+    x = jnp.arange(64.0 * 256).reshape(64, 256)
+    bp = plan_blocks(copy_spec(x), StridingConfig(2, 1, block_rows=4))
+    assert bp.bm == 4
+    for bm in (1, 4, 16):
+        got = stream_copy_gen(x, config=StridingConfig(2, 1, block_rows=bm),
+                              mode=_MODE)
+        np.testing.assert_allclose(got, x)
+
+
 def test_interchange_rejects_non_permutation():
     with pytest.raises(ValueError):
         interchange(schedule(_spec2d()), (0, 0))
@@ -133,9 +282,21 @@ def test_default_schedule_interchanges_when_needed():
 
 # -------------------------------------- (b) generated == hand-written
 
+# every hand-written family's generated counterpart (ISSUE 3: all
+# eleven families flow through codegen)
 PAIRS = [("stream_copy_gen", "stream_copy"),
          ("mxv_gen", "mxv"),
-         ("jacobi2d_gen", "jacobi2d")]
+         ("jacobi2d_gen", "jacobi2d"),
+         ("bicg_gen", "bicg"),
+         ("gemver_outer_gen", "gemver_outer"),
+         ("gemver_sum_gen", "gemver_sum"),
+         ("gemver_mxv1_gen", "gemver_mxv1"),
+         ("gemver_mxv2_gen", "gemver_mxv2"),
+         ("conv3x3_gen", "conv3x3"),
+         ("doitgen_gen", "doitgen"),
+         ("decode_attn_gen", "decode_attn"),
+         ("rmsnorm_gen", "rmsnorm"),
+         ("adamw_update_gen", "adamw_update")]
 
 
 @pytest.mark.parametrize("d,p", POINTS)
@@ -146,20 +307,30 @@ def test_generated_matches_handwritten(gen_name, hand_name, d, p):
     sizes = dict(hspec.default_sizes)
     inputs = hspec.make_inputs(sizes, jnp.float32)
     cfg = StridingConfig(d, p)
-    got = gspec.run(inputs, cfg, _MODE)
-    want = hspec.run(inputs, cfg, _MODE)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4,
-                               err_msg=f"{gen_name} vs {hand_name} "
-                                       f"at D={d} P={p}")
+    got = jax.tree.leaves(gspec.run(inputs, cfg, _MODE))
+    want = jax.tree.leaves(hspec.run(inputs, cfg, _MODE))
+    assert len(got) == len(want)
+    tol = max(gspec.rtol, hspec.rtol, 1e-4)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=tol, atol=tol,
+                                   err_msg=f"{gen_name} vs {hand_name} "
+                                           f"at D={d} P={p}")
+
+
+GEN_VARIANTS = {"stream_copy_gen", "stream_triad_gen", "mxv_gen",
+                "jacobi2d_gen", "bicg_gen", "gemver_outer_gen",
+                "gemver_sum_gen", "gemver_mxv1_gen", "gemver_mxv2_gen",
+                "conv3x3_gen", "doitgen_gen", "decode_attn_gen",
+                "rmsnorm_gen", "adamw_update_gen"}
 
 
 def test_gen_variants_registered_and_in_matrix():
     names = set(registry.names())
-    gen = {"stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen"}
-    assert gen <= names
+    assert GEN_VARIANTS <= names
     matrix_kernels = {k for _, k, _, _ in registry.conformance_points()}
-    assert gen <= matrix_kernels
+    assert GEN_VARIANTS <= matrix_kernels
 
 
 # ----------------------------------------------- ref interpreter + ops
@@ -280,8 +451,12 @@ def test_unsupported_nests_fail_loudly():
         writes=(Access("y", ("i",)),),
         body=lambda env: env["x"],
     )
-    with pytest.raises(NotImplementedError, match="1-D"):
-        classify(spec_1d)
+    # 1-D nests are loop-blocked (§5.1.1), not rejected, since PR 3
+    info = classify(spec_1d)
+    assert info.blocked
+    x = jnp.arange(64.0)
+    np.testing.assert_allclose(
+        emit_spec(spec_1d, (x,), StridingConfig(2, 1), interpret=True), x)
     spec_t = TraversalSpec(
         name="tt",
         axes=(Axis("i", 8), Axis("j", 8)),
@@ -362,3 +537,36 @@ def test_autotune_sweeps_gen_kernel(tmp_path):
     assert 32 % res.config.stride_unroll == 0
     again = tune("stream_copy_gen", mode="ref", cache=cache)
     assert again.from_cache and again.config == res.config
+
+
+# -------------------------------------------- §5.1.1 blocked candidates
+
+def test_planner_ranks_blocked_candidates_vmem_aware():
+    """block_rows joins the (D, P) sweep; infeasible tall tiles are
+    pruned against the VMEM budget like any other point."""
+    from repro.core.planner import Traffic, rank_configs
+    t = Traffic(rows=64, cols=256)
+    ranked = rank_configs(t, block_rows_candidates=(0, 4, 16))
+    assert {c.block_rows for c, _, _ in ranked} == {0, 4, 16}
+    # 8 KiB budget: bm=16 needs 16·128·4·2 = 16 KiB even at D=P=1
+    tight = rank_configs(t, vmem_budget=8 * 1024,
+                         block_rows_candidates=(0, 4, 16))
+    blocks = {c.block_rows for c, _, _ in tight}
+    assert 16 not in blocks and 4 in blocks
+
+
+def test_autotune_candidates_include_block_dimension():
+    from repro.registry.autotune import candidate_configs
+    spec = registry.get("stream_copy_gen")
+    cands = candidate_configs(spec, dict(spec.default_sizes), jnp.float32,
+                              max_candidates=32)
+    assert len({c.block_rows for c, _ in cands}) > 1
+
+
+def test_tune_cache_roundtrips_block_rows(tmp_path, monkeypatch):
+    from repro.registry import tunecache
+    cache = tunecache.TuneCache(str(tmp_path / "t.json"))
+    key = tunecache.cache_key("k", (8, 8), jnp.float32, mode="ref")
+    cache.store(key, {"d": 2, "p": 1, "block_rows": 16})
+    cfg = cache.config_for("k", (8, 8), jnp.float32, mode="ref")
+    assert cfg == StridingConfig(2, 1, block_rows=16)

@@ -90,7 +90,12 @@ def test_gen_variants_auto_included():
     ≥4-config + aliased coverage as the hand-written families."""
     gen_specs = registry.family_specs("gen")
     assert {s.name for s in gen_specs} >= {
-        "stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen"}
+        "stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen",
+        # ISSUE 3: every remaining hand family's generated counterpart
+        "bicg_gen", "gemver_outer_gen", "gemver_sum_gen",
+        "gemver_mxv1_gen", "gemver_mxv2_gen", "conv3x3_gen",
+        "doitgen_gen", "decode_attn_gen", "rmsnorm_gen",
+        "adamw_update_gen"}
     by_kernel: dict[str, list] = {}
     for point, kernel, _sizes, cfg in _POINTS:
         by_kernel.setdefault(kernel, []).append((point, cfg))
