@@ -17,6 +17,9 @@ as a loop-unroll/interchange-family transform):
 see ``repro.kernels.gen`` for the ported kernel families and
 ``examples/codegen_kernel.py`` for an end-to-end walkthrough.
 """
+from repro.codegen.combine import (MAX, SUM, Combine, MaxCombine,
+                                   OnlineSoftmax, SumCombine,
+                                   resolve_combine)
 from repro.codegen.emit import (emit_scheduled, emit_spec, make_kernel_op,
                                 run_spec)
 from repro.codegen.loopir import (Access, Axis, NestInfo, TraversalSpec,
@@ -32,6 +35,8 @@ from repro.codegen.transforms import (BlockPlan, LoopAxis, Schedule,
 __all__ = [
     "Axis", "Access", "TraversalSpec", "NestInfo", "tap", "to_loop_nest",
     "classify", "traffic_of", "evaluate",
+    "Combine", "SumCombine", "MaxCombine", "OnlineSoftmax", "SUM", "MAX",
+    "resolve_combine",
     "LoopAxis", "Schedule", "BlockPlan", "schedule", "interchange",
     "unroll", "stride_split", "vector_block", "multi_stride",
     "plan_blocks", "default_schedule", "iteration_domain",

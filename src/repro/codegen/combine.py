@@ -1,0 +1,175 @@
+"""Reduction combine algebra for stride-axis reductions.
+
+A :class:`Combine` is a monoid over a *tuple* of f32 accumulators: the
+emitter keeps one VMEM scratch buffer per state component, folds every
+stream's (and every row-grid step's) partial state in with
+:meth:`Combine.merge`, and applies :meth:`Combine.finalize` once at the
+end of the sweep to turn the accumulated state into the written output.
+``sum`` and ``max`` are the degenerate single-state instances (finalize
+is the identity); :class:`OnlineSoftmax` is the paired-state instance
+the paper's flash-decode pattern needs — a running max plus a
+max-rescaled weighted sum, merged with the standard online-softmax
+rescaling identity:
+
+    m  = max(m1, m2)
+    n  = n1 * exp(m1 - m) + n2 * exp(m2 - m)
+    d  = d1 * exp(m1 - m) + d2 * exp(m2 - m)
+
+which is associative and has (m=-inf, n=0, d=0) as its identity, so
+partial states merge across D concurrent streams and sequential grid
+steps in any bracketing (tests/test_combine.py checks the laws).
+
+Body contract: a spec whose stride axis is reduced with an ``n_state >
+1`` combinator returns the *partial state tuple* for its block (one
+array per component, shapes per :meth:`state_widths`); single-state
+combinators keep the historical contract of returning the partial
+array directly.  The pure-jnp interpreter (``loopir.evaluate``) applies
+the body once over the whole domain and finalizes the resulting state —
+same totals, no Pallas.
+
+Zero-padded stride rows would have to contribute the combine *identity*
+through the body, which no generic body guarantees (and ``max`` /
+``online_softmax`` structurally cannot) — the emitter therefore refuses
+to pad the stride axis for every combinator (see ``emit.emit_spec``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+__all__ = ["Combine", "SumCombine", "MaxCombine", "OnlineSoftmax",
+           "SUM", "MAX", "resolve_combine", "NEG_INF"]
+
+NEG_INF = -1e30   # finite -inf stand-in: exp(NEG_INF - m) underflows to 0
+
+
+class Combine:
+    """Paired-state reduction combinator (init / merge / finalize)."""
+
+    name: str = "combine"
+    n_state: int = 1
+
+    def state_widths(self, out_width: int) -> tuple[int, ...]:
+        """Lane width of each f32 state component, given the width of
+        the output block the reduction produces."""
+        raise NotImplementedError
+
+    def init(self, shapes: Sequence[tuple[int, ...]]) -> tuple:
+        """Identity state: one f32 array per component shape."""
+        raise NotImplementedError
+
+    def merge(self, state: tuple, part: tuple) -> tuple:
+        """Fold one partial state into the accumulated state."""
+        raise NotImplementedError
+
+    def finalize(self, state: tuple):
+        """Accumulated state → output block."""
+        raise NotImplementedError
+
+
+class SumCombine(Combine):
+    name = "sum"
+
+    def state_widths(self, out_width):
+        return (out_width,)
+
+    def init(self, shapes):
+        return (jnp.zeros(shapes[0], jnp.float32),)
+
+    def merge(self, state, part):
+        return (state[0] + part[0],)
+
+    def finalize(self, state):
+        return state[0]
+
+
+class MaxCombine(Combine):
+    name = "max"
+
+    def state_widths(self, out_width):
+        return (out_width,)
+
+    def init(self, shapes):
+        return (jnp.full(shapes[0], NEG_INF, jnp.float32),)
+
+    def merge(self, state, part):
+        return (jnp.maximum(state[0], part[0]),)
+
+    def finalize(self, state):
+        return state[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineSoftmax(Combine):
+    """Numerically-stable streaming softmax-weighted average.
+
+    State is ``(m, num, den)`` per softmax group: running score max,
+    max-rescaled weighted value sum (``groups * vwidth`` lanes wide) and
+    max-rescaled weight sum.  ``finalize`` divides, so a spec reduced
+    with this combinator writes ``softmax(scores) @ V`` in ONE sweep of
+    the streamed operands — the single-pass flash-decode pattern.
+
+    The body must return the block's partial state ``(m, num, den)``:
+      * ``m``   — per-group max of the block's scores,
+      * ``num`` — sum of ``exp(score - m) * value`` over the block,
+      * ``den`` — sum of ``exp(score - m)`` over the block.
+    """
+
+    groups: int            # independent softmax rows in the output
+    vwidth: int            # value lanes per group (num width = g * v)
+    eps: float = 1e-20     # finalize denominator floor
+    name: str = dataclasses.field(default="online_softmax", repr=False)
+    n_state: int = dataclasses.field(default=3, repr=False)
+
+    def state_widths(self, out_width):
+        if out_width != self.groups * self.vwidth:
+            raise ValueError(
+                f"online_softmax: output width {out_width} != groups "
+                f"({self.groups}) * vwidth ({self.vwidth})")
+        return (self.groups, out_width, self.groups)
+
+    def init(self, shapes):
+        m_shape, num_shape, den_shape = shapes
+        return (jnp.full(m_shape, NEG_INF, jnp.float32),
+                jnp.zeros(num_shape, jnp.float32),
+                jnp.zeros(den_shape, jnp.float32))
+
+    def _rescale(self, num, alpha):
+        shape = num.shape
+        num = num.reshape(shape[:-1] + (self.groups, self.vwidth))
+        return (num * alpha[..., None]).reshape(shape)
+
+    def merge(self, state, part):
+        m1, n1, d1 = state
+        m2, n2, d2 = part
+        m = jnp.maximum(m1, m2)
+        a1 = jnp.exp(m1 - m)
+        a2 = jnp.exp(m2 - m)
+        return (m,
+                self._rescale(n1, a1) + self._rescale(n2, a2),
+                d1 * a1 + d2 * a2)
+
+    def finalize(self, state):
+        _m, num, den = state
+        shape = num.shape
+        num = num.reshape(shape[:-1] + (self.groups, self.vwidth))
+        out = num / jnp.maximum(den, self.eps)[..., None]
+        return out.reshape(shape)
+
+
+SUM = SumCombine()
+MAX = MaxCombine()
+
+
+def resolve_combine(reduce) -> Combine:
+    """Spec ``reduce`` field → combinator ("sum" | "max" | instance)."""
+    if isinstance(reduce, Combine):
+        return reduce
+    if reduce == "sum":
+        return SUM
+    if reduce == "max":
+        return MAX
+    raise ValueError(f"unknown reduce {reduce!r} (expected 'sum', 'max', "
+                     "or a codegen.Combine instance)")

@@ -17,15 +17,24 @@ lowering strategies:
     f32 VMEM accumulator per stream, written on the last reduction step
     (the mxv pattern).
   * ``_emit_stream_reduction`` — the stride axis itself is reduced (the
-    mxv_t / flash-decode pattern): every stream's partial results merge
-    across streams and row-grid steps with ``spec.reduce`` ("sum" or
-    "max") into one full-width f32 accumulator, written at the end.
+    mxv_t / flash-decode pattern): every stream's partial state merges
+    across streams and row-grid steps with the ``spec.reduce``
+    combinator — "sum" / "max", or any paired-state ``codegen.Combine``
+    (e.g. ``OnlineSoftmax``: running max + rescaled sums, the
+    single-pass flash-decode algebra) — into one f32 accumulator per
+    state component, finalized into the output ref(s) at the end.
   * ``_emit_manual`` — explicit ``lookahead``-deep DMA rings (the
     ``copy_manual`` pattern), one *fused* ring per operand: each step's
     D stream copies issue back-to-back onto a single per-slot
     semaphore, and stores drain through a double-buffered staging ring
     instead of blocking each stream's compute.  Selected when
     ``config.lookahead != 2`` (lookahead=1 = prefetch off).
+
+Specs with multiple ``writes`` lower to multiple Pallas output refs —
+one store stream (or manual staging ring) per output, no stacked free
+axis and no unstack copies; the body returns one block per write.
+Writes-only specs (no reads) broadcast the body's value into the store
+stream (the ``init`` fill pattern).
 
 1-D nests take the §5.1.1 loop-blocking path first (``classify`` flags
 them): the single axis is tiled into a ``[rows, 128·P]`` grid — the
@@ -49,11 +58,37 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.codegen import loopir, transforms
+from repro.codegen.combine import resolve_combine
 from repro.core.striding import StridingConfig
 
 __all__ = ["emit_spec", "emit_scheduled", "run_spec", "make_kernel_op"]
 
-_NEG = -1e30   # max-reduce accumulator init
+
+def _fit(x, shape: tuple[int, ...], broadcast: bool = False):
+    """Reshape a body result to its output block.  Only writes-only
+    (fill) bodies may *broadcast* a scalar value into the block —
+    read-ful bodies must produce the block's exact element count, so a
+    dimension accidentally collapsed in the body still errors instead
+    of being silently replicated."""
+    x = jnp.asarray(x)
+    size = 1
+    for s in shape:
+        size *= s
+    if x.size == size:
+        return x.reshape(shape)
+    if broadcast:
+        return jnp.broadcast_to(x, shape)
+    raise ValueError(f"body result shape {x.shape} does not fill the "
+                     f"output block {shape}")
+
+
+def _as_blocks(res, spec: loopir.TraversalSpec) -> tuple:
+    """Normalize a body result to one block per write access."""
+    outs = res if isinstance(res, tuple) else (res,)
+    if len(outs) != len(spec.writes):
+        raise ValueError(f"{spec.name}: body returned {len(outs)} blocks "
+                         f"for {len(spec.writes)} writes")
+    return outs
 
 
 # ------------------------------------------------------------ operands
@@ -231,8 +266,15 @@ def _geometry(sched: transforms.Schedule, bp: transforms.BlockPlan,
 
 
 def _write_dims(spec: loopir.TraversalSpec, bp: transforms.BlockPlan):
-    """Split the write index into (batch vars, stride?, tail vars)."""
+    """Split the (shared) write index into (batch vars, stride?, tail
+    vars).  Multi-output specs write through one access map: every write
+    ref shares the block geometry, only the array (and dtype) differ."""
     info = bp.info
+    for w in spec.writes[1:]:
+        if w.index != spec.write.index:
+            raise NotImplementedError(
+                f"{spec.name}: multi-output writes must share one access "
+                f"map ({w.array!r}{w.index} vs {spec.write.index})")
     bvars = tuple(v for v in spec.write.index if v in info.batch_axes)
     rest = tuple(v for v in spec.write.index if v not in info.batch_axes)
     return bvars, rest
@@ -281,35 +323,46 @@ def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
     plain = (nb == 0 and rest[1:] == (info.vector_axis,) and not full
              and not info.free_axes and all(op.taps == 1 for op in ops))
     lanes = _lane_slices(sched.config, bp.bn) if plain else [None]
-    out_dtype = spec.out_dtype or arrays[0].dtype
+    out_dtypes = spec.out_dtypes(arrays)
+    n_out = len(spec.writes)
     batch_ext = tuple(spec.axis(v).extent for v in bvars)
     bpos = tuple(pos[v] for v in bvars)
 
+    fill = not spec.reads               # writes-only: broadcast the value
+
     def kernel(*refs):
-        o_ref = refs[len(operands)]
+        o_refs = refs[len(operands):len(operands) + n_out]
         for sl in lanes:
             for k in range(d):
-                res = spec.body(env(refs, k, sl)).astype(o_ref.dtype)
+                blocks = _as_blocks(spec.body(env(refs, k, sl)), spec)
                 idx = (0,) * nb + (k,)
-                if sl is None:
-                    o_ref[idx] = res.reshape((bp.bm, *w_block))
-                else:
-                    o_ref[idx + (slice(None), sl)] = res
+                for o_ref, res in zip(o_refs, blocks):
+                    if sl is None:
+                        o_ref[idx] = _fit(res, (bp.bm, *w_block),
+                                          broadcast=fill
+                                          ).astype(o_ref.dtype)
+                    else:               # lane sub-portion: static shape
+                        o_ref[idx + (slice(None), sl)] = _fit(
+                            res, (bp.bm, sl.stop - sl.start),
+                            broadcast=fill).astype(o_ref.dtype)
 
     def out_imap(*g):
         return (tuple(g[p] for p in bpos) + (0, g[row_pos])
                 + tuple(0 if p is None else g[p] for p in w_imap))
 
+    out_block = pl.BlockSpec((1,) * nb + (d, bp.bm, *w_block), out_imap)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1,) * nb + (d, bp.bm, *w_block), out_imap),
-        out_shape=jax.ShapeDtypeStruct(
-            batch_ext + (d, seg_rows, *w_shape), jnp.dtype(out_dtype)),
+        out_specs=[out_block] * n_out,
+        out_shape=[jax.ShapeDtypeStruct(
+            batch_ext + (d, seg_rows, *w_shape), jnp.dtype(dt))
+            for dt in out_dtypes],
         interpret=interpret,
     )(*operands)
-    return out.reshape(*batch_ext, d * seg_rows, *w_shape)
+    res = tuple(o.reshape(*batch_ext, d * seg_rows, *w_shape) for o in out)
+    return res[0] if n_out == 1 else res
 
 
 def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
@@ -317,6 +370,9 @@ def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
     if info.batch_axes:
         raise NotImplementedError(
             f"{spec.name}: batched vector-axis reduction")
+    if len(spec.writes) != 1:
+        raise NotImplementedError(
+            f"{spec.name}: multi-output vector-axis reduction")
     stream = sched.find(info.stride_axis, transforms.STREAM)
     d, seg_rows = stream.extent, stream.stride
     grid, pos = _geometry(sched, bp)
@@ -362,9 +418,14 @@ def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
 
 def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
     """Stride axis is the reduction (mxv_t / flash-decode partials): all
-    D streams' body outputs merge with ``spec.reduce`` into one f32
-    accumulator across the row grid, written on the last row step."""
+    D streams' partial states merge with ``spec.combine`` — one f32 VMEM
+    accumulator per state component — across streams and the row grid,
+    finalized into the output ref(s) on the last row step.  Single-state
+    combinators ("sum" / "max") keep the historical body contract (one
+    partial block); paired-state combinators (e.g. ``OnlineSoftmax``)
+    take the body's state tuple."""
     spec, info = sched.spec, bp.info
+    comb = resolve_combine(spec.reduce)
     stream = sched.find(info.stride_axis, transforms.STREAM)
     d = stream.extent
     grid, pos = _geometry(sched, bp, row_innermost=True)
@@ -374,7 +435,8 @@ def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
     in_specs = [s for op in ops for s in op.specs] + scal_specs
     operands = [a for op in ops for a in op.arrays] + scal_arrays
     env = _env_builder(spec, ops, sum(len(op.arrays) for op in ops))
-    out_dtype = spec.out_dtype or arrays[0].dtype
+    out_dtypes = spec.out_dtypes(arrays)
+    n_out = len(spec.writes)
 
     bvars, rest = _write_dims(spec, bp)
     nb = len(bvars)
@@ -387,6 +449,11 @@ def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
             return tuple(g[p] for p in bpos) + (0, g[col_pos])
         out_shape = batch_ext + (1, bp.cols)
         final = batch_ext + (bp.cols,)
+        if comb.n_state > 1 and bp.bn != bp.cols:
+            raise NotImplementedError(
+                f"{spec.name}: a paired-state combinator cannot split the "
+                "vector axis across grid steps (state widths are derived "
+                "from the whole output row); set full_width=True")
     elif len(rest) == 1 and rest[0] in info.free_axes:
         if bp.bn != bp.cols:
             raise NotImplementedError(
@@ -402,42 +469,54 @@ def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
         raise NotImplementedError(
             f"{spec.name}: stride-reduction write {spec.write.index} must "
             "be the vector axis or one free axis (plus batch)")
+    widths = comb.state_widths(w)
 
     def kernel(*refs):
-        o_ref = refs[len(operands)]
-        acc = refs[len(operands) + 1]
+        o_refs = refs[len(operands):len(operands) + n_out]
+        accs = refs[len(operands) + n_out:]
         i = pl.program_id(row_pos)
 
         @pl.when(i == 0)
         def _():
-            if spec.reduce == "max":
-                acc[...] = jnp.full_like(acc, _NEG)
-            else:
-                acc[...] = jnp.zeros_like(acc)
+            for acc, v in zip(accs, comb.init([a.shape for a in accs])):
+                acc[...] = v
 
         for k in range(d):
-            part = spec.body(env(refs, k)).astype(jnp.float32)
-            part = part.reshape(acc.shape)
-            if spec.reduce == "max":
-                acc[...] = jnp.maximum(acc[...], part)
-            else:
-                acc[...] += part
+            part = spec.body(env(refs, k))
+            part = part if isinstance(part, tuple) else (part,)
+            if len(part) != comb.n_state:
+                raise ValueError(
+                    f"{spec.name}: body returned {len(part)} state "
+                    f"components for combine {comb.name!r} "
+                    f"(n_state={comb.n_state})")
+            part = tuple(_fit(p, acc.shape).astype(jnp.float32)
+                         for p, acc in zip(part, accs))
+            state = comb.merge(tuple(acc[...] for acc in accs), part)
+            for acc, v in zip(accs, state):
+                acc[...] = v
 
         @pl.when(i == pl.num_programs(row_pos) - 1)
         def _():
-            o_ref[...] = acc[...].reshape(o_ref.shape).astype(o_ref.dtype)
+            res = comb.finalize(tuple(acc[...] for acc in accs))
+            for o_ref, r in zip(o_refs, _as_blocks(res, spec)):
+                o_ref[...] = _fit(r, o_ref.shape).astype(o_ref.dtype)
+
+    def out_block():
+        return pl.BlockSpec((1,) * nb + ((1, w) if rest ==
+                            (info.vector_axis,) else (w,)), out_imap)
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1,) * nb + ((1, w) if rest ==
-                               (info.vector_axis,) else (w,)), out_imap),
-        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.dtype(out_dtype)),
-        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        out_specs=[out_block() for _ in range(n_out)],
+        out_shape=[jax.ShapeDtypeStruct(out_shape, jnp.dtype(dt))
+                   for dt in out_dtypes],
+        scratch_shapes=[pltpu.VMEM((1, wi), jnp.float32) for wi in widths],
         interpret=interpret,
     )(*operands)
-    return out.reshape(final)
+    res = tuple(o.reshape(final) for o in out)
+    return res[0] if n_out == 1 else res
 
 
 def _manual_eligible(spec: loopir.TraversalSpec,
@@ -469,30 +548,31 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
     n_steps = seg_rows // bm
     n_in = len(arrays)
     n_scal = len(scalars)
+    n_out = len(spec.writes)
     scal_arrays = [jnp.asarray(s).reshape(1, 1) for s in scalars]
-    out_dtype = spec.out_dtype or arrays[0].dtype
+    out_dtypes = spec.out_dtypes(arrays)
     ost = 2                             # output staging ring depth
 
     def kernel(*refs):
         in_hbm = refs[:n_in]
         scal_refs = refs[n_in:n_in + n_scal]
-        o_hbm = refs[n_in + n_scal]
-        scratch = refs[n_in + n_scal + 1:]
-        bufs = scratch[:n_in]                     # (la, d, bm, cols)
-        obuf = scratch[n_in]                      # (ost, d, bm, cols)
-        insems = scratch[n_in + 1:2 * n_in + 1]   # (la,) per operand
-        outsem = scratch[2 * n_in + 1]            # (ost, d)
+        o_hbms = refs[n_in + n_scal:n_in + n_scal + n_out]
+        scratch = refs[n_in + n_scal + n_out:]
+        bufs = scratch[:n_in]                        # (la, d, bm, cols)
+        obufs = scratch[n_in:n_in + n_out]           # (ost, d, bm, cols)
+        insems = scratch[n_in + n_out:2 * n_in + n_out]  # (la,) per opnd
+        outsems = scratch[2 * n_in + n_out:]         # (ost, d) per output
 
         def in_copy(r, k, t, slot):
             return pltpu.make_async_copy(
                 in_hbm[r].at[pl.ds(k * seg_rows + t * bm, bm), :],
                 bufs[r].at[slot, k], insems[r].at[slot])
 
-        def out_copy(k, t, oslot):
+        def out_copy(o, k, t, oslot):
             return pltpu.make_async_copy(
-                obuf.at[oslot, k],
-                o_hbm.at[pl.ds(k * seg_rows + t * bm, bm), :],
-                outsem.at[oslot, k])
+                obufs[o].at[oslot, k],
+                o_hbms[o].at[pl.ds(k * seg_rows + t * bm, bm), :],
+                outsems[o].at[oslot, k])
 
         def env(k, slot):
             e = {acc.array: bufs[r][slot, k]
@@ -515,15 +595,21 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
 
             @pl.when(t >= ost)         # drain the store last on this slot
             def _():
-                for k in range(d):
-                    out_copy(k, t - ost, oslot).wait()
+                for o in range(n_out):
+                    for k in range(d):
+                        out_copy(o, k, t - ost, oslot).wait()
             for r in range(n_in):      # one wait per copy; shared sem
                 for k in range(d):
                     in_copy(r, k, t, slot).wait()
             for k in range(d):
-                obuf[oslot, k] = spec.body(env(k, slot)).astype(obuf.dtype)
-            for k in range(d):
-                out_copy(k, t, oslot).start()
+                blocks = _as_blocks(spec.body(env(k, slot)), spec)
+                for o, res in enumerate(blocks):
+                    obufs[o][oslot, k] = _fit(
+                        res, (bm, cols), broadcast=not spec.reads
+                        ).astype(obufs[o].dtype)
+            for o in range(n_out):
+                for k in range(d):
+                    out_copy(o, k, t, oslot).start()
             nxt = t + la
 
             @pl.when(nxt < n_steps)    # refill the rings, again fused
@@ -536,24 +622,27 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
         jax.lax.fori_loop(0, n_steps, body, ())
         for tail in range(min(ost, n_steps)):      # drain pending stores
             t = n_steps - 1 - tail
-            for k in range(d):
-                out_copy(k, t, t % ost).wait()
+            for o in range(n_out):
+                for k in range(d):
+                    out_copy(o, k, t, t % ost).wait()
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_in
         + [pl.BlockSpec(memory_space=pltpu.VMEM)] * n_scal,
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((d * seg_rows, cols),
-                                       jnp.dtype(out_dtype)),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((d * seg_rows, cols),
+                                        jnp.dtype(dt)) for dt in out_dtypes],
         scratch_shapes=(
             [pltpu.VMEM((la, d, bm, cols), x.dtype) for x in arrays]
-            + [pltpu.VMEM((ost, d, bm, cols), jnp.dtype(out_dtype))]
+            + [pltpu.VMEM((ost, d, bm, cols), jnp.dtype(dt))
+               for dt in out_dtypes]
             + [pltpu.SemaphoreType.DMA((la,)) for _ in arrays]
-            + [pltpu.SemaphoreType.DMA((ost, d))]
+            + [pltpu.SemaphoreType.DMA((ost, d)) for _ in range(n_out)]
         ),
         interpret=interpret,
     )(*arrays, *scal_arrays)
+    return out[0] if n_out == 1 else tuple(out)
 
 
 def emit_scheduled(sched: transforms.Schedule, bp: transforms.BlockPlan,
@@ -627,7 +716,7 @@ def _emit_blocked(spec: loopir.TraversalSpec, info: loopir.NestInfo,
         spec,
         axes=(loopir.Axis(row_ax, rows), loopir.Axis(lane_ax, cols)),
         reads=tuple(remap(a) for a in spec.reads),
-        writes=(remap(spec.write),),
+        writes=tuple(remap(a) for a in spec.writes),
     )
 
     def to2d(x):
@@ -635,7 +724,9 @@ def _emit_blocked(spec: loopir.TraversalSpec, info: loopir.NestInfo,
 
     out = emit_spec(spec2, [to2d(x) for x in arrays] + list(scalars),
                     config, interpret=interpret)
-    return out.reshape(-1)[:n]
+    outs = out if isinstance(out, tuple) else (out,)
+    res = tuple(o.reshape(-1)[:n] for o in outs)
+    return res[0] if len(res) == 1 else res
 
 
 def emit_spec(spec: loopir.TraversalSpec, inputs: Sequence,
@@ -655,9 +746,10 @@ def emit_spec(spec: loopir.TraversalSpec, inputs: Sequence,
     bp = transforms.plan_blocks(spec, config)
     rows = spec.axis(bp.info.stride_axis).extent
     if bp.info.stride_reduction and bp.rows != rows:
-        # zero-padded rows would have to contribute the combine identity,
-        # which only holds for bodies that are linear in the padded rows
-        # (and never for max) — refuse rather than silently corrupt
+        # zero-padded rows would have to contribute the combine identity
+        # through the body, which no generic body guarantees (and max /
+        # online_softmax structurally cannot) — refuse rather than
+        # silently corrupt, for EVERY combinator
         raise ValueError(
             f"{spec.name}: a stride-axis reduction cannot pad the stride "
             f"axis ({rows} rows, D={bp.d}); pick a D dividing the extent")
@@ -669,7 +761,10 @@ def emit_spec(spec: loopir.TraversalSpec, inputs: Sequence,
     spec_p = dataclasses.replace(spec, axes=padded_axes)
     sched = transforms.default_schedule(spec_p, config, blocks=bp)
     out = emit_scheduled(sched, bp, arrays, scalars, interpret)
-    return out[tuple(slice(0, s) for s in spec.out_shape())]
+    outs = out if isinstance(out, tuple) else (out,)
+    res = tuple(o[tuple(slice(0, s) for s in shape)]
+                for o, shape in zip(outs, spec.out_shapes()))
+    return res[0] if len(res) == 1 else res
 
 
 # ------------------------------------------------------------- op glue

@@ -38,6 +38,7 @@ from typing import Any, Callable, Mapping, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.codegen.combine import Combine, resolve_combine
 from repro.core.planner import Traffic
 from repro.core.transform import ArrayAccess, LoopNest, plan_transform
 
@@ -119,12 +120,22 @@ class TraversalSpec:
     """A whole kernel: iteration domain + access maps + jnp body.
 
     ``reduce`` is the combine op for nests whose *stride* axis is a
-    reduction ("sum" | "max"): per-stream partial results merge across
-    streams and grid steps with that op (the mxv_t / flash-decode
-    pattern).  ``full_width=True`` declares that the body needs the
-    entire vector extent in one block (e.g. a per-row mean, or a
-    reduction contracted inside the body) — the emitter then never
-    splits the vector axis across grid steps.
+    reduction: per-stream partial results merge across streams and grid
+    steps with that combinator (the mxv_t / flash-decode pattern).  It
+    is either "sum" | "max" or any :class:`~repro.codegen.combine.
+    Combine` instance — a monoid over a tuple of f32 accumulators whose
+    ``finalize`` produces the written block (e.g. ``OnlineSoftmax`` for
+    single-pass decode attention).  ``full_width=True`` declares that
+    the body needs the entire vector extent in one block (e.g. a
+    per-row mean, or a reduction contracted inside the body) — the
+    emitter then never splits the vector axis across grid steps.
+
+    Multiple ``writes`` declare native multi-output kernels: the body
+    returns one block per write access (same order) and the emitter
+    lowers each to its own Pallas output ref — no stacked free axis, no
+    unstack copies.  ``out_dtype`` may then be a tuple (one dtype per
+    output).  A spec with no reads (e.g. a fill) must set ``out_dtype``;
+    its body result is broadcast to the output block.
     """
 
     name: str
@@ -133,19 +144,29 @@ class TraversalSpec:
     writes: tuple[Access, ...]
     body: Callable[[Mapping[str, Any]], Any]
     scalars: tuple[str, ...] = ()
-    out_dtype: Any = None   # default: dtype of the first read operand
-    reduce: str = "sum"     # stride-axis reduction combine ("sum" | "max")
+    out_dtype: Any = None   # dtype (or per-write tuple); default: first read
+    reduce: Any = "sum"     # stride-axis combine ("sum" | "max" | Combine)
     full_width: bool = False
 
     def __post_init__(self):
         names = [ax.name for ax in self.axes]
         if len(set(names)) != len(names):
             raise ValueError(f"{self.name}: duplicate axis names {names}")
-        if len(self.writes) != 1:
-            raise ValueError(f"{self.name}: exactly one write access "
-                             f"supported, got {len(self.writes)}")
-        if self.reduce not in ("sum", "max"):
-            raise ValueError(f"{self.name}: unknown reduce {self.reduce!r}")
+        if not self.writes:
+            raise ValueError(f"{self.name}: at least one write access "
+                             "required")
+        wnames = [a.array for a in self.writes]
+        if len(set(wnames)) != len(wnames):
+            raise ValueError(f"{self.name}: duplicate write arrays {wnames}")
+        resolve_combine(self.reduce)   # raises on unknown combine
+        if isinstance(self.out_dtype, tuple):
+            if len(self.out_dtype) != len(self.writes):
+                raise ValueError(
+                    f"{self.name}: out_dtype tuple has {len(self.out_dtype)}"
+                    f" entries for {len(self.writes)} writes")
+        if not self.reads and self.out_dtype is None:
+            raise ValueError(f"{self.name}: a spec with no reads must "
+                             "declare out_dtype")
         n_batch = sum(ax.kind == BATCH for ax in self.axes)
         if any(ax.kind == BATCH for ax in self.axes[n_batch:]):
             raise ValueError(f"{self.name}: batch axes must be outermost")
@@ -162,8 +183,11 @@ class TraversalSpec:
                 raise ValueError(
                     f"{self.name}: access {acc.array!r}: batch axis vars "
                     "must form the leading index prefix")
-        if self.writes[0].has_halo:
-            raise ValueError(f"{self.name}: write access cannot have a halo")
+        for w in self.writes:
+            if w.has_halo:
+                raise ValueError(
+                    f"{self.name}: write access {w.array!r} cannot have a "
+                    "halo")
 
     def axis(self, name: str) -> Axis:
         for ax in self.axes:
@@ -175,8 +199,26 @@ class TraversalSpec:
     def write(self) -> Access:
         return self.writes[0]
 
+    @property
+    def combine(self) -> Combine:
+        return resolve_combine(self.reduce)
+
     def out_shape(self) -> tuple[int, ...]:
         return tuple(self.axis(v).extent for v in self.write.index)
+
+    def out_shapes(self) -> tuple[tuple[int, ...], ...]:
+        return tuple(tuple(self.axis(v).extent for v in w.index)
+                     for w in self.writes)
+
+    def out_dtypes(self, arrays: Sequence = ()) -> tuple:
+        """Per-write output dtypes (``out_dtype`` broadcast / defaulted
+        to the first read operand's dtype)."""
+        dt = self.out_dtype
+        if isinstance(dt, tuple):
+            return dt
+        if dt is None:
+            dt = arrays[0].dtype
+        return (dt,) * len(self.writes)
 
 
 def tap(block, halo: Sequence[tuple[int, int]], *offsets: int):
@@ -327,8 +369,10 @@ def evaluate(spec: TraversalSpec, inputs: Sequence[Any]):
 
     The body is applied once over the full iteration domain — haloed
     accesses see the whole input array (interior + border), reductions
-    reduce over the full vector extent.  This is the oracle the
-    ``*_gen`` registry variants run in ``mode='ref'``.
+    reduce over the full vector extent.  A paired-state combinator's
+    partial state (one block covering the whole domain) is finalized
+    here; multi-write bodies return one block per write.  This is the
+    oracle the ``*_gen`` registry variants run in ``mode='ref'``.
     """
     if len(inputs) != len(spec.reads) + len(spec.scalars):
         raise ValueError(
@@ -339,7 +383,25 @@ def evaluate(spec: TraversalSpec, inputs: Sequence[Any]):
     env: dict[str, Any] = {a.array: x for a, x in zip(spec.reads, arrays)}
     env.update(zip(spec.scalars, scalars))
     out = spec.body(env)
-    dtype = spec.out_dtype
-    if dtype is None:
-        dtype = arrays[0].dtype if arrays else out.dtype
-    return out.astype(dtype)
+    comb = resolve_combine(spec.reduce)
+    if comb.n_state > 1:
+        state = out if isinstance(out, tuple) else (out,)
+        if len(state) != comb.n_state:   # mirror the emitter's check
+            raise ValueError(
+                f"{spec.name}: body returned {len(state)} state "
+                f"components for combine {comb.name!r} "
+                f"(n_state={comb.n_state})")
+        out = comb.finalize(tuple(jnp.asarray(o, jnp.float32)
+                                  for o in state))
+    outs = out if isinstance(out, tuple) else (out,)
+    if len(outs) != len(spec.writes):
+        raise ValueError(f"{spec.name}: body returned {len(outs)} blocks "
+                         f"for {len(spec.writes)} writes")
+    res = []
+    for o, shape, dt in zip(outs, spec.out_shapes(),
+                            spec.out_dtypes(arrays)):
+        o = jnp.asarray(o)
+        if o.shape != shape and not spec.reads:
+            o = jnp.broadcast_to(o, shape)   # writes-only / fill bodies
+        res.append(o.astype(dt))
+    return res[0] if len(res) == 1 else tuple(res)

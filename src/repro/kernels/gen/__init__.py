@@ -1,16 +1,21 @@
 """Codegen-derived kernel family: hand-written families re-expressed as
 ``TraversalSpec``s and lowered by ``repro.codegen`` — no Pallas by hand.
 
-This module holds the first three ported archetypes (each a ~15-line
-spec vs a ~100-line hand kernel):
+This module holds the first three ported archetypes:
 
-  * ``stream_copy_gen``  — streaming elementwise (the hand ``stream.copy``)
-  * ``mxv_gen``          — vector-axis reduction (the hand ``mxv``)
-  * ``jacobi2d_gen``     — 5-point stencil (the hand ``jacobi2d``)
+  * ``stream_copy_gen``  — streaming elementwise
+  * ``mxv_gen``          — vector-axis reduction
+  * ``jacobi2d_gen``     — 5-point stencil
 
 plus ``stream_triad_gen`` (STREAM triad a = b + αc, paper Table 1 class),
 which exists *only* as a spec — the registry, conformance matrix,
 autotuner, and fig6 benchmark all pick it up with zero bespoke plumbing.
+
+The stream and mxv hand-written bodies are fully *retired*: their spec
+builders now live with their families (``kernels/stream/specs.py``,
+``kernels/mxv/specs.py``) and are shared by the public ``ops.py``
+wrappers and the ``*_gen`` registry variants alike — one definition,
+two registry rows (hand-named and ``_gen``), zero hand Pallas.
 
 The remaining families live in sibling modules (every hand family now
 has a generated counterpart):
@@ -34,7 +39,9 @@ from repro.core.striding import StridingConfig
 from repro.kernels.common import example_input as _rand
 from repro.kernels.jacobi2d import ref as _jac_ref
 from repro.kernels.mxv import ref as _mxv_ref
+from repro.kernels.mxv.specs import mxv_spec
 from repro.kernels.stream import ref as _stream_ref
+from repro.kernels.stream.specs import copy_spec, triad_spec
 from repro.registry.base import KernelSpec, register
 
 __all__ = [
@@ -46,41 +53,8 @@ __all__ = [
 
 
 # ------------------------------------------------------------- specs
-
-def copy_spec(x) -> TraversalSpec:
-    rows, cols = x.shape
-    return TraversalSpec(
-        name="stream_copy_gen",
-        axes=(Axis("i", rows), Axis("j", cols)),
-        reads=(Access("x", ("i", "j")),),
-        writes=(Access("y", ("i", "j")),),
-        body=lambda env: env["x"],
-    )
-
-
-def triad_spec(b, c, alpha=0.0) -> TraversalSpec:
-    rows, cols = b.shape
-    return TraversalSpec(
-        name="stream_triad_gen",
-        axes=(Axis("i", rows), Axis("j", cols)),
-        reads=(Access("b", ("i", "j")), Access("c", ("i", "j"))),
-        writes=(Access("a", ("i", "j")),),
-        scalars=("alpha",),
-        body=lambda env: env["b"] + env["alpha"] * env["c"],
-    )
-
-
-def mxv_spec(a, x) -> TraversalSpec:
-    m, n = a.shape
-    return TraversalSpec(
-        name="mxv_gen",
-        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
-        reads=(Access("A", ("i", "j")), Access("x", ("j",))),
-        writes=(Access("y", ("i",)),),
-        body=lambda env: jnp.dot(env["A"], env["x"],
-                                 preferred_element_type=jnp.float32),
-    )
-
+# copy/triad/mxv specs live with their families (stream/specs.py,
+# mxv/specs.py) — shared verbatim by the retired families' ops wrappers
 
 _JAC_HALO = ((1, 1), (1, 1))
 

@@ -2,26 +2,27 @@
 attention, fused RMSNorm, and the fused AdamW step — as
 ``TraversalSpec``s, no hand-written Pallas.
 
-  * ``decode_attn_gen`` — two generated *stride-axis reduction* passes
-    over the KV cache, both batched (``b`` is a batch grid dim) with the
-    sequence axis split into D streams: pass 1 is a ``reduce="max"``
-    sweep producing the global score max per head (numerical stability),
-    pass 2 a ``reduce="sum"`` sweep producing ``[Σ softmax·V | Σ w]``
-    concatenated along one write axis; the wrapper divides.  This
-    decomposes online softmax into two linear stream-reductions —
-    exactly what the generic combine can merge across streams.
+  * ``decode_attn_gen`` — ONE generated *stride-axis reduction* sweep
+    over the KV cache (``b`` a batch grid dim, the sequence axis split
+    into D streams): the sweep is reduced with the paired-state
+    :class:`~repro.codegen.OnlineSoftmax` combinator, so each block's
+    (max, rescaled Σ softmax·V, rescaled Σ w) partial state merges
+    numerically-stably across the D merged streams and grid steps and
+    K/V are each read exactly once — the single-pass flash-decode the
+    two-pass max+sum decomposition used to approximate.
   * ``rmsnorm_gen``     — ``full_width`` streaming nest: the body takes
     a per-row mean over the whole vector extent.
-  * ``adamw_update_gen`` — three 1-D nests over the flattened parameter,
-    each loop-blocked into a ``[rows, 128·P]`` tile grid (§5.1.1) — the
-    p′/m′/v′ outputs of the hand kernel's fused triple write.
+  * ``adamw_update_gen`` — one 2-D nest over the §5.1.1-blocked
+    flattened parameter writing p′/m′/v′ as three *native* outputs
+    (three Pallas store streams, no stacked free axis, no unstack
+    copies).
 """
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.codegen import Access, Axis, TraversalSpec, run_spec
+from repro.codegen import Access, Axis, OnlineSoftmax, TraversalSpec, run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels.adamw import ref as _adamw_ref
@@ -36,15 +37,14 @@ __all__ = ["decode_attn_gen", "rmsnorm_gen", "adamw_update_gen"]
 
 # --------------------------------------------------------- decode attn
 
-def _decode_axes(b, s, e, hq, dh):
-    return (Axis("b", b, kind="batch"), Axis("s", s, kind="reduction"),
-            Axis("e", e), Axis("f", hq * dh))
-
-
 @functools.lru_cache(maxsize=None)
-def _decode_specs(hkv: int, dh: int):
-    """Per-(Hkv, dh) pair of generated spec builders (the head split is
-    a static reshape inside the bodies)."""
+def _decode_spec(hkv: int, dh: int):
+    """Per-(Hkv, dh) single-pass spec builder (the head split is a
+    static reshape inside the body).  The body emits the online-softmax
+    partial state for its KV block; the ``OnlineSoftmax`` combinator
+    merges states across the D streams and the sequence grid and
+    finalizes ``num / den`` into the output — one K sweep, one V sweep.
+    """
 
     def heads(block, rows):
         return block.reshape(block.shape[0], rows, hkv, dh)
@@ -59,20 +59,7 @@ def _decode_specs(hkv: int, dh: int):
         s4 = jnp.einsum("bhgd,bshd->bhgs", q4, k4) * scale
         return s4.reshape(b, hq, rows)
 
-    def mx_spec(kc2, q2):
-        b, s, e = kc2.shape
-        hq = q2.shape[-1] // dh
-        scale = 1.0 / (dh ** 0.5)
-        return TraversalSpec(
-            name="decode_attn_mx_gen",
-            axes=_decode_axes(b, s, e, hq, dh) + (Axis("h", hq),),
-            reads=(Access("K", ("b", "s", "e")), Access("q", ("b", "f"))),
-            writes=(Access("m", ("b", "h")),),
-            body=lambda env: scores(env, scale).max(axis=-1),
-            out_dtype=jnp.float32, reduce="max", full_width=True,
-        )
-
-    def av_spec(kc2, vc2, q2, m):
+    def spec(kc2, vc2, q2):
         b, s, e = kc2.shape
         hq = q2.shape[-1] // dh
         g = hq // hkv
@@ -80,28 +67,29 @@ def _decode_specs(hkv: int, dh: int):
 
         def body(env):
             sc = scores(env, scale)                       # (B, Hq, rows)
-            w = jnp.exp(sc - env["m"][..., None])
+            m = sc.max(axis=-1)                           # (B, Hq)
+            w = jnp.exp(sc - m[..., None])
             b_, rows = w.shape[0], w.shape[-1]
             v4 = heads(env["V"], rows).astype(jnp.float32)
             pv = jnp.einsum("bhgs,bshd->bhgd",
                             w.reshape(b_, hkv, g, rows), v4)
-            num = pv.reshape(b_, hq, dh)
-            den = w.sum(axis=-1)[..., None]
-            return jnp.concatenate([num, den], axis=-1
-                                   ).reshape(b_, hq * (dh + 1))
+            return (m, pv.reshape(b_, hq * dh), w.sum(axis=-1))
 
         return TraversalSpec(
-            name="decode_attn_av_gen",
-            axes=_decode_axes(b, s, e, hq, dh)
-            + (Axis("h", hq), Axis("z", hq * (dh + 1))),
+            name="decode_attn_gen_spec",
+            axes=(Axis("b", b, kind="batch"),
+                  Axis("s", s, kind="reduction"), Axis("e", e),
+                  Axis("f", hq * dh), Axis("z", hq * dh)),
             reads=(Access("K", ("b", "s", "e")),
                    Access("V", ("b", "s", "e")),
-                   Access("q", ("b", "f")), Access("m", ("b", "h"))),
+                   Access("q", ("b", "f"))),
             writes=(Access("o", ("b", "z")),),
-            body=body, out_dtype=jnp.float32, full_width=True,
+            body=body, out_dtype=jnp.float32,
+            reduce=OnlineSoftmax(groups=hq, vwidth=dh),
+            full_width=True,
         )
 
-    return mx_spec, av_spec
+    return spec
 
 
 @functools.partial(jax.jit, static_argnames=("hkv", "dh", "config", "mode"))
@@ -110,18 +98,14 @@ def _decode_run(q, kc, vc, hkv, dh, config, mode):
     s, e = kc.shape[1], hkv * dh
     kc2, vc2 = kc.reshape(b, s, e), vc.reshape(b, s, e)
     q2 = q.reshape(b, hq * dh)
-    mx_spec, av_spec = _decode_specs(hkv, dh)
-    m = run_spec(mx_spec, (kc2, q2), config, mode)         # (b, hq) f32
-    out = run_spec(av_spec, (kc2, vc2, q2, m), config, mode)
-    out = out.reshape(b, hq, dh + 1)
-    o = out[..., :dh] / jnp.maximum(out[..., dh:], 1e-20)
-    return o.astype(q.dtype)
+    out = run_spec(_decode_spec(hkv, dh), (kc2, vc2, q2), config, mode)
+    return out.reshape(b, hq, dh).astype(q.dtype)
 
 
 def decode_attn_gen(q, kc, vc, config=None, mode=None):
     """One-token GQA attention against a [B, S, Hkv, dh] KV cache,
-    generated: two stream-reduction sweeps of the (flattened) cache
-    fused into one program."""
+    generated: a single online-softmax stream-reduction sweep of the
+    (flattened) cache — K and V each read once."""
     mode = _mode(mode)
     s, hkv, dh = kc.shape[1], kc.shape[2], kc.shape[3]
     cfg = _resolve("decode_attn_gen", kc, config, mode, s,
@@ -180,9 +164,10 @@ _ADAMW_COLS = 512   # §5.1.1 blocking of the flattened tensor (hand _COLS)
 
 def adamw_spec(p2, g2, m2, v2, lr=0.0, b1=0.0, b2=0.0, eps=0.0, wd=0.0,
                bc1=1.0, bc2=1.0) -> TraversalSpec:
-    """One fused spec for all three outputs: the free axis ``t`` stacks
-    (p', m', v') so the single write carries the hand kernel's triple
-    store — 4 load + 3 store streams per stride, no re-reads."""
+    """One fused spec with three *native* outputs: (p', m', v') lower to
+    three Pallas output refs sharing the write access map — the hand
+    kernel's triple store as 4 load + 3 store streams per stride, no
+    re-reads, no stacked free axis, no unstack copies."""
     rows, cols = p2.shape
 
     def body(env):
@@ -193,17 +178,18 @@ def adamw_spec(p2, g2, m2, v2, lr=0.0, b1=0.0, b2=0.0, eps=0.0, wd=0.0,
         update = ((m_new / env["bc1"])
                   / (jnp.sqrt(v_new / env["bc2"]) + env["eps"])
                   + env["wd"] * pf)
-        return jnp.stack([pf - env["lr"] * update, m_new, v_new], axis=-2)
+        return (pf - env["lr"] * update, m_new, v_new)
 
     return TraversalSpec(
         name="adamw_update_gen",
-        axes=(Axis("i", rows), Axis("t", 3), Axis("j", cols)),
+        axes=(Axis("i", rows), Axis("j", cols)),
         reads=(Access("p", ("i", "j")), Access("g", ("i", "j")),
                Access("m", ("i", "j")), Access("v", ("i", "j"))),
-        writes=(Access("o", ("i", "t", "j")),),
+        writes=(Access("po", ("i", "j")), Access("mo", ("i", "j")),
+                Access("vo", ("i", "j"))),
         scalars=("lr", "b1", "b2", "eps", "wd", "bc1", "bc2"),
         body=body,
-        out_dtype=jnp.float32,
+        out_dtype=(jnp.float32, jnp.float32, jnp.float32),
     )
 
 
@@ -225,23 +211,23 @@ def _adamw_run(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2, config, mode):
         a = a.reshape(-1).astype(dt)
         return jnp.pad(a, (0, rows * cols - n)).reshape(rows, cols)
 
-    out = run_spec(adamw_spec,
-                   (flat(p, p.dtype), flat(g, g.dtype),
-                    flat(m, jnp.float32), flat(v, jnp.float32),
-                    lr, b1, b2, eps, wd, bc1, bc2), config, mode)
+    po, mo, vo = run_spec(adamw_spec,
+                          (flat(p, p.dtype), flat(g, g.dtype),
+                           flat(m, jnp.float32), flat(v, jnp.float32),
+                           lr, b1, b2, eps, wd, bc1, bc2), config, mode)
 
     def unflat(a, dt):
         return a.reshape(-1)[:n].reshape(shape).astype(dt)
 
-    return (unflat(out[:, 0, :], p.dtype), unflat(out[:, 1, :], jnp.float32),
-            unflat(out[:, 2, :], jnp.float32))
+    return (unflat(po, p.dtype), unflat(mo, jnp.float32),
+            unflat(vo, jnp.float32))
 
 
 def adamw_update_gen(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
                      bc1=1.0, bc2=1.0, config=None, mode=None):
     """Fused-AdamW step (generated): the flattened tensor is §5.1.1
     loop-blocked into [rows, 512] tiles and one spec writes (p', m', v')
-    through a stacked free axis.  Returns (p', m', v')."""
+    as three native output refs.  Returns (p', m', v')."""
     mode = _mode(mode)
     n = 1
     for s in p.shape:

@@ -1,7 +1,13 @@
-"""Jit'd wrappers for mxv / mxv_t with padding + config resolution.
+"""Jit'd wrappers for mxv / mxv_t.
 
-Config resolution (tune-cache → planner → default) runs outside jit so
-autotune results take effect immediately (see common.resolve_config).
+The hand-written Pallas bodies are retired (ROADMAP retirement plan):
+both wrappers resolve through the family's ``TraversalSpec`` builders
+in ``specs.py``, lowered by ``repro.codegen`` (padding + cropping
+happens inside the emitter; ``mxv_t``'s stride-axis reduction clamps D
+to divide the row count instead of padding — the combine identity
+cannot be guaranteed through an arbitrary body).  Config resolution
+(tune-cache → planner → default) runs outside jit so autotune results
+take effect immediately (see common.resolve_config).
 """
 from __future__ import annotations
 
@@ -9,11 +15,11 @@ import functools
 
 import jax
 
+from repro.codegen import run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.mxv import mxv as k
-from repro.kernels.mxv import ref
+from repro.kernels.mxv import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
@@ -28,16 +34,7 @@ def _resolve(kernel, shape, dtype, config, mode, extra_reads=0):
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _mxv(a, x, config: StridingConfig, mode: str) -> jax.Array:
-    if mode == "ref":
-        return ref.mxv_ref(a, x)
-    m, n = a.shape
-    d = config.stride_unroll
-    bm = common.choose_block(m // d, 8)
-    bn = 128 * config.portion_unroll
-    a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
-    x_p = common.pad_axis(x, 0, bn)
-    y = k.mxv(a_p, x_p, d, bm, bn, interpret=(mode == "interpret"))
-    return y[:m]
+    return run_spec(specs.mxv_spec, (a, x), config, mode)
 
 
 def mxv(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
@@ -50,16 +47,7 @@ def mxv(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _mxv_t(a, x, config: StridingConfig, mode: str) -> jax.Array:
-    if mode == "ref":
-        return ref.mxv_t_ref(a, x)
-    m, n = a.shape
-    d = config.stride_unroll
-    bm = common.choose_block(m // d, 8)
-    bn = 128 * config.portion_unroll
-    a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
-    x_p = common.pad_axis(x, 0, d * bm)
-    y = k.mxv_t(a_p, x_p, d, bm, bn, interpret=(mode == "interpret"))
-    return y[:n]
+    return run_spec(specs.mxv_t_spec, (a, x), config, mode)
 
 
 def mxv_t(a: jax.Array, x: jax.Array, config: StridingConfig | None = None,

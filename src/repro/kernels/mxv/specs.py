@@ -1,0 +1,47 @@
+"""``TraversalSpec`` builders for the matrix-vector family.
+
+These specs ARE the mxv kernels now: the hand-written Pallas bodies
+(``mxv.py``) were retired once the generated variants had matched them
+for a full release cycle (ROADMAP retirement plan); ``ops.py`` and the
+``mxv_gen`` registry variant both lower these builders through
+``repro.codegen``.
+
+  * ``mxv_spec``   — y = A @ x, the paper's mxv/gemvermxv2: vectorize j,
+    stride-unroll i into D row streams of A, f32 accumulation across the
+    column grid (``_emit_reduction``).
+  * ``mxv_t_spec`` — y = Aᵀ @ x, paper Listing 1 (gemvermxv1 / doitgen
+    core): the *streamed* axis is reduced — D row streams of A (and of
+    x, as rank-1 row streams) merge into one full-width accumulator
+    (``_emit_stream_reduction`` with the "sum" combinator).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec
+
+__all__ = ["mxv_spec", "mxv_t_spec"]
+
+
+def mxv_spec(a, x) -> TraversalSpec:
+    m, n = a.shape
+    return TraversalSpec(
+        name="mxv",
+        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
+        reads=(Access("A", ("i", "j")), Access("x", ("j",))),
+        writes=(Access("y", ("i",)),),
+        body=lambda env: jnp.dot(env["A"], env["x"],
+                                 preferred_element_type=jnp.float32),
+    )
+
+
+def mxv_t_spec(a, x) -> TraversalSpec:
+    m, n = a.shape
+    return TraversalSpec(
+        name="mxv_t",
+        axes=(Axis("i", m, kind="reduction"), Axis("j", n)),
+        reads=(Access("A", ("i", "j")), Access("x", ("i",))),
+        writes=(Access("y", ("j",)),),
+        body=lambda env: jnp.dot(env["x"], env["A"],
+                                 preferred_element_type=jnp.float32),
+    )

@@ -1,10 +1,13 @@
 """Jit'd public wrappers for the stream kernels.
 
-Handles config defaulting (tune-cache → planner), divisibility padding,
-and mode dispatch (pallas / interpret / ref).  Config resolution runs in
-the plain-Python wrapper — not under jit — so a fresh autotune result is
-picked up on the very next call instead of being frozen into a cached
-trace.
+The hand-written Pallas bodies are retired (ROADMAP retirement plan):
+every wrapper resolves through the family's ``TraversalSpec`` builders
+in ``specs.py``, lowered by ``repro.codegen`` — mode dispatch included
+(``ref`` runs the spec's pure-jnp interpreter, ``interpret``/``pallas``
+the emitted kernel).  Config resolution (tune-cache → planner) still
+runs in the plain-Python wrapper — not under jit — so a fresh autotune
+result is picked up on the very next call instead of being frozen into
+a cached trace.
 """
 from __future__ import annotations
 
@@ -13,10 +16,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.codegen import run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.stream import ref, stream
+from repro.kernels.stream import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
@@ -32,13 +36,9 @@ def _resolve(kernel, x_shape, dtype, config, mode, read_arrays, write_arrays):
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _read(x, config: StridingConfig, mode: str) -> jax.Array:
     d = config.stride_unroll
-    if mode == "ref":
-        return ref.read_ref(x, d)
     rows, cols = x.shape
-    bm = common.choose_block(rows // d, 8)
-    bn = common.choose_block(cols, 128 * config.portion_unroll)
-    return stream.read(x, d, bm, bn, interpret=(mode == "interpret"),
-                       arrangement=config.arrangement)
+    x2 = x.reshape(d, (rows // d) * cols)   # one row per concurrent stream
+    return run_spec(specs.read_spec, (x2,), config, mode)
 
 
 def stream_read(x: jax.Array, config: StridingConfig | None = None,
@@ -51,13 +51,7 @@ def stream_read(x: jax.Array, config: StridingConfig | None = None,
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _copy(x, config: StridingConfig, mode: str) -> jax.Array:
-    if mode == "ref":
-        return ref.copy_ref(x)
-    d = config.stride_unroll
-    rows, cols = x.shape
-    bm = common.choose_block(rows // d, 8)
-    bn = common.choose_block(cols, 128 * config.portion_unroll)
-    return stream.copy(x, d, bm, bn, interpret=(mode == "interpret"))
+    return run_spec(specs.copy_spec, (x,), config, mode)
 
 
 def stream_copy(x: jax.Array, config: StridingConfig | None = None,
@@ -72,20 +66,15 @@ def stream_copy(x: jax.Array, config: StridingConfig | None = None,
                    static_argnames=("shape", "value", "dtype", "config",
                                     "mode"))
 def _init(shape, value, dtype, config: StridingConfig, mode: str):
-    if mode == "ref":
-        return ref.init_ref(shape, value, dtype)
-    d = config.stride_unroll
-    rows, cols = shape
-    bm = common.choose_block(rows // d, 8)
-    bn = common.choose_block(cols, 128 * config.portion_unroll)
-    return stream.init(shape, value, dtype, d, bm, bn,
-                       interpret=(mode == "interpret"))
+    build = functools.partial(specs.init_spec, shape, dtype)
+    return run_spec(build, (value,), config, mode)
 
 
 def stream_init(shape: tuple[int, int], value=0.0, dtype=jnp.float32,
                 config: StridingConfig | None = None,
                 mode: str | None = None) -> jax.Array:
-    """Fill (paper 'init' kernel, Table 1)."""
+    """Fill (paper 'init' kernel, Table 1): a writes-only spec — zero
+    read streams, D strided store positions."""
     mode = mode or common.kernel_mode()
     cfg = _resolve("stream_init", shape, dtype, config, mode, 0, 1)
     return _init(tuple(shape), value, dtype, cfg, mode)
@@ -93,18 +82,15 @@ def stream_init(shape: tuple[int, int], value=0.0, dtype=jnp.float32,
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _copy_manual(x, config: StridingConfig, mode: str) -> jax.Array:
-    if mode == "ref":
-        return ref.copy_ref(x)
-    d = config.stride_unroll
-    rows, cols = x.shape
-    bm = common.choose_block(rows // d, 8)
-    return stream.copy_manual(x, d, bm, cols, config.lookahead,
-                              interpret=(mode == "interpret"))
+    return run_spec(specs.copy_spec, (x,), config, mode)
 
 
 def stream_copy_manual(x: jax.Array, config: StridingConfig | None = None,
                        mode: str | None = None) -> jax.Array:
-    """Copy via the explicit multi-buffered DMA pipeline (lookahead knob)."""
+    """Copy via the explicit multi-buffered DMA pipeline: a non-default
+    ``config.lookahead`` selects the emitter's fused manual
+    ``make_async_copy`` ring (lookahead=1 = the prefetch-off ablation);
+    lookahead=2 is the Pallas auto-pipeline's own double-buffer depth."""
     mode = mode or common.kernel_mode()
     cfg = _resolve("stream_copy_manual", x.shape, x.dtype, config, mode, 1, 1)
     return _copy_manual(x, cfg, mode)

@@ -1,0 +1,81 @@
+"""``TraversalSpec`` builders for the stream micro-kernel family.
+
+These specs ARE the stream kernels now: the hand-written Pallas bodies
+(``stream.py``) were retired once the generated variants had matched
+them for a full release cycle (ROADMAP retirement plan), and both the
+public ``ops.py`` wrappers and the ``*_gen`` registry variants lower
+these builders through ``repro.codegen``.
+
+  * ``copy_spec``  — streaming elementwise copy (D read streams + D
+    strided store positions; a non-default ``lookahead`` selects the
+    explicit manual DMA ring, lookahead=1 = prefetch off).
+  * ``triad_spec`` — STREAM triad a = b + αc (paper Table 1 class).
+  * ``read_spec``  — per-stream checksums: the wrapper reshapes the
+    array to ``[D, seg·cols]`` so each of the D concurrent streams is
+    one contiguous segment, and the spec reduces its vector axis — the
+    same D-segment access pattern the hand kernel drove by hand.
+  * ``init_spec``  — fill via D strided store positions: a *writes-only*
+    spec (no read streams); the scalar fill value broadcasts into the
+    store stream.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec
+
+__all__ = ["copy_spec", "triad_spec", "read_spec", "init_spec"]
+
+
+def copy_spec(x) -> TraversalSpec:
+    rows, cols = x.shape
+    return TraversalSpec(
+        name="stream_copy",
+        axes=(Axis("i", rows), Axis("j", cols)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: env["x"],
+    )
+
+
+def triad_spec(b, c, alpha=0.0) -> TraversalSpec:
+    rows, cols = b.shape
+    return TraversalSpec(
+        name="stream_triad",
+        axes=(Axis("i", rows), Axis("j", cols)),
+        reads=(Access("b", ("i", "j")), Access("c", ("i", "j"))),
+        writes=(Access("a", ("i", "j")),),
+        scalars=("alpha",),
+        body=lambda env: env["b"] + env["alpha"] * env["c"],
+    )
+
+
+def read_spec(x2) -> TraversalSpec:
+    """Per-stream checksums over ``x2 = x.reshape(D, seg*cols)``: the
+    stride axis is the stream index itself (one row per stream), so the
+    D-way stride split reproduces the hand kernel's D concurrent
+    segment streams exactly."""
+    d, w = x2.shape
+    return TraversalSpec(
+        name="stream_read",
+        axes=(Axis("k", d), Axis("j", w, kind="reduction")),
+        reads=(Access("x", ("k", "j")),),
+        writes=(Access("y", ("k",)),),
+        body=lambda env: env["x"].astype(jnp.float32).sum(axis=-1),
+        out_dtype=jnp.float32,
+    )
+
+
+def init_spec(shape, dtype, value=0.0) -> TraversalSpec:
+    """Fill: zero read streams, one store stream; the emitter broadcasts
+    the scalar body result into the output blocks."""
+    rows, cols = shape
+    return TraversalSpec(
+        name="stream_init",
+        axes=(Axis("i", rows), Axis("j", cols)),
+        reads=(),
+        writes=(Access("y", ("i", "j")),),
+        scalars=("value",),
+        body=lambda env: env["value"],
+        out_dtype=dtype,
+    )

@@ -1,0 +1,25 @@
+"""Shared test configuration.
+
+Registers the hypothesis settings profiles used by the property-based
+codegen harness (``tests/test_codegen_properties.py``).  CI's codegen
+job selects the seeded, deadline-free profile with
+``--hypothesis-profile=ci`` so the differential harness runs 100+
+examples per test on both ``REPRO_KERNEL_MODE`` legs without flaking on
+interpret-mode latency; everywhere else the lighter ``dev`` profile is
+the default.  hypothesis itself stays an optional dependency — when it
+is absent the harness's seeded stdlib-random tests still run.
+"""
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:          # optional dependency: seeded tests still run
+    pass
+else:
+    _SUPPRESS = [HealthCheck.too_slow, HealthCheck.data_too_large,
+                 HealthCheck.filter_too_much, HealthCheck.large_base_example]
+    settings.register_profile(
+        "ci", max_examples=120, deadline=None, derandomize=True,
+        suppress_health_check=_SUPPRESS)
+    settings.register_profile(
+        "dev", max_examples=20, deadline=None,
+        suppress_health_check=_SUPPRESS)
+    settings.load_profile("dev")

@@ -1,0 +1,91 @@
+"""Schema stability for ``benchmarks/run.py --json``.
+
+The per-PR perf-trajectory snapshots (``BENCH_*.json``) are diffed
+across commits, so the structured payload is a contract: ``meta``
+(backend / mode / quick / jax_version) plus ``tables`` of row dicts
+each carrying ``us_per_call``.  Dropping the retired families'
+``gen_vs_hand`` rows must not change that shape — the fig6 row schema
+itself (kernel / hand / d / p / block_rows / *_seconds / ratios) is
+checked against the writer directly so the contract holds without
+timing benchmark-scale kernels in tier-1.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FIG6_GEN_VS_HAND_KEYS = {
+    "kernel", "hand", "d", "p", "block_rows", "gen_seconds",
+    "hand_seconds", "gen_vs_hand", "paired_median_ratio", "seconds",
+}
+
+
+def test_run_json_payload_schema(tmp_path):
+    """End-to-end ``python -m benchmarks.run --json`` on the cheapest
+    (model-only) table: meta + tables + us_per_call per row."""
+    out = tmp_path / "bench.json"
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get(
+                   "PYTHONPATH", ""))
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick",
+         "--only", "fig34_stalls", "--json", str(out)],
+        cwd=_ROOT, env=env, check=True, capture_output=True, timeout=300)
+    payload = json.loads(out.read_text())
+    assert set(payload) == {"meta", "tables"}
+    meta = payload["meta"]
+    assert {"backend", "mode", "quick", "jax_version"} <= set(meta)
+    assert meta["quick"] is True
+    tables = payload["tables"]
+    assert set(tables) == {"fig34_stalls"}
+    rows = tables["fig34_stalls"]
+    assert rows, "model table must emit rows"
+    for row in rows:
+        assert "us_per_call" in row
+        assert isinstance(row["us_per_call"], float)
+
+
+def test_json_payload_writer_is_total():
+    """_json_payload must serialize any table row (incl. None ratios
+    from unavailable measurements) without dropping keys."""
+    from benchmarks.run import _json_payload
+    rows = [{"kernel": "k", "seconds": 1.5e-4, "measured": None}]
+    payload = _json_payload({"t": rows}, quick=True)
+    (row,) = payload["tables"]["t"]
+    assert row["us_per_call"] == 150.0
+    assert row["measured"] is None
+    json.dumps(payload)   # json-clean
+
+
+def test_fig6_gen_vs_hand_row_schema_unchanged():
+    """The gen_vs_hand row writer still emits the full key set for the
+    surviving (non-retired) pairs — asserted against the row-builder's
+    code path with a stubbed timer, so no benchmark-scale kernels run."""
+    from benchmarks import fig6_kernels as f6
+
+    pairs = f6.gen_hand_pairs()
+    assert pairs, "live gen-vs-hand pairs must remain after retirement"
+
+    real_paired, real_tuned = f6._paired_best, f6._tuned_config
+    from repro.core.striding import StridingConfig
+    try:
+        f6._paired_best = lambda fa, fb, iters, **kw: (1e-4, 1e-4, 1.0)
+        f6._tuned_config = lambda spec, sizes: StridingConfig(2, 1)
+        # restrict to one cheap pair: monkeypatch the pair list
+        f6_pairs = pairs[:1]
+        real_pairs_fn = f6.gen_hand_pairs
+        f6.gen_hand_pairs = lambda: f6_pairs
+        try:
+            rows = f6.gen_vs_hand_rows(quick=True)
+        finally:
+            f6.gen_hand_pairs = real_pairs_fn
+    finally:
+        f6._paired_best, f6._tuned_config = real_paired, real_tuned
+    assert len(rows) == 1
+    assert set(rows[0]) == FIG6_GEN_VS_HAND_KEYS
+    retired = f6.RETIRED_HAND_KERNELS
+    assert all(r["hand"] not in retired for r in rows)

@@ -1,0 +1,138 @@
+"""Numerical-stability regressions for the single-pass generated flash
+decode (``decode_attn_gen``: ONE online-softmax stream-reduction sweep
+of the KV cache).
+
+Covers the ISSUE's adversarial regimes: large-magnitude logits (±1e4,
+where a naive exp overflows/underflows), one-hot score rows (softmax
+saturates to a single position), and an fp64-numpy oracle with explicit
+fp32 tolerance bounds.  The plan-level test pins the tentpole claim
+that K is read ONCE: the single spec's derived Traffic counts exactly
+one operand stream per stride for K and one for V (the retired two-pass
+decomposition cost 2 K-stream reads + 1 V), and the whole kernel is one
+stride-axis-reduction pass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.codegen import classify, traffic_of
+from repro.core.striding import StridingConfig
+from repro.kernels.gen.framework import _decode_spec, decode_attn_gen
+
+B, S, HQ, HKV, DH = 1, 64, 4, 2, 16
+
+
+def _np_oracle(q, k, v):
+    """Grouped-query softmax attention in numpy float64."""
+    q, k, v = (np.asarray(a, np.float64) for a in (q, k, v))
+    b, hq, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scores = np.einsum("bhgd,bshd->bhgs", qg, k) / np.sqrt(dh)
+    p = np.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return np.einsum("bhgs,bshd->bhgd", p, v).reshape(b, hq, dh)
+
+
+def _inputs(key=0, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (B, HQ, DH), jnp.float32) * scale
+    k = jax.random.normal(ks[1], (B, S, HKV, DH), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, HKV, DH), jnp.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------- plan level
+
+def test_single_pass_plan_reads_k_once():
+    kc2 = jax.ShapeDtypeStruct((B, S, HKV * DH), jnp.float32)
+    q2 = jax.ShapeDtypeStruct((B, HQ * DH), jnp.float32)
+    spec = _decode_spec(HKV, DH)(kc2, kc2, q2)
+    info = classify(spec)
+    assert info.stride_reduction            # ONE stream-reduction pass
+    assert info.stride_axis == "s" and info.batch_axes == ("b",)
+    t = traffic_of(spec)
+    # operand streams per stride in the emitted plan: K=1, V=1 — the
+    # cache is swept once (two-pass decode read K twice: 3 total)
+    assert t.read_arrays == 2
+    assert spec.combine.n_state == 3        # (m, num, den) paired state
+
+
+def test_single_pass_single_spec_module():
+    """The two-pass decomposition is gone: the module builds exactly one
+    spec per (Hkv, dh), reduced with the online-softmax combinator."""
+    import repro.kernels.gen.framework as fw
+    assert not hasattr(fw, "_decode_specs")   # the retired two-pass pair
+    spec = fw._decode_spec(2, 8)(
+        jax.ShapeDtypeStruct((1, 32, 16), jnp.float32),
+        jax.ShapeDtypeStruct((1, 32, 16), jnp.float32),
+        jax.ShapeDtypeStruct((1, 32), jnp.float32))
+    assert spec.combine.name == "online_softmax"
+    assert len(spec.writes) == 1
+
+
+# ------------------------------------------------------- value regimes
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("d,p", [(1, 1), (2, 1), (4, 2)])
+def test_fp32_vs_fp64_oracle(mode, d, p):
+    q, k, v = _inputs()
+    got = decode_attn_gen(q, k, v, config=StridingConfig(d, p), mode=mode)
+    want = _np_oracle(q, k, v)
+    # fp32 single-pass vs fp64 two-pass: scores are O(√dh·σ²) so the
+    # softmax weights carry ~1e-6 relative error, amplified ≤ ~30× by
+    # the weighted sum over 64 positions
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_large_magnitude_logits(mode, d):
+    """±1e4 logits: naive exp(score) overflows f32 (max ~3.4e38 < e^1e4);
+    the running-max rescale must keep every intermediate finite and the
+    result equal to the fp64 oracle."""
+    q, k, v = _inputs(key=1)
+    scale = 1e4 / np.sqrt(DH)
+    q = jnp.sign(q) * scale                # scores reach ±1e4 exactly
+    k = jnp.sign(k)
+    got = decode_attn_gen(q, k, v, config=StridingConfig(d, 1), mode=mode)
+    assert np.all(np.isfinite(np.asarray(got)))
+    want = _np_oracle(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_one_hot_rows(mode):
+    """A score gap of ~1e4 makes softmax numerically one-hot: the output
+    must be exactly the selected V row (per group), regardless of which
+    of the D streams holds the winning position."""
+    q, k, v = _inputs(key=2)
+    hot = 37                               # winning cache position
+    k = jnp.zeros_like(k).at[:, hot].set(1.0)
+    q = jnp.ones_like(q) * 1e4             # score: 0 everywhere, huge @hot
+    got = decode_attn_gen(q, k, v, config=StridingConfig(4, 1),
+                          mode=mode)
+    want = np.broadcast_to(
+        np.asarray(v)[:, hot].reshape(B, HKV, 1, DH),
+        (B, HKV, HQ // HKV, DH)).reshape(B, HQ, DH)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_matches_registry_reference(mode):
+    """Single-pass result == the registry's two-pass jnp oracle at the
+    conformance tolerance, across stream counts."""
+    from repro.kernels.decode_attn.ref import decode_attn_ref
+    q, k, v = _inputs(key=3)
+    want = decode_attn_ref(q, k, v)
+    for d in (1, 2, 4):
+        got = decode_attn_gen(q, k, v, config=StridingConfig(d, 1),
+                              mode=mode)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-5, atol=2e-5)

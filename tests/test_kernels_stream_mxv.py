@@ -21,14 +21,17 @@ def _rand(shape, dtype=jnp.float32, key=KEY):
 
 @pytest.mark.parametrize("d", [2, 4])
 def test_stream_read_interleaved_matches_grouped(d):
-    """Paper §4.4: arrangement changes instruction order, not results."""
+    """Paper §4.4: arrangement changes instruction order, not results
+    (up to f32 summation bracketing — the generated kernel's
+    interleaved arrangement folds lane sub-portions into the
+    accumulator in a different order than grouped)."""
     x = _rand((32, 512))
     a = stream_ops.stream_read(x, config=StridingConfig(d, 2),
                                mode="interpret")
     b = stream_ops.stream_read(
         x, config=StridingConfig(d, 2, arrangement="interleaved"),
         mode="interpret")
-    np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(a, b, rtol=1e-5)
     np.testing.assert_allclose(a, stream_ref.read_ref(x, d), rtol=1e-5)
 
 
