@@ -1,0 +1,87 @@
+"""Per-descriptor overhead micro-sweep: seed the DMA model's §5.1.1 term.
+
+The analytic ``TpuDmaModel`` charges every block transfer a fixed issue
+cost (``dma_latency + descriptor_overhead``); larger ``block_rows``
+tiles amortize it, which is exactly what the planner's ranked
+``block_rows`` sweep trades against VMEM.  The descriptor term was
+uncalibrated (ROADMAP PR-3 follow-on) — this sweep measures it:
+
+copy the SAME payload as ``k`` separate chunk copies for growing ``k``;
+the wall-clock is ``t(k) ≈ t_mem + k · c`` and the least-squares slope
+``c`` is the per-transfer issue cost.  On this container the copies are
+host memcpys, so ``c`` is a host-proxy seed; on real v5e the same sweep
+over ``make_async_copy`` blocks calibrates the true HBM descriptor
+cost.  Either way the fitted value feeds the planner through the
+``REPRO_DMA_DESCRIPTOR_NS`` override (``python -m
+benchmarks.descriptor_sweep`` prints the export line):
+
+    export REPRO_DMA_DESCRIPTOR_NS=<fitted>
+
+``repro.core.dma_model.default_tpu_model`` picks it up and every
+``rank_configs`` call (planner, autotuner candidates, fig6) scores
+``block_rows`` with the measured term.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+CHUNK_COUNTS = (1, 4, 16, 64, 256)
+
+
+def measure(n_elems: int, reps: int) -> list[tuple[int, float]]:
+    """[(chunks, best_seconds)] for copying ``n_elems`` f32 as k chunks."""
+    src = np.random.default_rng(0).standard_normal(n_elems).astype(np.float32)
+    dst = np.empty_like(src)
+    dst[:] = src                      # fault both buffers in before timing
+    samples = []
+    for k in CHUNK_COUNTS:
+        seg = n_elems // k
+        best = float("inf")
+        for _ in range(reps + 1):     # first round re-warms this split
+            t0 = time.perf_counter()
+            for i in range(k):
+                dst[i * seg:(i + 1) * seg] = src[i * seg:(i + 1) * seg]
+            best = min(best, time.perf_counter() - t0)
+        samples.append((k, best))
+    return samples
+
+
+def fit_descriptor_ns(samples: list[tuple[int, float]]) -> float:
+    """Least-squares slope of t(k) — seconds per extra chunk — in ns."""
+    ks = np.array([k for k, _ in samples], np.float64)
+    ts = np.array([t for _, t in samples], np.float64)
+    kc = ks - ks.mean()
+    slope = float((kc * (ts - ts.mean())).sum() / (kc * kc).sum())
+    return max(slope, 0.0) * 1e9
+
+
+def run(quick: bool = False) -> list[dict]:
+    n = 1 << 22 if quick else 1 << 24
+    samples = measure(n, reps=3 if quick else 7)
+    rows = []
+    for k, t in samples:
+        rows.append({
+            "kernel": "chunked_copy",
+            "chunks": k,
+            "bytes": n * 4,
+            "gibps": round(n * 4 / t / 2**30, 2),
+            "seconds": t,
+        })
+    ns = fit_descriptor_ns(samples)
+    rows.append({
+        "kernel": "descriptor_overhead_fit",
+        "ns_per_descriptor": round(ns, 1),
+        "export": f"REPRO_DMA_DESCRIPTOR_NS={round(ns, 1)}",
+        "seconds": ns * 1e-9,
+    })
+    emit(rows, "descriptor_sweep")
+    return rows
+
+
+if __name__ == "__main__":
+    fitted = [r for r in run() if r["kernel"] == "descriptor_overhead_fit"]
+    print(f"export {fitted[0]['export']}")

@@ -49,9 +49,9 @@ def main(argv=None) -> None:
                          "backend, mode)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (decode_kernel_sweep, fig2_stream,
-                            fig5_collisions, fig6_kernels, fig7_sota,
-                            fig34_stalls, roofline_table)
+    from benchmarks import (decode_kernel_sweep, descriptor_sweep,
+                            fig2_stream, fig5_collisions, fig6_kernels,
+                            fig7_sota, fig34_stalls, roofline_table)
     tables = {
         "fig2_stream": fig2_stream.run,
         "fig34_stalls": fig34_stalls.run,
@@ -59,6 +59,7 @@ def main(argv=None) -> None:
         "fig6_kernels": fig6_kernels.run,
         "fig7_sota": fig7_sota.run,
         "decode_kernel_sweep": decode_kernel_sweep.run,
+        "descriptor_sweep": descriptor_sweep.run,
         "roofline": roofline_table.run,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -46,10 +46,23 @@ NEG_INF = -1e30   # finite -inf stand-in: exp(NEG_INF - m) underflows to 0
 
 
 class Combine:
-    """Paired-state reduction combinator (init / merge / finalize)."""
+    """Paired-state reduction combinator (init / merge / finalize).
+
+    ``finalizing`` declares that :meth:`finalize` maps the accumulated
+    state to the *written* block(s) — the body then returns partial
+    STATE, and ``finalize`` may emit one block per spec write (the
+    per-output-access-map hook: e.g. ``OnlineSoftmax(with_lse=True)``
+    finalizes ``(attention, lse)``).  Every ``n_state > 1`` combinator
+    is inherently finalizing; a single-state combinator may opt in to
+    add derived side outputs (see ``SumWithTotal`` uses in
+    ``kernels/gen``).  Non-finalizing single-state combinators keep the
+    historical identity-finalize contract: the body's partial IS the
+    output block.
+    """
 
     name: str = "combine"
     n_state: int = 1
+    finalizing: bool = False
 
     def state_widths(self, out_width: int) -> tuple[int, ...]:
         """Lane width of each f32 state component, given the width of
@@ -115,13 +128,20 @@ class OnlineSoftmax(Combine):
       * ``m``   — per-group max of the block's scores,
       * ``num`` — sum of ``exp(score - m) * value`` over the block,
       * ``den`` — sum of ``exp(score - m)`` over the block.
+
+    ``with_lse=True`` makes ``finalize`` ALSO emit the per-group
+    log-sum-exp ``m + log(den)`` as a second output block — the
+    flash-attention side statistic sharded-attention combines need; the
+    spec then declares a second (``groups``-wide) write access.
     """
 
     groups: int            # independent softmax rows in the output
     vwidth: int            # value lanes per group (num width = g * v)
     eps: float = 1e-20     # finalize denominator floor
+    with_lse: bool = False   # finalize emits (out, logsumexp) pairs
     name: str = dataclasses.field(default="online_softmax", repr=False)
     n_state: int = dataclasses.field(default=3, repr=False)
+    finalizing: bool = dataclasses.field(default=True, repr=False)
 
     def state_widths(self, out_width):
         if out_width != self.groups * self.vwidth:
@@ -152,11 +172,14 @@ class OnlineSoftmax(Combine):
                 d1 * a1 + d2 * a2)
 
     def finalize(self, state):
-        _m, num, den = state
+        m, num, den = state
         shape = num.shape
         num = num.reshape(shape[:-1] + (self.groups, self.vwidth))
-        out = num / jnp.maximum(den, self.eps)[..., None]
-        return out.reshape(shape)
+        den = jnp.maximum(den, self.eps)
+        out = (num / den[..., None]).reshape(shape)
+        if not self.with_lse:
+            return out
+        return out, m + jnp.log(den)
 
 
 SUM = SumCombine()

@@ -32,7 +32,13 @@ lowering strategies:
 
 Specs with multiple ``writes`` lower to multiple Pallas output refs —
 one store stream (or manual staging ring) per output, no stacked free
-axis and no unstack copies; the body returns one block per write.
+axis and no unstack copies; the body returns one block per write.  Each
+write carries its OWN access map (``_plan_writes``): a rank-1 row
+statistic lowers to a ``(d, bm)`` block next to a matrix write's
+``(d, bm, bn)``, a free-axis side output to its own whole-extent tile,
+and stream reductions finalize one block per write through a
+*finalizing* combinator (``OnlineSoftmax(with_lse=True)`` emits the
+attention row and its log-sum-exp from one accumulated state).
 Writes-only specs (no reads) broadcast the body's value into the store
 stream (the ``init`` fill pattern).
 
@@ -265,19 +271,74 @@ def _geometry(sched: transforms.Schedule, bp: transforms.BlockPlan,
     return grid, {a: i for i, a in enumerate(order)}
 
 
-def _write_dims(spec: loopir.TraversalSpec, bp: transforms.BlockPlan):
-    """Split the (shared) write index into (batch vars, stride?, tail
-    vars).  Multi-output specs write through one access map: every write
-    ref shares the block geometry, only the array (and dtype) differ."""
+def _write_rest(acc: loopir.Access, info: loopir.NestInfo) -> tuple:
+    """A write's non-batch index vars, in declared order."""
+    return tuple(v for v in acc.index if v not in info.batch_axes)
+
+
+@dataclasses.dataclass
+class _WritePlan:
+    """One write access lowered to its OWN output geometry: block shape,
+    grid index map, and padded/final array shapes — heterogeneous maps
+    (a rank-1 row statistic next to a matrix write) each get their own
+    split instead of sharing writes[0]'s."""
+
+    access: loopir.Access
+    nb: int                    # leading batch dims
+    bpos: tuple                # batch grid positions
+    batch_ext: tuple           # batch extents (natural, unpadded)
+    tail: tuple                # non-batch vars after the stride axis
+    block_tail: tuple          # block dims for the tail vars
+    shape_tail: tuple          # padded array dims for the tail vars
+    imap_tail: tuple           # grid position per tail dim (None = whole)
+    plain: bool                # == (stride, vector) map, lane-slicable
+
+
+def _plan_writes(spec: loopir.TraversalSpec, bp: transforms.BlockPlan,
+                 pos: dict) -> list[_WritePlan]:
+    """Per-write geometry for the streaming path.  Every write must lead
+    with the stride axis (after its batch prefix); the tail may be any
+    order/subset of the vector axis and free axes — a write that OMITS
+    the vector axis is a reduced-rank side output whose row statistic
+    needs whole rows (``full_width``), since a lane-split body could only
+    produce per-sub-row values."""
     info = bp.info
-    for w in spec.writes[1:]:
-        if w.index != spec.write.index:
+    full = info.col_halo != (0, 0) or spec.full_width
+    plans = []
+    for acc in spec.writes:
+        bvars = tuple(v for v in acc.index if v in info.batch_axes)
+        rest = _write_rest(acc, info)
+        if not rest or rest[0] != info.stride_axis:
             raise NotImplementedError(
-                f"{spec.name}: multi-output writes must share one access "
-                f"map ({w.array!r}{w.index} vs {spec.write.index})")
-    bvars = tuple(v for v in spec.write.index if v in info.batch_axes)
-    rest = tuple(v for v in spec.write.index if v not in info.batch_axes)
-    return bvars, rest
+                f"{spec.name}: streaming write {acc.array!r}{acc.index} "
+                "must lead with the stride axis (after any batch axes)")
+        tail = rest[1:]
+        if (info.vector_axis not in tail
+                and not (full or bp.bn == bp.cols)):
+            raise NotImplementedError(
+                f"{spec.name}: write {acc.array!r}{acc.index} omits the "
+                f"vector axis {info.vector_axis!r}; a reduced-rank side "
+                "output needs full_width=True (its row statistic must "
+                "see whole rows)")
+        block_tail, shape_tail, imap_tail = [], [], []
+        for v in tail:
+            if v == info.vector_axis:
+                shape_tail.append(bp.cols)
+                block_tail.append(bp.cols if full else bp.bn)
+                imap_tail.append(None if full else pos[v])
+            else:                               # free axis: whole extent
+                shape_tail.append(spec.axis(v).extent)
+                block_tail.append(spec.axis(v).extent)
+                imap_tail.append(None)
+        plans.append(_WritePlan(
+            access=acc, nb=len(bvars),
+            bpos=tuple(pos[v] for v in bvars),
+            batch_ext=tuple(spec.axis(v).extent for v in bvars),
+            tail=tail, block_tail=tuple(block_tail),
+            shape_tail=tuple(shape_tail), imap_tail=tuple(imap_tail),
+            plain=(not bvars and tail == (info.vector_axis,) and not full),
+        ))
+    return plans
 
 
 def _lane_slices(cfg: StridingConfig, bn: int) -> list:
@@ -291,42 +352,46 @@ def _lane_slices(cfg: StridingConfig, bn: int) -> list:
     return [slice(s * step, (s + 1) * step) for s in range(sub)]
 
 
+def _grouped_fold_env(spec: loopir.TraversalSpec, ops: list[_Operand],
+                      env, lanes: list):
+    """env(refs, k) for reduction bodies under the interleaved
+    arrangement: each lane-affected access's sub-portion loads are
+    issued round-robin (§4.4) but REASSEMBLED into one full-width block,
+    so the body folds every row in the same grouped bracketing as the
+    grouped arrangement.  Folding each sub-portion's partial into the
+    accumulator separately reassociated the f32 sum — the regression
+    that forced the grouped-vs-interleaved tolerance to 1e-5 in PR 4;
+    tests pin the restored 1e-6 parity."""
+    if len(lanes) == 1:
+        return lambda refs, k: env(refs, k, lanes[0])
+    laned = {op.access.array for op in ops if op.kind != "stream1d"}
+
+    def env_full(refs, k):
+        parts = [env(refs, k, sl) for sl in lanes]   # round-robin issue
+        return {name: (jnp.concatenate([p[name] for p in parts], axis=-1)
+                       if name in laned else parts[0][name])
+                for name in parts[0]}
+    return env_full
+
+
 def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
     spec, info = sched.spec, bp.info
     stream = sched.find(info.stride_axis, transforms.STREAM)
     d, seg_rows = stream.extent, stream.stride
     grid, pos = _geometry(sched, bp)
-    row_pos, col_pos = pos[info.stride_axis], pos[info.vector_axis]
+    row_pos = pos[info.stride_axis]
     ops = _lower_reads(sched, bp, arrays, pos)
     scal_arrays, scal_specs = _scalar_specs(scalars)
     in_specs = [s for op in ops for s in op.specs] + scal_specs
     operands = [a for op in ops for a in op.arrays] + scal_arrays
     env = _env_builder(spec, ops, sum(len(op.arrays) for op in ops))
 
-    bvars, rest = _write_dims(spec, bp)
-    if not rest or rest[0] != info.stride_axis:
-        raise NotImplementedError(
-            f"{spec.name}: streaming write {spec.write.index} must lead "
-            "with the stride axis")
-    nb = len(bvars)
-    full = info.col_halo != (0, 0) or spec.full_width
-    w_shape, w_block, w_imap = [], [], []
-    for v in rest[1:]:
-        if v == info.vector_axis:
-            w_shape.append(bp.cols)
-            w_block.append(bp.cols if full else bp.bn)
-            w_imap.append(None if full else col_pos)
-        else:                                   # free axis: whole extent
-            w_shape.append(spec.axis(v).extent)
-            w_block.append(spec.axis(v).extent)
-            w_imap.append(None)
-    plain = (nb == 0 and rest[1:] == (info.vector_axis,) and not full
-             and not info.free_axes and all(op.taps == 1 for op in ops))
+    wplans = _plan_writes(spec, bp, pos)
+    plain = (all(wp.plain for wp in wplans) and not info.free_axes
+             and all(op.taps == 1 for op in ops))
     lanes = _lane_slices(sched.config, bp.bn) if plain else [None]
     out_dtypes = spec.out_dtypes(arrays)
     n_out = len(spec.writes)
-    batch_ext = tuple(spec.axis(v).extent for v in bvars)
-    bpos = tuple(pos[v] for v in bvars)
 
     fill = not spec.reads               # writes-only: broadcast the value
 
@@ -335,10 +400,10 @@ def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
         for sl in lanes:
             for k in range(d):
                 blocks = _as_blocks(spec.body(env(refs, k, sl)), spec)
-                idx = (0,) * nb + (k,)
-                for o_ref, res in zip(o_refs, blocks):
+                for o_ref, res, wp in zip(o_refs, blocks, wplans):
+                    idx = (0,) * wp.nb + (k,)
                     if sl is None:
-                        o_ref[idx] = _fit(res, (bp.bm, *w_block),
+                        o_ref[idx] = _fit(res, (bp.bm, *wp.block_tail),
                                           broadcast=fill
                                           ).astype(o_ref.dtype)
                     else:               # lane sub-portion: static shape
@@ -346,33 +411,39 @@ def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
                             res, (bp.bm, sl.stop - sl.start),
                             broadcast=fill).astype(o_ref.dtype)
 
-    def out_imap(*g):
-        return (tuple(g[p] for p in bpos) + (0, g[row_pos])
-                + tuple(0 if p is None else g[p] for p in w_imap))
+    def out_spec(wp):
+        def out_imap(*g):
+            return (tuple(g[p] for p in wp.bpos) + (0, g[row_pos])
+                    + tuple(0 if p is None else g[p]
+                            for p in wp.imap_tail))
+        return pl.BlockSpec((1,) * wp.nb + (d, bp.bm, *wp.block_tail),
+                            out_imap)
 
-    out_block = pl.BlockSpec((1,) * nb + (d, bp.bm, *w_block), out_imap)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=[out_block] * n_out,
+        out_specs=[out_spec(wp) for wp in wplans],
         out_shape=[jax.ShapeDtypeStruct(
-            batch_ext + (d, seg_rows, *w_shape), jnp.dtype(dt))
-            for dt in out_dtypes],
+            wp.batch_ext + (d, seg_rows, *wp.shape_tail), jnp.dtype(dt))
+            for wp, dt in zip(wplans, out_dtypes)],
         interpret=interpret,
     )(*operands)
-    res = tuple(o.reshape(*batch_ext, d * seg_rows, *w_shape) for o in out)
+    res = tuple(o.reshape(*wp.batch_ext, d * seg_rows, *wp.shape_tail)
+                for o, wp in zip(out, wplans))
     return res[0] if n_out == 1 else res
 
 
 def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
+    """Vector-axis reductions written per stride row (the mxv pattern):
+    one f32 VMEM accumulator PER WRITE, written on the last reduction
+    step.  Multi-output specs accumulate each write's partial block into
+    its own accumulator (all writes share the rank-1 ``(stride,)`` map —
+    additive partials only, the historical vecred contract)."""
     spec, info = sched.spec, bp.info
     if info.batch_axes:
         raise NotImplementedError(
             f"{spec.name}: batched vector-axis reduction")
-    if len(spec.writes) != 1:
-        raise NotImplementedError(
-            f"{spec.name}: multi-output vector-axis reduction")
     stream = sched.find(info.stride_axis, transforms.STREAM)
     d, seg_rows = stream.extent, stream.stride
     grid, pos = _geometry(sched, bp)
@@ -385,35 +456,44 @@ def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
     has_taps = any(op.taps > 1 for op in ops)
     lanes = ([None] if has_taps
              else _lane_slices(sched.config, bp.bn))
-    out_dtype = spec.out_dtype or arrays[0].dtype
+    env_full = _grouped_fold_env(spec, ops, env, lanes)
+    out_dtypes = spec.out_dtypes(arrays)
+    n_out = len(spec.writes)
 
     def kernel(*refs):
-        o_ref = refs[len(operands)]
-        acc = refs[len(operands) + 1]
+        o_refs = refs[len(operands):len(operands) + n_out]
+        accs = refs[len(operands) + n_out:]
         j = pl.program_id(col_pos)
 
         @pl.when(j == 0)
         def _():
-            acc[...] = jnp.zeros_like(acc)
+            for acc in accs:
+                acc[...] = jnp.zeros_like(acc)
 
-        for sl in lanes:
-            for k in range(d):
-                acc[k, :] += spec.body(env(refs, k, sl)).astype(jnp.float32)
+        for k in range(d):
+            blocks = _as_blocks(spec.body(env_full(refs, k)), spec)
+            for acc, res in zip(accs, blocks):
+                acc[k, :] += _fit(res, (bp.bm,)).astype(jnp.float32)
 
         @pl.when(j == pl.num_programs(col_pos) - 1)
         def _():
-            o_ref[...] = acc[...].astype(o_ref.dtype)
+            for o_ref, acc in zip(o_refs, accs):
+                o_ref[...] = acc[...].astype(o_ref.dtype)
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((d, bp.bm), lambda *g: (0, g[row_pos])),
-        out_shape=jax.ShapeDtypeStruct((d, seg_rows), jnp.dtype(out_dtype)),
-        scratch_shapes=[pltpu.VMEM((d, bp.bm), jnp.float32)],
+        out_specs=[pl.BlockSpec((d, bp.bm), lambda *g: (0, g[row_pos]))
+                   for _ in range(n_out)],
+        out_shape=[jax.ShapeDtypeStruct((d, seg_rows), jnp.dtype(dt))
+                   for dt in out_dtypes],
+        scratch_shapes=[pltpu.VMEM((d, bp.bm), jnp.float32)
+                        for _ in range(n_out)],
         interpret=interpret,
     )(*operands)
-    return out.reshape(d * seg_rows)
+    res = tuple(o.reshape(d * seg_rows) for o in out)
+    return res[0] if n_out == 1 else res
 
 
 def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
@@ -423,7 +503,11 @@ def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
     finalized into the output ref(s) on the last row step.  Single-state
     combinators ("sum" / "max") keep the historical body contract (one
     partial block); paired-state combinators (e.g. ``OnlineSoftmax``)
-    take the body's state tuple."""
+    take the body's state tuple.  Each write gets its OWN geometry —
+    the vector axis or one free axis (plus the batch prefix) — and a
+    multi-output spec needs a *finalizing* combinator whose finalize
+    produces one block per write (e.g. ``OnlineSoftmax(with_lse=True)``:
+    the attention row next to the ``groups``-wide log-sum-exp)."""
     spec, info = sched.spec, bp.info
     comb = resolve_combine(spec.reduce)
     stream = sched.find(info.stride_axis, transforms.STREAM)
@@ -437,39 +521,57 @@ def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
     env = _env_builder(spec, ops, sum(len(op.arrays) for op in ops))
     out_dtypes = spec.out_dtypes(arrays)
     n_out = len(spec.writes)
-
-    bvars, rest = _write_dims(spec, bp)
-    nb = len(bvars)
-    bpos = tuple(pos[v] for v in bvars)
-    batch_ext = tuple(spec.axis(v).extent for v in bvars)
-    if rest == (info.vector_axis,):
-        w = bp.bn                          # per-col-block partial outputs
-
-        def out_imap(*g):
-            return tuple(g[p] for p in bpos) + (0, g[col_pos])
-        out_shape = batch_ext + (1, bp.cols)
-        final = batch_ext + (bp.cols,)
-        if comb.n_state > 1 and bp.bn != bp.cols:
-            raise NotImplementedError(
-                f"{spec.name}: a paired-state combinator cannot split the "
-                "vector axis across grid steps (state widths are derived "
-                "from the whole output row); set full_width=True")
-    elif len(rest) == 1 and rest[0] in info.free_axes:
-        if bp.bn != bp.cols:
-            raise NotImplementedError(
-                f"{spec.name}: free-axis reduction output needs "
-                "full_width=True (vector axis consumed in the body)")
-        w = spec.axis(rest[0]).extent
-
-        def out_imap(*g):
-            return tuple(g[p] for p in bpos) + (0,)
-        out_shape = batch_ext + (w,)
-        final = out_shape
-    else:
+    if n_out > 1 and not (comb.n_state > 1 or comb.finalizing):
         raise NotImplementedError(
-            f"{spec.name}: stride-reduction write {spec.write.index} must "
-            "be the vector axis or one free axis (plus batch)")
-    widths = comb.state_widths(w)
+            f"{spec.name}: a multi-output stride reduction needs a "
+            f"finalizing combinator producing one block per write; "
+            f"{comb.name!r} finalizes the accumulated state identically")
+
+    out_specs, out_shapes, finals, widths_per = [], [], [], []
+    for acc_w in spec.writes:
+        bvars = tuple(v for v in acc_w.index if v in info.batch_axes)
+        rest = _write_rest(acc_w, info)
+        nb = len(bvars)
+        bpos = tuple(pos[v] for v in bvars)
+        batch_ext = tuple(spec.axis(v).extent for v in bvars)
+        if rest == (info.vector_axis,):
+            w = bp.bn                      # per-col-block partial outputs
+
+            def out_imap(*g, _bpos=bpos):
+                return tuple(g[p] for p in _bpos) + (0, g[col_pos])
+            block = (1,) * nb + (1, w)
+            out_shapes.append(batch_ext + (1, bp.cols))
+            finals.append(batch_ext + (bp.cols,))
+            if comb.n_state > 1 and bp.bn != bp.cols:
+                raise NotImplementedError(
+                    f"{spec.name}: a paired-state combinator cannot split "
+                    "the vector axis across grid steps (state widths are "
+                    "derived from the whole output row); set "
+                    "full_width=True")
+        elif len(rest) == 1 and rest[0] in info.free_axes:
+            if bp.bn != bp.cols:
+                raise NotImplementedError(
+                    f"{spec.name}: free-axis reduction output "
+                    f"{acc_w.array!r} needs full_width=True (vector axis "
+                    "consumed in the body)")
+            w = spec.axis(rest[0]).extent
+
+            def out_imap(*g, _bpos=bpos):
+                return tuple(g[p] for p in _bpos) + (0,)
+            block = (1,) * nb + (w,)
+            out_shapes.append(batch_ext + (w,))
+            finals.append(batch_ext + (w,))
+        else:
+            raise NotImplementedError(
+                f"{spec.name}: stride-reduction write {acc_w.array!r}"
+                f"{acc_w.index} must be the vector axis or one free axis "
+                "(plus batch)")
+        out_specs.append(pl.BlockSpec(block, out_imap))
+        widths_per.append(w)
+    # accumulator geometry follows the PRIMARY (first) write: its width
+    # is what the body's partial state covers; side writes are derived
+    # by finalize from the same state
+    widths = comb.state_widths(widths_per[0])
 
     def kernel(*refs):
         o_refs = refs[len(operands):len(operands) + n_out]
@@ -501,32 +603,36 @@ def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
             for o_ref, r in zip(o_refs, _as_blocks(res, spec)):
                 o_ref[...] = _fit(r, o_ref.shape).astype(o_ref.dtype)
 
-    def out_block():
-        return pl.BlockSpec((1,) * nb + ((1, w) if rest ==
-                            (info.vector_axis,) else (w,)), out_imap)
-
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=[out_block() for _ in range(n_out)],
-        out_shape=[jax.ShapeDtypeStruct(out_shape, jnp.dtype(dt))
-                   for dt in out_dtypes],
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct(shape, jnp.dtype(dt))
+                   for shape, dt in zip(out_shapes, out_dtypes)],
         scratch_shapes=[pltpu.VMEM((1, wi), jnp.float32) for wi in widths],
         interpret=interpret,
     )(*operands)
-    res = tuple(o.reshape(final) for o in out)
+    res = tuple(o.reshape(f) for o, f in zip(out, finals))
     return res[0] if n_out == 1 else res
 
 
 def _manual_eligible(spec: loopir.TraversalSpec,
                      bp: transforms.BlockPlan) -> bool:
-    if (bp.info.reduction or bp.info.stride_reduction
-            or bp.info.batch_axes or bp.info.free_axes or spec.full_width
-            or bp.info.row_halo != (0, 0) or bp.info.col_halo != (0, 0)):
+    """Reads must be plain ``(stride, vector)`` streams; writes may also
+    be rank-1 ``(stride,)`` side outputs (the manual ring streams whole
+    rows, so a row statistic is computable without ``full_width``).  A
+    ``full_width`` spec is eligible for the same reason — every block
+    the ring stages IS a full row."""
+    info = bp.info
+    if (info.reduction or info.stride_reduction
+            or info.batch_axes or info.free_axes
+            or info.row_halo != (0, 0) or info.col_halo != (0, 0)):
         return False
-    return all(a.index == (bp.info.stride_axis, bp.info.vector_axis)
-               and not a.has_halo for a in (*spec.reads, *spec.writes))
+    sv = (info.stride_axis, info.vector_axis)
+    if not all(a.index == sv and not a.has_halo for a in spec.reads):
+        return False
+    return all(w.index in (sv, (info.stride_axis,)) for w in spec.writes)
 
 
 def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
@@ -537,7 +643,9 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
     back-to-back onto a single per-slot semaphore (no interleaved
     per-stream wait/start serializing the issue slots), and stores drain
     through a double-buffered staging ring so a stream's store never
-    blocks the next stream's compute.
+    blocks the next stream's compute.  Per-output geometry: a rank-1
+    ``(stride,)`` side write stages/stores 1-lane blocks next to its
+    full-row siblings.
     """
     spec = sched.spec
     stream = sched.find(bp.info.stride_axis, transforms.STREAM)
@@ -551,6 +659,9 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
     n_out = len(spec.writes)
     scal_arrays = [jnp.asarray(s).reshape(1, 1) for s in scalars]
     out_dtypes = spec.out_dtypes(arrays)
+    # per-write store width: full rows, or one lane for (stride,) side
+    # outputs (their HBM buffer is a [rows, 1] column, squeezed after)
+    w_cols = [cols if len(w.index) == 2 else 1 for w in spec.writes]
     ost = 2                             # output staging ring depth
 
     def kernel(*refs):
@@ -605,7 +716,7 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
                 blocks = _as_blocks(spec.body(env(k, slot)), spec)
                 for o, res in enumerate(blocks):
                     obufs[o][oslot, k] = _fit(
-                        res, (bm, cols), broadcast=not spec.reads
+                        res, (bm, w_cols[o]), broadcast=not spec.reads
                         ).astype(obufs[o].dtype)
             for o in range(n_out):
                 for k in range(d):
@@ -631,18 +742,21 @@ def _emit_manual(sched, bp, arrays, scalars, interpret: bool):
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_in
         + [pl.BlockSpec(memory_space=pltpu.VMEM)] * n_scal,
         out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_out,
-        out_shape=[jax.ShapeDtypeStruct((d * seg_rows, cols),
-                                        jnp.dtype(dt)) for dt in out_dtypes],
+        out_shape=[jax.ShapeDtypeStruct((d * seg_rows, wc),
+                                        jnp.dtype(dt))
+                   for wc, dt in zip(w_cols, out_dtypes)],
         scratch_shapes=(
             [pltpu.VMEM((la, d, bm, cols), x.dtype) for x in arrays]
-            + [pltpu.VMEM((ost, d, bm, cols), jnp.dtype(dt))
-               for dt in out_dtypes]
+            + [pltpu.VMEM((ost, d, bm, wc), jnp.dtype(dt))
+               for wc, dt in zip(w_cols, out_dtypes)]
             + [pltpu.SemaphoreType.DMA((la,)) for _ in arrays]
             + [pltpu.SemaphoreType.DMA((ost, d)) for _ in range(n_out)]
         ),
         interpret=interpret,
     )(*arrays, *scal_arrays)
-    return out[0] if n_out == 1 else tuple(out)
+    res = tuple(o.reshape(-1) if len(w.index) == 1 else o
+                for o, w in zip(out, spec.writes))
+    return res[0] if n_out == 1 else res
 
 
 def emit_scheduled(sched: transforms.Schedule, bp: transforms.BlockPlan,
@@ -655,8 +769,8 @@ def emit_scheduled(sched: transforms.Schedule, bp: transforms.BlockPlan,
     spec, info = sched.spec, bp.info
     if info.stride_reduction:
         return _emit_stream_reduction(sched, bp, arrays, scalars, interpret)
-    _, rest = _write_dims(spec, bp)
-    if info.reduction and rest == (info.stride_axis,):
+    if info.reduction and all(_write_rest(w, info) == (info.stride_axis,)
+                              for w in spec.writes):
         return _emit_reduction(sched, bp, arrays, scalars, interpret)
     if info.reduction and bp.bn != bp.cols:
         raise NotImplementedError(

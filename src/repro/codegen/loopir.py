@@ -133,9 +133,15 @@ class TraversalSpec:
     Multiple ``writes`` declare native multi-output kernels: the body
     returns one block per write access (same order) and the emitter
     lowers each to its own Pallas output ref — no stacked free axis, no
-    unstack copies.  ``out_dtype`` may then be a tuple (one dtype per
-    output).  A spec with no reads (e.g. a fill) must set ``out_dtype``;
-    its body result is broadcast to the output block.
+    unstack copies.  Each write carries its OWN access map: any
+    subset/permutation of the nest's non-reduced axes is a valid write
+    index (batch axes must all appear, leading), so a reduced-rank side
+    output — a row statistic next to a matrix write, a log-sum-exp next
+    to an attention output — gets its own block geometry instead of
+    being forced through the widest write's tiling.  ``out_dtype`` may
+    then be a tuple (one dtype per output).  A spec with no reads (e.g.
+    a fill) must set ``out_dtype``; its body result is broadcast to the
+    output block.
     """
 
     name: str
@@ -183,11 +189,31 @@ class TraversalSpec:
                 raise ValueError(
                     f"{self.name}: access {acc.array!r}: batch axis vars "
                     "must form the leading index prefix")
+        reduced = {ax.name for ax in self.axes if ax.kind == REDUCTION}
         for w in self.writes:
             if w.has_halo:
                 raise ValueError(
                     f"{self.name}: write access {w.array!r} cannot have a "
                     "halo")
+            # a write's index may be any subset/permutation of the nest's
+            # NON-REDUCED axes: reduced axes are folded away (writing
+            # along one is ill-defined), a repeated axis has no affine
+            # store meaning, and a write missing a batch axis would be
+            # overwritten once per batch element
+            if len(set(w.index)) != len(w.index):
+                raise ValueError(
+                    f"{self.name}: write {w.array!r} repeats an axis "
+                    f"{w.index}")
+            hit = [v for v in w.index if v in reduced]
+            if hit:
+                raise ValueError(
+                    f"{self.name}: write {w.array!r} indexes reduced "
+                    f"axis {hit[0]!r}")
+            missing = [b for b in batch if b not in w.index]
+            if missing:
+                raise ValueError(
+                    f"{self.name}: write {w.array!r} must index every "
+                    f"batch axis (missing {missing[0]!r})")
 
     def axis(self, name: str) -> Axis:
         for ax in self.axes:
@@ -197,6 +223,14 @@ class TraversalSpec:
 
     @property
     def write(self) -> Access:
+        """The sole write access.  Writes carry heterogeneous per-output
+        access maps, so "THE write" of a multi-output spec would
+        silently mean writes[0] geometry — refuse loudly instead."""
+        if len(self.writes) != 1:
+            raise ValueError(
+                f"{self.name}: spec has {len(self.writes)} writes with "
+                "per-output access maps; spec.write is ambiguous — use "
+                "spec.writes / out_shapes()")
         return self.writes[0]
 
     @property
@@ -204,6 +238,8 @@ class TraversalSpec:
         return resolve_combine(self.reduce)
 
     def out_shape(self) -> tuple[int, ...]:
+        """Output shape of the sole write (multi-output specs must use
+        per-write :meth:`out_shapes` — see :attr:`write`)."""
         return tuple(self.axis(v).extent for v in self.write.index)
 
     def out_shapes(self) -> tuple[tuple[int, ...], ...]:
@@ -345,8 +381,23 @@ def traffic_of(spec: TraversalSpec, dtype=jnp.float32,
                     continue
                 n *= spec.axis(v).extent + lo + hi
             resident += n * itemsize
+    def _laned(acc):
+        return (info.vector_axis in acc.index
+                or any(v in info.free_axes for v in acc.index))
+
+    # a reduced-rank side output (stride axis but no lane dimension,
+    # e.g. rmsnorm's inv-rms row statistic) moves ~1 element per row vs
+    # a full store stream's whole rows — don't count it as a store
+    # stream next to a full-map sibling.  When NO write has a lane
+    # dimension (a vecred's per-row outputs), each write IS the primary
+    # store and counts, so the accounting matches the same kernels
+    # split into single-output specs.
+    any_laned = any(_laned(w) for w in spec.writes
+                    if info.stride_axis in w.index)
     for acc in spec.writes:
-        if info.stride_axis in acc.index:
+        if info.stride_axis not in acc.index:
+            continue                      # stride-reduction outputs
+        if _laned(acc) or not any_laned:
             writes += 1
     if info.blocked:
         n = spec.axis(info.stride_axis).extent
@@ -384,7 +435,7 @@ def evaluate(spec: TraversalSpec, inputs: Sequence[Any]):
     env.update(zip(spec.scalars, scalars))
     out = spec.body(env)
     comb = resolve_combine(spec.reduce)
-    if comb.n_state > 1:
+    if comb.n_state > 1 or comb.finalizing:
         state = out if isinstance(out, tuple) else (out,)
         if len(state) != comb.n_state:   # mirror the emitter's check
             raise ValueError(

@@ -21,11 +21,13 @@ efficiency loss when concurrent streams alias (see ``layout.collides``).
 from __future__ import annotations
 
 import dataclasses
+import os
 
 from repro.core import layout
 from repro.core.striding import StridingConfig
 
-__all__ = ["TpuDmaModel", "CpuPrefetchModel", "TPU_V5E", "COFFEE_LAKE"]
+__all__ = ["TpuDmaModel", "CpuPrefetchModel", "TPU_V5E", "COFFEE_LAKE",
+           "seeded_descriptor_overhead", "default_tpu_model"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,9 +41,15 @@ class TpuDmaModel:
     descriptor_overhead: float = 0.3e-6  # s per descriptor (strided blocks)
 
     def stream_bandwidth(self, block_bytes: int, lookahead: int) -> float:
-        """Sustained bytes/s of ONE stream with a `lookahead`-deep ring."""
+        """Sustained bytes/s of ONE stream with a `lookahead`-deep ring.
+
+        Each block transfer pays a fixed issue cost: the DMA latency plus
+        one descriptor (``descriptor_overhead`` — the §5.1.1 term bigger
+        ``block_rows`` tiles amortize; seed it from a measured sweep via
+        ``REPRO_DMA_DESCRIPTOR_NS`` / ``default_tpu_model``)."""
         in_flight = max(lookahead - 1, 0) * block_bytes + block_bytes
-        latency_bound = in_flight / (self.dma_latency + block_bytes / self.engine_bw)
+        issue = self.dma_latency + self.descriptor_overhead
+        latency_bound = in_flight / (issue + block_bytes / self.engine_bw)
         return min(latency_bound, self.engine_bw)
 
     def throughput(self, config: StridingConfig, block_bytes: int,
@@ -137,3 +145,21 @@ class CpuPrefetchModel:
 
 TPU_V5E = TpuDmaModel()
 COFFEE_LAKE = CpuPrefetchModel()
+
+
+def seeded_descriptor_overhead(default: float = 0.3e-6) -> float:
+    """Per-descriptor issue cost, seedable from a measurement.
+
+    ``REPRO_DMA_DESCRIPTOR_NS`` (nanoseconds, as fitted by
+    ``benchmarks/descriptor_sweep.py`` — on real v5e, by the same sweep
+    against HBM DMA) overrides the static default, so the ranked
+    ``block_rows`` ordering is testable and calibratable without
+    hardware access."""
+    env = os.environ.get("REPRO_DMA_DESCRIPTOR_NS")
+    return float(env) * 1e-9 if env else default
+
+
+def default_tpu_model() -> TpuDmaModel:
+    """The planner's scoring model with the seeded descriptor term (an
+    un-seeded environment reproduces ``TPU_V5E`` exactly)."""
+    return TpuDmaModel(descriptor_overhead=seeded_descriptor_overhead())

@@ -13,12 +13,12 @@ framework can auto-configure:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax.numpy as jnp
 
 from repro.core import layout
-from repro.core.dma_model import TPU_V5E, TpuDmaModel
+from repro.core.dma_model import TpuDmaModel, default_tpu_model
 from repro.core.striding import StridingConfig, valid_stride_unrolls
 
 __all__ = ["Traffic", "Plan", "plan", "rank_configs"]
@@ -68,7 +68,7 @@ def _vmem(traffic: Traffic, cfg: StridingConfig) -> int:
 
 
 def rank_configs(traffic: Traffic,
-                 model: TpuDmaModel = TPU_V5E,
+                 model: Optional[TpuDmaModel] = None,
                  vmem_budget: int = DEFAULT_VMEM_BUDGET,
                  max_streams: int = 16,
                  max_unrolls: int = 32,
@@ -84,7 +84,14 @@ def rank_configs(traffic: Traffic,
     but cost ``D · arrays · block · lookahead`` VMEM, so infeasible
     (block, D, P) points are pruned against ``vmem_budget`` exactly like
     plain (D, P) points.
+
+    ``model=None`` scores with :func:`~repro.core.dma_model.
+    default_tpu_model`, whose descriptor term is seedable via
+    ``REPRO_DMA_DESCRIPTOR_NS`` (measured by
+    ``benchmarks/descriptor_sweep.py``).
     """
+    if model is None:
+        model = default_tpu_model()
     itemsize = jnp.dtype(traffic.dtype).itemsize
     out = []
     for d in valid_stride_unrolls(traffic.rows, max_d=max_streams):

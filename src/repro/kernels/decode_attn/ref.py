@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["decode_attn_ref"]
+__all__ = ["decode_attn_ref", "decode_attn_lse_ref"]
 
 
 def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -30,3 +30,23 @@ def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     p = p / p.sum(axis=-1, keepdims=True)
     out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
     return out.reshape(b, hq, dh).astype(q.dtype)
+
+
+def decode_attn_lse_ref(q: jnp.ndarray, k: jnp.ndarray,
+                        v: jnp.ndarray):
+    """(out, lse): attention output plus the per-(batch, query-head)
+    log-sum-exp of the scaled scores — the flash-attention side
+    statistic sharded-attention combines rescale with."""
+    b, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg,
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    m = scores.max(axis=-1)
+    w = jnp.exp(scores - m[..., None])
+    den = w.sum(axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w / den[..., None],
+                     v.astype(jnp.float32))
+    lse = (m + jnp.log(den)).reshape(b, hq)
+    return out.reshape(b, hq, dh).astype(q.dtype), lse

@@ -3,7 +3,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["outer_ref", "sum_ref", "mxv1_ref", "mxv2_ref", "gemver_ref"]
+__all__ = ["outer_ref", "sum_ref", "mxv1_ref", "mxv1_sum_ref",
+           "mxv2_ref", "gemver_ref"]
 
 
 def outer_ref(a, u1, v1, u2, v2):
@@ -20,6 +21,13 @@ def mxv1_ref(a, y, x, beta):
     """x = x + β Aᵀ y (transpose matrix-vector)."""
     return x + beta * jnp.dot(y, a, preferred_element_type=jnp.float32
                               ).astype(a.dtype)
+
+
+def mxv1_sum_ref(a, y, x, z, beta):
+    """Fused mxv1 + sum steps with the sweep's own reduction:
+    (x + β Aᵀ y + z, Σⱼ (β Aᵀ y)ⱼ)."""
+    s = beta * jnp.dot(y, a, preferred_element_type=jnp.float32)
+    return x + s.astype(a.dtype) + z, s.sum()
 
 
 def mxv2_ref(a, x, alpha):

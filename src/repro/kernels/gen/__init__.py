@@ -47,8 +47,8 @@ from repro.registry.base import KernelSpec, register
 __all__ = [
     "stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen",
     "bicg_gen", "gemver_outer_gen", "gemver_sum_gen", "gemver_mxv1_gen",
-    "gemver_mxv2_gen", "conv3x3_gen", "doitgen_gen",
-    "decode_attn_gen", "rmsnorm_gen", "adamw_update_gen",
+    "gemver_mxv1_sum_gen", "gemver_mxv2_gen", "conv3x3_gen",
+    "doitgen_gen", "decode_attn_gen", "rmsnorm_gen", "adamw_update_gen",
 ]
 
 
@@ -171,6 +171,7 @@ register(KernelSpec(
 # exactly like the family packages do)
 from repro.kernels.gen.polybench import (bicg_gen, conv3x3_gen,   # noqa: E402
                                          doitgen_gen, gemver_mxv1_gen,
+                                         gemver_mxv1_sum_gen,
                                          gemver_mxv2_gen, gemver_outer_gen,
                                          gemver_sum_gen)
 from repro.kernels.gen.framework import (adamw_update_gen,        # noqa: E402

@@ -9,20 +9,30 @@ attention, fused RMSNorm, and the fused AdamW step — as
     (max, rescaled Σ softmax·V, rescaled Σ w) partial state merges
     numerically-stably across the D merged streams and grid steps and
     K/V are each read exactly once — the single-pass flash-decode the
-    two-pass max+sum decomposition used to approximate.
+    two-pass max+sum decomposition used to approximate.  With
+    ``with_lse=True`` the combinator's finalize ALSO emits the per-row
+    log-sum-exp as a second native output (its own ``Hq``-wide access
+    map) — the flash-attention side statistic sharded-attention
+    combines rescale with.
   * ``rmsnorm_gen``     — ``full_width`` streaming nest: the body takes
-    a per-row mean over the whole vector extent.
+    a per-row mean over the whole vector extent and emits the f32
+    inverse-rms row statistic as a native rank-1 SECOND output next to
+    the rank-2 normalized matrix (per-output access maps).
   * ``adamw_update_gen`` — one 2-D nest over the §5.1.1-blocked
     flattened parameter writing p′/m′/v′ as three *native* outputs
     (three Pallas store streams, no stacked free axis, no unstack
-    copies).
+    copies).  Ref mode evaluates the elementwise body at the tensor's
+    NATIVE shape: the re-block reshapes otherwise make XLA recompute
+    the shared (m′, v′) staging inside every output fusion — the
+    BENCH_PR4 1.133 ``gen_vs_hand`` outlier.
 """
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.codegen import Access, Axis, OnlineSoftmax, TraversalSpec, run_spec
+from repro.codegen import (Access, Axis, OnlineSoftmax, TraversalSpec,
+                           evaluate, run_spec)
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels.adamw import ref as _adamw_ref
@@ -79,13 +89,17 @@ def _decode_spec(hkv: int, dh: int):
             name="decode_attn_gen_spec",
             axes=(Axis("b", b, kind="batch"),
                   Axis("s", s, kind="reduction"), Axis("e", e),
-                  Axis("f", hq * dh), Axis("z", hq * dh)),
+                  Axis("f", hq * dh), Axis("z", hq * dh),
+                  Axis("h", hq)),
             reads=(Access("K", ("b", "s", "e")),
                    Access("V", ("b", "s", "e")),
                    Access("q", ("b", "f"))),
-            writes=(Access("o", ("b", "z")),),
-            body=body, out_dtype=jnp.float32,
-            reduce=OnlineSoftmax(groups=hq, vwidth=dh),
+            # two writes, two access maps: the attention row (Hq·dh
+            # lanes) and the Hq-wide log-sum-exp row statistic — both
+            # finalized from ONE accumulated online-softmax state
+            writes=(Access("o", ("b", "z")), Access("lse", ("b", "h"))),
+            body=body, out_dtype=(jnp.float32, jnp.float32),
+            reduce=OnlineSoftmax(groups=hq, vwidth=dh, with_lse=True),
             full_width=True,
         )
 
@@ -98,29 +112,32 @@ def _decode_run(q, kc, vc, hkv, dh, config, mode):
     s, e = kc.shape[1], hkv * dh
     kc2, vc2 = kc.reshape(b, s, e), vc.reshape(b, s, e)
     q2 = q.reshape(b, hq * dh)
-    out = run_spec(_decode_spec(hkv, dh), (kc2, vc2, q2), config, mode)
-    return out.reshape(b, hq, dh).astype(q.dtype)
+    out, lse = run_spec(_decode_spec(hkv, dh), (kc2, vc2, q2), config, mode)
+    return out.reshape(b, hq, dh).astype(q.dtype), lse.reshape(b, hq)
 
 
-def decode_attn_gen(q, kc, vc, config=None, mode=None):
+def decode_attn_gen(q, kc, vc, config=None, mode=None, with_lse=False):
     """One-token GQA attention against a [B, S, Hkv, dh] KV cache,
     generated: a single online-softmax stream-reduction sweep of the
-    (flattened) cache — K and V each read once."""
+    (flattened) cache — K and V each read once.  ``with_lse=True`` also
+    returns the per-(batch, head) f32 log-sum-exp emitted as the
+    kernel's native second output."""
     mode = _mode(mode)
     s, hkv, dh = kc.shape[1], kc.shape[2], kc.shape[3]
     cfg = _resolve("decode_attn_gen", kc, config, mode, s,
                    StridingConfig(4, 1),
                    Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype,
                            read_arrays=2))
-    return _decode_run(q, kc, vc, hkv=hkv, dh=dh, config=cfg, mode=mode)
+    out, lse = _decode_run(q, kc, vc, hkv=hkv, dh=dh, config=cfg, mode=mode)
+    return (out, lse) if with_lse else out
 
 
 # ------------------------------------------------------------- rmsnorm
 
 def _rms_body(env):
     xf = env["x"].astype(jnp.float32)
-    rms = jnp.sqrt((xf * xf).mean(axis=-1, keepdims=True) + env["eps"])
-    return (xf / rms) * env["w"].astype(jnp.float32)
+    inv = 1.0 / jnp.sqrt((xf * xf).mean(axis=-1) + env["eps"])
+    return (xf * inv[..., None]) * env["w"].astype(jnp.float32), inv
 
 
 def rmsnorm_spec(x, w, eps=0.0) -> TraversalSpec:
@@ -129,9 +146,13 @@ def rmsnorm_spec(x, w, eps=0.0) -> TraversalSpec:
         name="rmsnorm_gen",
         axes=(Axis("i", t), Axis("j", dm)),
         reads=(Access("x", ("i", "j")), Access("w", ("j",))),
-        writes=(Access("o", ("i", "j")),),
+        # the inverse-rms row statistic is a native rank-1 second
+        # output: its own (i,)-only access map lowers to a (d, bm)
+        # block next to the matrix write's (d, bm, cols)
+        writes=(Access("o", ("i", "j")), Access("r", ("i",))),
         scalars=("eps",),
         body=_rms_body,
+        out_dtype=(x.dtype, jnp.float32),
         full_width=True,   # the per-row mean needs the whole row
     )
 
@@ -139,12 +160,15 @@ def rmsnorm_spec(x, w, eps=0.0) -> TraversalSpec:
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _rms_run(x, w, eps, config, mode):
     shape = x.shape
-    out = run_spec(rmsnorm_spec, (x.reshape(-1, shape[-1]), w, eps),
-                   config, mode)
-    return out.reshape(shape)
+    out, inv = run_spec(rmsnorm_spec, (x.reshape(-1, shape[-1]), w, eps),
+                        config, mode)
+    return out.reshape(shape), inv.reshape(shape[:-1])
 
 
-def rmsnorm_gen(x, w, eps=1e-6, config=None, mode=None):
+def rmsnorm_gen(x, w, eps=1e-6, config=None, mode=None,
+                with_inv_rms=False):
+    """Fused RMSNorm, generated.  ``with_inv_rms=True`` also returns
+    the f32 inverse-rms per row (the kernel's native second output)."""
     mode = _mode(mode)
     t = 1
     for s in x.shape[:-1]:
@@ -154,7 +178,8 @@ def rmsnorm_gen(x, w, eps=1e-6, config=None, mode=None):
                    Traffic(rows=max(t, 1), cols=x.shape[-1], dtype=x.dtype,
                            read_arrays=1, write_arrays=1,
                            resident_bytes=x.shape[-1] * 4))
-    return _rms_run(x, w, eps, config=cfg, mode=mode)
+    out, inv = _rms_run(x, w, eps, config=cfg, mode=mode)
+    return (out, inv) if with_inv_rms else out
 
 
 # --------------------------------------------------------------- adamw
@@ -205,6 +230,21 @@ def _adamw_blocking(n: int) -> tuple[int, int]:
 def _adamw_run(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2, config, mode):
     shape = p.shape
     n = p.size
+    if mode == "ref":
+        # Evaluate the elementwise body at the tensor's NATIVE shape.
+        # The [rows, 512] re-block below is free in the emitted kernel
+        # (the tiles ARE the traversal) but its reshape boundaries make
+        # XLA recompute the shared (m', v') staging inside each of the
+        # three output fusions — 14 array-wide multiplies instead of 9,
+        # the BENCH_PR4 1.133 gen_vs_hand outlier.  The spec's axes only
+        # describe the traversal; evaluate() never tiles, so a 2-D
+        # stand-in spec plus native-rank operands is exact.
+        spec = adamw_spec(p.reshape(-1, shape[-1]) if p.ndim > 1
+                          else p.reshape(1, -1), None, None, None)
+        po, mo, vo = evaluate(spec, (p, g, m.astype(jnp.float32),
+                                     v.astype(jnp.float32),
+                                     lr, b1, b2, eps, wd, bc1, bc2))
+        return po.astype(p.dtype), mo, vo
     rows, cols = _adamw_blocking(max(n, 1))
 
     def flat(a, dt):
@@ -258,9 +298,13 @@ def _da_inputs(s, dt):
 register(KernelSpec(
     name="decode_attn_gen", family="gen", fn=decode_attn_gen,
     make_inputs=_da_inputs,
+    # side outputs ride the conformance matrix: the lse row statistic
+    # is checked against its oracle at every (D, P) point in both legs
     run=lambda inp, cfg, mode: decode_attn_gen(inp[0], inp[1], inp[2],
-                                               config=cfg, mode=mode),
-    ref=lambda inp, cfg: _da_ref.decode_attn_ref(inp[0], inp[1], inp[2]),
+                                               config=cfg, mode=mode,
+                                               with_lse=True),
+    ref=lambda inp, cfg: _da_ref.decode_attn_lse_ref(inp[0], inp[1],
+                                                     inp[2]),
     default_sizes=_DA_SIZES, aliased_sizes=_DA_ALIASED,
     traffic=lambda s, dt: Traffic(rows=s["s"], cols=s["hkv"] * s["dh"],
                                   dtype=dt, read_arrays=2),
@@ -273,8 +317,8 @@ register(KernelSpec(
     make_inputs=lambda s, dt: (_rand((s["t"], s["dm"]), 0, dt),
                                _rand((s["dm"],), 1, dt)),
     run=lambda inp, cfg, mode: rmsnorm_gen(inp[0], inp[1], config=cfg,
-                                           mode=mode),
-    ref=lambda inp, cfg: _rms_ref.rmsnorm_ref(inp[0], inp[1]),
+                                           mode=mode, with_inv_rms=True),
+    ref=lambda inp, cfg: _rms_ref.rmsnorm_stats_ref(inp[0], inp[1]),
     default_sizes={"t": 32, "dm": 256}, aliased_sizes={"t": 32, "dm": 128},
     traffic=lambda s, dt: Traffic(rows=s["t"], cols=s["dm"], dtype=dt,
                                   read_arrays=1, write_arrays=1,

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.codegen import (Access, Axis, TraversalSpec, make_kernel_op,
                            run_spec, tap, traffic_of)
+from repro.codegen.combine import SumCombine
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels.bicg import ref as _bicg_ref
@@ -36,8 +37,8 @@ from repro.kernels.gemver import ref as _gem_ref
 from repro.registry.base import KernelSpec, register
 
 __all__ = ["bicg_gen", "gemver_outer_gen", "gemver_sum_gen",
-           "gemver_mxv1_gen", "gemver_mxv2_gen", "conv3x3_gen",
-           "doitgen_gen"]
+           "gemver_mxv1_gen", "gemver_mxv1_sum_gen", "gemver_mxv2_gen",
+           "conv3x3_gen", "doitgen_gen"]
 
 
 def _resolve(kernel: str, lead, config, mode, rows: int,
@@ -147,6 +148,42 @@ def gemver_mxv1_spec(a, y, beta=0.0) -> TraversalSpec:
     )
 
 
+class SumWithTotal(SumCombine):
+    """Sum reduction whose finalize ALSO emits the accumulated row's
+    total — a *finalizing* single-state combinator: the body keeps the
+    historical partial-row contract, and the fused gemver mxv1+sum
+    sweep writes (s = βAᵀy, Σⱼ sⱼ) as two native outputs with distinct
+    access maps (the vector row and an extent-1 free axis)."""
+
+    name = "sum_with_total"
+    finalizing = True
+
+    def finalize(self, state):
+        row = state[0]
+        return row, row.sum(axis=-1, keepdims=True)
+
+
+def gemver_mxv1_sum_spec(a, y, beta=0.0) -> TraversalSpec:
+    """β·(Aᵀy) AND its reduction Σⱼ in ONE sweep of A: the stride-axis
+    reduction accumulates the full-width row, ``SumWithTotal`` finalizes
+    both outputs from that single state — the second sweep the separate
+    mxv1 + sum steps would have paid is gone."""
+    m, n = a.shape
+    return TraversalSpec(
+        name="gemver_mxv1_sum_gen",
+        axes=(Axis("i", m, kind="reduction"), Axis("j", n),
+              Axis("t", 1)),
+        reads=(Access("A", ("i", "j")), Access("y", ("i",))),
+        writes=(Access("s", ("j",)), Access("ssum", ("t",))),
+        scalars=("beta",),
+        body=lambda env: env["beta"] * jnp.dot(
+            env["y"], env["A"], preferred_element_type=jnp.float32),
+        out_dtype=(jnp.float32, jnp.float32),
+        reduce=SumWithTotal(),
+        full_width=True,   # the total needs the whole accumulated row
+    )
+
+
 def gemver_mxv2_spec(a, x, alpha=0.0) -> TraversalSpec:
     m, n = a.shape
     return TraversalSpec(
@@ -181,6 +218,25 @@ def gemver_mxv1_gen(a, y, x, beta, config=None, mode=None):
                    StridingConfig(4, 2),
                    Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2))
     return _mxv1_run(a, y, x, beta, config=cfg, mode=mode)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _mxv1_sum_run(a, y, x, z, beta, config, mode):
+    s, total = run_spec(gemver_mxv1_sum_spec, (a, y, beta), config, mode)
+    return x + s.astype(x.dtype) + z, total.reshape(())
+
+
+def gemver_mxv1_sum_gen(a, y, x, z, beta, config=None, mode=None):
+    """Fused gemver mxv1 + sum steps: x' = x + β Aᵀ y + z, with the
+    sweep's own reduction Σⱼ(βAᵀy)ⱼ emitted as a native scalar side
+    output (per-output access maps) — one sweep of A where the separate
+    mxv1 and sum steps traversed x twice.  Returns (x', ssum)."""
+    mode = _mode(mode)
+    m, n = a.shape
+    cfg = _resolve("gemver_mxv1_sum_gen", a, config, mode, m,
+                   StridingConfig(4, 2),
+                   Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2))
+    return _mxv1_sum_run(a, y, x, z, beta, config=cfg, mode=mode)
 
 
 # ------------------------------------------------------------- conv3x3
@@ -315,6 +371,20 @@ register(KernelSpec(
                                                inp[3], config=cfg,
                                                mode=mode),
     ref=lambda inp, cfg: _gem_ref.mxv1_ref(inp[0], inp[1], inp[2], inp[3]),
+    default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
+    traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
+                                  read_arrays=2),
+    cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="gemver_mxv1_sum_gen", family="gen", fn=gemver_mxv1_sum_gen,
+    make_inputs=lambda s, dt: (_rand(_mn(s), 0, dt),
+                               _rand((s["m"],), 1, dt),
+                               _rand((s["n"],), 2, dt),
+                               _rand((s["n"],), 3, dt), 1.2),
+    run=lambda inp, cfg, mode: gemver_mxv1_sum_gen(*inp, config=cfg,
+                                                   mode=mode),
+    ref=lambda inp, cfg: _gem_ref.mxv1_sum_ref(*inp),
     default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
     traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
                                   read_arrays=2),

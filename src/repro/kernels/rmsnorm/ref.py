@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["rmsnorm_ref"]
+__all__ = ["rmsnorm_ref", "rmsnorm_stats_ref"]
 
 
 def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray,
@@ -11,3 +11,13 @@ def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray,
     xf = x.astype(jnp.float32)
     rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
     return ((xf / rms) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_stats_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6):
+    """(normalized, inv_rms): the f32 inverse-rms row statistic is the
+    side output backward passes / fused residual paths reuse."""
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1) + eps)
+    inv = 1.0 / rms
+    out = (xf * inv[..., None]) * w.astype(jnp.float32)
+    return out.astype(x.dtype), inv

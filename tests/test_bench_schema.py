@@ -19,7 +19,7 @@ import pytest
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 FIG6_GEN_VS_HAND_KEYS = {
-    "kernel", "hand", "d", "p", "block_rows", "gen_seconds",
+    "kernel", "hand", "d", "p", "block_rows", "n_outputs", "gen_seconds",
     "hand_seconds", "gen_vs_hand", "paired_median_ratio", "seconds",
 }
 
@@ -71,10 +71,12 @@ def test_fig6_gen_vs_hand_row_schema_unchanged():
     assert pairs, "live gen-vs-hand pairs must remain after retirement"
 
     real_paired, real_tuned = f6._paired_best, f6._tuned_config
+    real_nout = f6._n_outputs
     from repro.core.striding import StridingConfig
     try:
         f6._paired_best = lambda fa, fb, iters, **kw: (1e-4, 1e-4, 1.0)
         f6._tuned_config = lambda spec, sizes: StridingConfig(2, 1)
+        f6._n_outputs = lambda spec, inputs, cfg: 3
         # restrict to one cheap pair: monkeypatch the pair list
         f6_pairs = pairs[:1]
         real_pairs_fn = f6.gen_hand_pairs
@@ -85,7 +87,39 @@ def test_fig6_gen_vs_hand_row_schema_unchanged():
             f6.gen_hand_pairs = real_pairs_fn
     finally:
         f6._paired_best, f6._tuned_config = real_paired, real_tuned
+        f6._n_outputs = real_nout
     assert len(rows) == 1
     assert set(rows[0]) == FIG6_GEN_VS_HAND_KEYS
+    assert rows[0]["n_outputs"] == 3
     retired = f6.RETIRED_HAND_KERNELS
     assert all(r["hand"] not in retired for r in rows)
+
+
+def test_fig6_covers_side_output_kernels():
+    """The per-output-access-map kernels ride the registry-driven fig6
+    lists automatically: gemver_mxv1_sum_gen gets a model row
+    (paper-tagged + Traffic) and the side-output gen variants stay in
+    the gen_vs_hand pair list against their hand counterparts."""
+    from benchmarks import fig6_kernels as f6
+    model_kernels = {s.name for s in f6.bench_specs()}
+    assert "gemver_mxv1_sum_gen" in model_kernels
+    pair_names = {(g.name, h.name) for g, h in f6.gen_hand_pairs()}
+    assert ("rmsnorm_gen", "rmsnorm") in pair_names
+    assert ("decode_attn_gen", "decode_attn") in pair_names
+    # no hand counterpart exists for the fused sweep — and that must
+    # not crash the pair derivation
+    assert all(g != "gemver_mxv1_sum_gen" for g, _ in pair_names)
+
+
+def test_descriptor_sweep_fit_row_schema():
+    """The descriptor micro-sweep emits the fitted ns and the exact
+    export line the DMA model's env seeding consumes."""
+    from benchmarks import descriptor_sweep as ds
+    ns = ds.fit_descriptor_ns([(1, 1e-3), (4, 1.3e-3), (16, 2.5e-3),
+                               (64, 7.3e-3), (256, 26.5e-3)])
+    assert ns > 0
+    rows = ds.run(quick=True)
+    fit = [r for r in rows if r["kernel"] == "descriptor_overhead_fit"]
+    assert len(fit) == 1
+    assert fit[0]["export"].startswith("REPRO_DMA_DESCRIPTOR_NS=")
+    assert fit[0]["ns_per_descriptor"] >= 0.0

@@ -181,3 +181,34 @@ def test_neg_inf_identity_survives_exp():
     for m in (-1e4, 0.0, 1e4, NEG_INF):
         assert float(jnp.exp(jnp.float32(NEG_INF) - jnp.float32(m))) in (0.0, 1.0)
     assert float(jnp.exp(jnp.float32(NEG_INF - NEG_INF))) == 1.0
+
+
+def test_online_softmax_with_lse_finalize():
+    """with_lse finalize emits (out, m + log(den)) — the lse equals the
+    direct log-sum-exp of the merged scores, in ANY merge bracketing,
+    and the primary output is unchanged vs the with_lse=False path."""
+    rng = np.random.default_rng(0)
+    groups, vwidth = 2, 4
+    base = OnlineSoftmax(groups=groups, vwidth=vwidth)
+    lse_c = OnlineSoftmax(groups=groups, vwidth=vwidth, with_lse=True)
+    assert lse_c.finalizing and base.finalizing
+
+    def part(scores, values):
+        m = scores.max(axis=-1)
+        w = np.exp(scores - m[..., None])
+        num = np.einsum("gs,gsv->gv", w, values).reshape(-1)
+        return (jnp.asarray(m, jnp.float32),
+                jnp.asarray(num, jnp.float32),
+                jnp.asarray(w.sum(axis=-1), jnp.float32))
+
+    scores = rng.normal(size=(2, groups, 8))
+    values = rng.normal(size=(2, groups, 8, vwidth))
+    s1, s2 = (part(scores[i], values[i]) for i in range(2))
+    merged = lse_c.merge(s1, s2)
+    out, lse = lse_c.finalize(merged)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(base.finalize(merged)), rtol=1e-6)
+    all_scores = np.concatenate([scores[0], scores[1]], axis=-1)
+    m = all_scores.max(axis=-1, keepdims=True)
+    want_lse = (m[:, 0] + np.log(np.exp(all_scores - m).sum(axis=-1)))
+    np.testing.assert_allclose(np.asarray(lse), want_lse, rtol=1e-5)

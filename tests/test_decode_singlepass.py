@@ -70,7 +70,12 @@ def test_single_pass_single_spec_module():
         jax.ShapeDtypeStruct((1, 32, 16), jnp.float32),
         jax.ShapeDtypeStruct((1, 32), jnp.float32))
     assert spec.combine.name == "online_softmax"
-    assert len(spec.writes) == 1
+    # ONE accumulated state, TWO native outputs with distinct access
+    # maps: the attention row plus the Hq-wide log-sum-exp finalized
+    # from the same (m, num, den) accumulators
+    assert [w.array for w in spec.writes] == ["o", "lse"]
+    assert spec.combine.with_lse
+    assert spec.writes[0].index != spec.writes[1].index
 
 
 # ------------------------------------------------------- value regimes
@@ -86,6 +91,26 @@ def test_fp32_vs_fp64_oracle(mode, d, p):
     # the weighted sum over 64 positions
     np.testing.assert_allclose(np.asarray(got, np.float64), want,
                                rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_lse_side_output_vs_fp64(mode, d):
+    """The native lse output equals the fp64 log-sum-exp of the scaled
+    scores, and requesting it does not perturb the attention output."""
+    q, k, v = _inputs(key=4)
+    out, lse = decode_attn_gen(q, k, v, config=StridingConfig(d, 1),
+                               mode=mode, with_lse=True)
+    qn, kn = np.asarray(q, np.float64), np.asarray(k, np.float64)
+    qg = qn.reshape(B, HKV, HQ // HKV, DH)
+    scores = np.einsum("bhgd,bshd->bhgs", qg, kn) / np.sqrt(DH)
+    m = scores.max(axis=-1)
+    want = (m + np.log(np.exp(scores - m[..., None]).sum(axis=-1))
+            ).reshape(B, HQ)
+    np.testing.assert_allclose(np.asarray(lse, np.float64), want,
+                               rtol=3e-5, atol=3e-5)
+    base = decode_attn_gen(q, k, v, config=StridingConfig(d, 1), mode=mode)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
 
 
 @pytest.mark.parametrize("mode", ["ref", "interpret"])

@@ -75,6 +75,43 @@ def test_rank_configs_scores_staggered_spacing_for_aliased_layouts():
     assert 8 in ds
 
 
+def test_descriptor_overhead_seeded_from_env(monkeypatch):
+    """REPRO_DMA_DESCRIPTOR_NS (benchmarks/descriptor_sweep.py's fitted
+    value) seeds the model's per-transfer descriptor term; unseeded, the
+    default model is exactly TPU_V5E."""
+    from repro.core.dma_model import TPU_V5E, default_tpu_model
+    monkeypatch.delenv("REPRO_DMA_DESCRIPTOR_NS", raising=False)
+    assert default_tpu_model() == TPU_V5E
+    monkeypatch.setenv("REPRO_DMA_DESCRIPTOR_NS", "495.1")
+    assert default_tpu_model().descriptor_overhead == pytest.approx(
+        495.1e-9)
+
+
+def test_seeded_descriptor_overhead_ranks_block_rows(monkeypatch):
+    """The ranked block_rows ordering responds to the seeded descriptor
+    term: a dominant per-transfer cost makes every (D, P) point's block
+    candidates rank strictly by size (big tiles amortize descriptors),
+    and the bandwidth gap between block sizes grows with the seed —
+    testable without real v5e."""
+    t = Traffic(rows=4096, cols=4096)
+
+    def ranked_bw(ns):
+        monkeypatch.setenv("REPRO_DMA_DESCRIPTOR_NS", str(ns))
+        out = rank_configs(t, block_rows_candidates=(1, 32))
+        return {(c.stride_unroll, c.portion_unroll, c.block_rows): bw
+                for c, bw, _ in out}
+
+    heavy = ranked_bw(50_000)       # 50 µs per descriptor dominates
+    light = ranked_bw(0)
+    for (d, p, bm), bw in heavy.items():
+        if bm == 32:
+            assert bw > heavy[(d, p, 1)]
+    # the big-vs-small block advantage must grow with the seeded cost
+    gain_heavy = heavy[(2, 1, 32)] / heavy[(2, 1, 1)]
+    gain_light = light[(2, 1, 32)] / light[(2, 1, 1)]
+    assert gain_heavy > gain_light > 1.0
+
+
 def test_plan_returns_best_and_full_ranking():
     p = plan(Traffic(rows=64, cols=256))
     assert p.config == p.ranked[0][0]
