@@ -120,7 +120,10 @@ class _Operand:
                 blk = blk[0]
             return blk if lanes is None else blk[lanes]
         if self.kind == "stream1d":
-            return refs[base + k][0, :]
+            blk = refs[base + k][...]
+            # drop the artificial leading dim of an unbatched 1-D read;
+            # batched row streams keep their (1,)*nb batch-block dims
+            return blk[0] if self.squeeze else blk
         if self.taps == 1:
             blk = refs[base + k][...]
             return blk if lanes is None else blk[:, lanes]
@@ -134,10 +137,11 @@ def _lower_reads(sched: transforms.Schedule, bp: transforms.BlockPlan,
     (axis name → pallas grid dimension).
 
     Streamed forms (stride axis in the index): ``[batch…, stride,
-    vector]`` (D operands × row taps) and ``[stride]`` (D rank-1 row
-    streams, e.g. gemver's u vectors or mxv_t's x).  Everything else is
-    resident: whole-extent blocks on the non-batch dims, one batch
-    element per grid step on the batch dims.
+    vector]`` (D operands × row taps) and ``[batch…, stride]`` (D
+    rank-1 row streams, e.g. gemver's u vectors, mxv_t's x, or decode
+    attention's per-batch validity mask).  Everything else is resident:
+    whole-extent blocks on the non-batch dims, one batch element per
+    grid step on the batch dims.
     """
     spec, info = sched.spec, bp.info
     stream = sched.find(info.stride_axis, transforms.STREAM)
@@ -211,24 +215,31 @@ def _lower_reads(sched: transforms.Schedule, bp: transforms.BlockPlan,
                         pl.BlockSpec((1,) * nb + (bp.bm, width), imap))
                     operands.append(x)
             ops.append(_Operand(acc, operands, specs, "stream2d", taps=taps))
-        elif rest == (info.stride_axis,) and not nb:
+        elif rest == (info.stride_axis,):
             if acc.has_halo:
                 raise NotImplementedError(
                     f"{spec.name}: halo on rank-1 streamed {acc.array!r}")
-            x2 = x.reshape(1, -1)
+            # [batch…, stride]: D rank-1 row streams (one batch element
+            # per grid step), e.g. decode_attn's kv_len validity mask.
+            # Unbatched operands get an artificial leading dim (squeezed
+            # back at load).
+            x2 = x if nb else x.reshape(1, -1)
             specs, operands = [], []
             for k in range(d):
-                def imap(*g, _k=k):
-                    return (0, g[row_pos] + _k * segb)
-                specs.append(pl.BlockSpec((1, bp.bm), imap))
+                def imap(*g, _k=k, _bpos=bpos):
+                    lead = (tuple(g[p] for p in _bpos) if _bpos else (0,))
+                    return lead + (g[row_pos] + _k * segb,)
+                specs.append(pl.BlockSpec((1,) * max(nb, 1) + (bp.bm,),
+                                          imap))
                 operands.append(x2)
-            ops.append(_Operand(acc, operands, specs, "stream1d"))
+            ops.append(_Operand(acc, operands, specs, "stream1d",
+                                squeeze=not nb))
         else:
             raise NotImplementedError(
                 f"{spec.name}: access {acc.array!r}{acc.index} not "
-                "lowerable (supported: [batch…, stride, vector], [stride], "
-                "and stride-free resident reads; interchange the nest or "
-                "transpose the operand)")
+                "lowerable (supported: [batch…, stride, vector], "
+                "[batch…, stride], and stride-free resident reads; "
+                "interchange the nest or transpose the operand)")
     return ops
 
 
@@ -292,6 +303,7 @@ class _WritePlan:
     shape_tail: tuple          # padded array dims for the tail vars
     imap_tail: tuple           # grid position per tail dim (None = whole)
     plain: bool                # == (stride, vector) map, lane-slicable
+    transposed: bool = False   # == (vector, stride) map: permuted store
 
 
 def _plan_writes(spec: loopir.TraversalSpec, bp: transforms.BlockPlan,
@@ -308,10 +320,30 @@ def _plan_writes(spec: loopir.TraversalSpec, bp: transforms.BlockPlan,
     for acc in spec.writes:
         bvars = tuple(v for v in acc.index if v in info.batch_axes)
         rest = _write_rest(acc, info)
+        if rest == (info.vector_axis, info.stride_axis):
+            # transposed store: the stride axis lands AFTER the vector
+            # axis in the output, so each stream's (bm, bn) compute block
+            # stores into a (bn, bm) column slab of a [cols, d, seg_rows]
+            # buffer (merged to [cols, rows] after the call).  The body
+            # returns the block already permuted to the write's index
+            # order (vector leading) — same contract as every other
+            # write: blocks match the write map.
+            plans.append(_WritePlan(
+                access=acc, nb=len(bvars),
+                bpos=tuple(pos[v] for v in bvars),
+                batch_ext=tuple(spec.axis(v).extent for v in bvars),
+                tail=(info.vector_axis,),
+                block_tail=(bp.cols if full else bp.bn,),
+                shape_tail=(bp.cols,),
+                imap_tail=(None if full else pos[info.vector_axis],),
+                plain=False, transposed=True,
+            ))
+            continue
         if not rest or rest[0] != info.stride_axis:
             raise NotImplementedError(
                 f"{spec.name}: streaming write {acc.array!r}{acc.index} "
-                "must lead with the stride axis (after any batch axes)")
+                "must lead with the stride axis (after any batch axes) "
+                "or be the transposed (vector, stride) pair")
         tail = rest[1:]
         if (info.vector_axis not in tail
                 and not (full or bp.bn == bp.cols)):
@@ -401,6 +433,11 @@ def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
             for k in range(d):
                 blocks = _as_blocks(spec.body(env(refs, k, sl)), spec)
                 for o_ref, res, wp in zip(o_refs, blocks, wplans):
+                    if wp.transposed:   # plain=False ⇒ sl is None here
+                        o_ref[(0,) * wp.nb + (slice(None), k)] = _fit(
+                            res, (*wp.block_tail, bp.bm),
+                            broadcast=fill).astype(o_ref.dtype)
+                        continue
                     idx = (0,) * wp.nb + (k,)
                     if sl is None:
                         o_ref[idx] = _fit(res, (bp.bm, *wp.block_tail),
@@ -412,6 +449,15 @@ def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
                             broadcast=fill).astype(o_ref.dtype)
 
     def out_spec(wp):
+        if wp.transposed:
+            def out_imap_t(*g):
+                return (tuple(g[p] for p in wp.bpos)
+                        + tuple(0 if p is None else g[p]
+                                for p in wp.imap_tail)
+                        + (0, g[row_pos]))
+            return pl.BlockSpec(
+                (1,) * wp.nb + (*wp.block_tail, d, bp.bm), out_imap_t)
+
         def out_imap(*g):
             return (tuple(g[p] for p in wp.bpos) + (0, g[row_pos])
                     + tuple(0 if p is None else g[p]
@@ -419,18 +465,25 @@ def _emit_streaming(sched, bp, arrays, scalars, interpret: bool):
         return pl.BlockSpec((1,) * wp.nb + (d, bp.bm, *wp.block_tail),
                             out_imap)
 
+    def out_buf_shape(wp):
+        if wp.transposed:   # stride dims trail; merged after the call
+            return wp.batch_ext + (*wp.shape_tail, d, seg_rows)
+        return wp.batch_ext + (d, seg_rows, *wp.shape_tail)
+
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=[out_spec(wp) for wp in wplans],
-        out_shape=[jax.ShapeDtypeStruct(
-            wp.batch_ext + (d, seg_rows, *wp.shape_tail), jnp.dtype(dt))
-            for wp, dt in zip(wplans, out_dtypes)],
+        out_shape=[jax.ShapeDtypeStruct(out_buf_shape(wp), jnp.dtype(dt))
+                   for wp, dt in zip(wplans, out_dtypes)],
         interpret=interpret,
     )(*operands)
-    res = tuple(o.reshape(*wp.batch_ext, d * seg_rows, *wp.shape_tail)
-                for o, wp in zip(out, wplans))
+    res = tuple(
+        o.reshape(*wp.batch_ext, *wp.shape_tail, d * seg_rows)
+        if wp.transposed
+        else o.reshape(*wp.batch_ext, d * seg_rows, *wp.shape_tail)
+        for o, wp in zip(out, wplans))
     return res[0] if n_out == 1 else res
 
 
@@ -438,12 +491,20 @@ def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
     """Vector-axis reductions written per stride row (the mxv pattern):
     one f32 VMEM accumulator PER WRITE, written on the last reduction
     step.  Multi-output specs accumulate each write's partial block into
-    its own accumulator (all writes share the rank-1 ``(stride,)`` map —
-    additive partials only, the historical vecred contract)."""
+    its own accumulator with its OWN single-state combinator from
+    ``spec.combines()`` (a row-max next to a row-sum in one sweep); a
+    scalar ``reduce`` keeps the historical all-sum vecred contract."""
     spec, info = sched.spec, bp.info
     if info.batch_axes:
         raise NotImplementedError(
             f"{spec.name}: batched vector-axis reduction")
+    combs = spec.combines()
+    for comb in combs:
+        if comb.n_state > 1 or comb.finalizing:
+            raise NotImplementedError(
+                f"{spec.name}: vector-axis reduction accumulators are "
+                f"per-write single-state; combine {comb.name!r} is "
+                "stateful/finalizing (stride-reduction only)")
     stream = sched.find(info.stride_axis, transforms.STREAM)
     d, seg_rows = stream.extent, stream.stride
     grid, pos = _geometry(sched, bp)
@@ -467,13 +528,16 @@ def _emit_reduction(sched, bp, arrays, scalars, interpret: bool):
 
         @pl.when(j == 0)
         def _():
-            for acc in accs:
-                acc[...] = jnp.zeros_like(acc)
+            for acc, comb in zip(accs, combs):
+                (v,) = comb.init([acc.shape])
+                acc[...] = v
 
         for k in range(d):
             blocks = _as_blocks(spec.body(env_full(refs, k)), spec)
-            for acc, res in zip(accs, blocks):
-                acc[k, :] += _fit(res, (bp.bm,)).astype(jnp.float32)
+            for acc, res, comb in zip(accs, blocks, combs):
+                part = _fit(res, (bp.bm,)).astype(jnp.float32)
+                (v,) = comb.merge((acc[k, :],), (part,))
+                acc[k, :] = v
 
         @pl.when(j == pl.num_programs(col_pos) - 1)
         def _():
@@ -509,6 +573,11 @@ def _emit_stream_reduction(sched, bp, arrays, scalars, interpret: bool):
     produces one block per write (e.g. ``OnlineSoftmax(with_lse=True)``:
     the attention row next to the ``groups``-wide log-sum-exp)."""
     spec, info = sched.spec, bp.info
+    if isinstance(spec.reduce, tuple):
+        raise NotImplementedError(
+            f"{spec.name}: per-write combinators on a stride-axis "
+            "reduction (all D streams merge ONE shared state); use a "
+            "scalar or finalizing combinator")
     comb = resolve_combine(spec.reduce)
     stream = sched.find(info.stride_axis, transforms.STREAM)
     d = stream.extent
@@ -772,6 +841,12 @@ def emit_scheduled(sched: transforms.Schedule, bp: transforms.BlockPlan,
     if info.reduction and all(_write_rest(w, info) == (info.stride_axis,)
                               for w in spec.writes):
         return _emit_reduction(sched, bp, arrays, scalars, interpret)
+    if isinstance(spec.reduce, tuple):
+        raise NotImplementedError(
+            f"{spec.name}: per-write combinators only apply to vector-"
+            "axis reductions whose writes are all per-row (stride,) "
+            "outputs — this nest lowers to the streaming/manual path, "
+            "where no cross-block merge happens")
     if info.reduction and bp.bn != bp.cols:
         raise NotImplementedError(
             f"{spec.name}: a body-contracted reduction axis needs "
@@ -867,6 +942,16 @@ def emit_spec(spec: loopir.TraversalSpec, inputs: Sequence,
         raise ValueError(
             f"{spec.name}: a stride-axis reduction cannot pad the stride "
             f"axis ({rows} rows, D={bp.d}); pick a D dividing the extent")
+    cols = spec.axis(bp.info.vector_axis).extent
+    if (bp.info.reduction and bp.cols != cols
+            and any(c.name != "sum" for c in spec.combines())):
+        # zero-padded vector lanes feed the body's reduction: harmless
+        # for sums, but they poison any non-'sum' combinator (a padded
+        # zero beats every negative row max) — refuse loudly
+        raise ValueError(
+            f"{spec.name}: padding the reduced vector axis ({cols} -> "
+            f"{bp.cols}) feeds zeros into a non-'sum' per-write "
+            "combinator; use a lane-multiple extent or full_width=True")
     arrays = _pad_arrays(spec, bp, arrays)
     targets = {bp.info.stride_axis: bp.rows, bp.info.vector_axis: bp.cols}
     padded_axes = tuple(

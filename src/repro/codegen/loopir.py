@@ -164,7 +164,26 @@ class TraversalSpec:
         wnames = [a.array for a in self.writes]
         if len(set(wnames)) != len(wnames):
             raise ValueError(f"{self.name}: duplicate write arrays {wnames}")
-        resolve_combine(self.reduce)   # raises on unknown combine
+        if isinstance(self.reduce, tuple):
+            # per-write combinators: one entry per write, applied to that
+            # write's OWN f32 accumulator (a row-max next to a row-sum in
+            # one sweep).  Stateful/finalizing combinators merge ONE
+            # shared state across every write and cannot be distributed
+            # per accumulator — they must stay a scalar ``reduce``.
+            if len(self.reduce) != len(self.writes):
+                raise ValueError(
+                    f"{self.name}: reduce tuple has {len(self.reduce)} "
+                    f"entries for {len(self.writes)} writes")
+            for r in self.reduce:
+                comb = resolve_combine(r)   # raises on unknown combine
+                if comb.n_state > 1 or comb.finalizing:
+                    raise ValueError(
+                        f"{self.name}: per-write combine {comb.name!r} "
+                        "must be single-state and non-finalizing; "
+                        "stateful combinators share one state across "
+                        "writes — use a scalar reduce")
+        else:
+            resolve_combine(self.reduce)   # raises on unknown combine
         if isinstance(self.out_dtype, tuple):
             if len(self.out_dtype) != len(self.writes):
                 raise ValueError(
@@ -235,7 +254,20 @@ class TraversalSpec:
 
     @property
     def combine(self) -> Combine:
+        """The single stride-axis combinator.  A per-write ``reduce``
+        tuple has no one combinator — use :meth:`combines`."""
+        if isinstance(self.reduce, tuple):
+            raise ValueError(
+                f"{self.name}: spec has per-write combinators; "
+                "spec.combine is ambiguous — use spec.combines()")
         return resolve_combine(self.reduce)
+
+    def combines(self) -> tuple[Combine, ...]:
+        """One combinator per write: a ``reduce`` tuple maps entrywise,
+        a scalar reduce broadcasts to every write."""
+        if isinstance(self.reduce, tuple):
+            return tuple(resolve_combine(r) for r in self.reduce)
+        return (resolve_combine(self.reduce),) * len(self.writes)
 
     def out_shape(self) -> tuple[int, ...]:
         """Output shape of the sole write (multi-output specs must use
@@ -323,7 +355,23 @@ def classify(spec: TraversalSpec) -> NestInfo:
                        if strip(a.index)),
         writes=tuple(a.array for a in spec.writes),
     )
-    plan = plan_transform(nest)
+    try:
+        plan = plan_transform(nest)
+    except ValueError:
+        # A transposed store (write index permuting the stride axis
+        # after the vector axis) leaves NO axis that is last in every
+        # access, so the §5.1 critical-access selection fails over the
+        # full access set.  The reads still determine the traversal —
+        # retry on them alone; the emitter lowers the permuted write as
+        # a transposed store against the read-derived (stride, vector)
+        # choice.
+        read_accs = tuple(ArrayAccess(a.array, strip(a.index))
+                          for a in spec.reads if strip(a.index))
+        if not read_accs:
+            raise
+        plan = plan_transform(LoopNest(
+            loops=tuple(ax.name for ax in inner),
+            accesses=read_accs, writes=()))
     stride, vec = plan.stride_var, plan.contiguous_var
     blocked = plan.needs_blocking
     if blocked:
@@ -434,16 +482,20 @@ def evaluate(spec: TraversalSpec, inputs: Sequence[Any]):
     env: dict[str, Any] = {a.array: x for a, x in zip(spec.reads, arrays)}
     env.update(zip(spec.scalars, scalars))
     out = spec.body(env)
-    comb = resolve_combine(spec.reduce)
-    if comb.n_state > 1 or comb.finalizing:
-        state = out if isinstance(out, tuple) else (out,)
-        if len(state) != comb.n_state:   # mirror the emitter's check
-            raise ValueError(
-                f"{spec.name}: body returned {len(state)} state "
-                f"components for combine {comb.name!r} "
-                f"(n_state={comb.n_state})")
-        out = comb.finalize(tuple(jnp.asarray(o, jnp.float32)
-                                  for o in state))
+    # a per-write reduce tuple is single-state / non-finalizing by
+    # construction (__post_init__): the body already reduced the full
+    # extent, so there is no state to finalize here
+    if not isinstance(spec.reduce, tuple):
+        comb = resolve_combine(spec.reduce)
+        if comb.n_state > 1 or comb.finalizing:
+            state = out if isinstance(out, tuple) else (out,)
+            if len(state) != comb.n_state:   # mirror the emitter's check
+                raise ValueError(
+                    f"{spec.name}: body returned {len(state)} state "
+                    f"components for combine {comb.name!r} "
+                    f"(n_state={comb.n_state})")
+            out = comb.finalize(tuple(jnp.asarray(o, jnp.float32)
+                                      for o in state))
     outs = out if isinstance(out, tuple) else (out,)
     if len(outs) != len(spec.writes):
         raise ValueError(f"{spec.name}: body returned {len(outs)} blocks "

@@ -7,9 +7,11 @@ Generated set: ``gen`` — kernels expressed as ``repro.codegen``
 TraversalSpecs and lowered to Pallas by the transform pipeline
 (``*_gen`` variants; see README § Codegen).
 
-Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper w/ tune-cache + planner integration), ref.py (pure-jnp oracle),
-and a ``register(KernelSpec(...))`` call in its __init__ describing the
+Each subpackage: specs.py (the family's TraversalSpec builders — the
+kernel definitions; the emitter in ``repro.codegen`` is the only place
+Pallas calls are constructed), ops.py (jit'd wrapper w/ tune-cache +
+planner integration), ref.py (pure-jnp oracle), and a
+``register(KernelSpec(...))`` call in its __init__ describing the
 variant to the kernel registry (``repro.registry``).
 
 The export table below is *derived from the registry*: importing the

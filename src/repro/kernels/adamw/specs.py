@@ -1,0 +1,46 @@
+"""``TraversalSpec`` builder for the adamw family.
+
+This spec IS the AdamW kernel now: the hand-written Pallas body
+(``adamw.py``) was retired once the generated variant had matched it
+for a full release cycle (ROADMAP retirement plan); ``ops.py`` and the
+``adamw_update_gen`` registry variant both lower this builder through
+``repro.codegen``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec
+
+__all__ = ["adamw_spec"]
+
+
+def adamw_spec(p2, g2, m2, v2, lr=0.0, b1=0.0, b2=0.0, eps=0.0, wd=0.0,
+               bc1=1.0, bc2=1.0) -> TraversalSpec:
+    """One fused spec with three *native* outputs: (p', m', v') lower to
+    three Pallas output refs sharing the write access map — the hand
+    kernel's triple store as 4 load + 3 store streams per stride, no
+    re-reads, no stacked free axis, no unstack copies."""
+    rows, cols = p2.shape
+
+    def body(env):
+        pf = env["p"].astype(jnp.float32)
+        gf = env["g"].astype(jnp.float32)
+        m_new = env["b1"] * env["m"] + (1.0 - env["b1"]) * gf
+        v_new = env["b2"] * env["v"] + (1.0 - env["b2"]) * gf * gf
+        update = ((m_new / env["bc1"])
+                  / (jnp.sqrt(v_new / env["bc2"]) + env["eps"])
+                  + env["wd"] * pf)
+        return (pf - env["lr"] * update, m_new, v_new)
+
+    return TraversalSpec(
+        name="adamw_update",
+        axes=(Axis("i", rows), Axis("j", cols)),
+        reads=(Access("p", ("i", "j")), Access("g", ("i", "j")),
+               Access("m", ("i", "j")), Access("v", ("i", "j"))),
+        writes=(Access("po", ("i", "j")), Access("mo", ("i", "j")),
+                Access("vo", ("i", "j"))),
+        scalars=("lr", "b1", "b2", "eps", "wd", "bc1", "bc2"),
+        body=body,
+        out_dtype=(jnp.float32, jnp.float32, jnp.float32),
+    )

@@ -1,37 +1,36 @@
-"""Jit'd wrapper for the fused BiCG kernel."""
+"""Jit'd wrapper for bicg (PolyBench BiCGStab sub-kernel).
+
+The hand-written Pallas body is retired (ROADMAP retirement plan): the
+wrapper lowers the family's ``TraversalSpec`` builders in ``specs.py``
+through ``repro.codegen`` — both passes fused into one jitted program so
+the pair costs one dispatch, like the hand-written fused kernel did.
+Config resolution (tune-cache → planner → default) runs outside jit so
+autotune results take effect immediately (see common.resolve_config).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.codegen import run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.bicg import bicg as k
-from repro.kernels.bicg import ref
+from repro.kernels.bicg import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _bicg(a, r, p, config: StridingConfig, mode: str):
-    if mode == "ref":
-        return ref.bicg_ref(a, r, p)
-    m, n = a.shape
-    d = config.stride_unroll
-    bm = common.choose_block(m // d, 8)
-    bn = 128 * config.portion_unroll
-    a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
-    r_p = common.pad_axis(r, 0, d * bm)
-    p_p = common.pad_axis(p, 0, bn)
-    q, s = k.bicg(a_p, r_p, p_p, d, bm, bn, interpret=(mode == "interpret"))
-    return q[:m], s[:n]
+    return (run_spec(specs.bicg_q_spec, (a, p), config, mode),
+            run_spec(specs.bicg_s_spec, (a, r), config, mode))
 
 
 def bicg(a: jax.Array, r: jax.Array, p: jax.Array,
          config: StridingConfig | None = None, mode: str | None = None):
-    """q = A p ; s = Aᵀ r — fused single pass (paper bicg)."""
+    """q = A p ; s = Aᵀ r (paper bicg: two sweeps of A, one program)."""
     mode = mode or common.kernel_mode()
     m, n = a.shape
     traffic = Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2)

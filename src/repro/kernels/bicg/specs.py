@@ -1,0 +1,47 @@
+"""``TraversalSpec`` builders for the bicg family.
+
+These specs ARE the bicg kernel now: the hand-written Pallas body
+(``bicg.py``) was retired once the generated variant had matched it
+for a full release cycle (ROADMAP retirement plan); ``ops.py`` and the
+``bicg_gen`` registry variant both lower these builders through
+``repro.codegen``.
+
+  * ``bicg_q_spec`` — q = A p, vector-axis reduction (the mxv pattern):
+    vectorize j, stride-unroll i into D row streams of A.
+  * ``bicg_s_spec`` — s = rᵀA, *stride-axis* reduction: the streamed
+    rows are themselves reduced, every stream's partial row of s merges
+    across D streams and grid steps (the mxv_t pattern).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec
+
+__all__ = ["bicg_q_spec", "bicg_s_spec"]
+
+
+def bicg_q_spec(a, p) -> TraversalSpec:
+    m, n = a.shape
+    return TraversalSpec(
+        name="bicg_q",
+        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
+        reads=(Access("A", ("i", "j")), Access("p", ("j",))),
+        writes=(Access("q", ("i",)),),
+        body=lambda env: jnp.dot(env["A"], env["p"],
+                                 preferred_element_type=jnp.float32),
+    )
+
+
+def bicg_s_spec(a, r) -> TraversalSpec:
+    """s = rᵀA: the reduction runs over the *streamed* rows — every
+    stream's partial row of s merges across D streams and grid steps."""
+    m, n = a.shape
+    return TraversalSpec(
+        name="bicg_s",
+        axes=(Axis("i", m, kind="reduction"), Axis("j", n)),
+        reads=(Access("A", ("i", "j")), Access("r", ("i",))),
+        writes=(Access("s", ("j",)),),
+        body=lambda env: jnp.dot(env["r"], env["A"],
+                                 preferred_element_type=jnp.float32),
+    )

@@ -14,7 +14,7 @@ from repro.core.striding import (StridingConfig, choose_block,
 __all__ = [
     "kernel_mode", "use_pallas", "interpret_mode",
     "pad_axis", "pad_to_multiple", "choose_block", "resolve_config",
-    "example_input",
+    "reset_plan_memo", "example_input",
 ]
 
 
@@ -84,10 +84,19 @@ def effective_config(config: StridingConfig | None, rows: int | None,
     return cfg
 
 
-# planner results are pure in (kernel, shape, dtype) — memoized so a hot
-# loop (e.g. adamw per tensor per step) doesn't re-rank on every call.
-# The tune-cache lookup stays per-call: a fresh autotune write must win.
+# planner results are pure in (kernel, shape, dtype, backend) — memoized
+# so a hot loop (e.g. adamw per tensor per step) doesn't re-rank on every
+# call.  The backend is part of the key: the DMA model's parameters are
+# per-machine, so a result planned under one backend must not leak into
+# another.  The tune-cache lookup stays per-call: a fresh autotune write
+# must win.
 _plan_memo: dict[tuple, StridingConfig | None] = {}
+
+
+def reset_plan_memo() -> None:
+    """Drop memoized planner results (tests repoint backends / DMA-model
+    env knobs; pair with ``tunecache.reset_default_cache()``)."""
+    _plan_memo.clear()
 
 
 def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
@@ -108,7 +117,8 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
         from repro.registry import tunecache
         config = tunecache.cached_config(kernel, shape, dtype, mode=mode)
         if config is None and traffic is not None:
-            key = (kernel, tuple(shape), str(jnp.dtype(dtype)))
+            key = (kernel, tuple(shape), str(jnp.dtype(dtype)),
+                   jax.default_backend())
             if key in _plan_memo:
                 config = _plan_memo[key]
             else:

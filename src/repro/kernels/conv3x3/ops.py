@@ -1,30 +1,27 @@
-"""Jit'd wrapper for conv3x3."""
+"""Jit'd wrapper for conv3x3.
+
+The hand-written Pallas body is retired (ROADMAP retirement plan): the
+wrapper lowers the family's ``TraversalSpec`` builder in ``specs.py``
+through ``repro.codegen`` (halo blocks, pad + crop and the nine scalar
+weights all handled by the emitter)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.codegen import run_spec
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.conv3x3 import conv3x3 as k
-from repro.kernels.conv3x3 import ref
+from repro.kernels.conv3x3 import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _conv3x3(x, w, config: StridingConfig, mode: str):
-    if mode == "ref":
-        return ref.conv3x3_ref(x, w)
-    h, w_in = x.shape
-    h_out = h - 2
-    d = config.stride_unroll
-    # pad output rows to a multiple of d (extra rows read zero-padding)
-    pad_rows = common.pad_to_multiple(h_out, d) - h_out
-    x_p = common.pad_axis(x, 0, h_out + pad_rows + 2) if pad_rows else x
-    out = k.conv3x3(x_p, w, d, interpret=(mode == "interpret"))
-    return out[:h_out]
+    w9 = [w[r, c] for r in range(3) for c in range(3)]
+    return run_spec(specs.conv3x3_spec, (x, *w9), config, mode)
 
 
 def conv3x3(x: jax.Array, w: jax.Array,

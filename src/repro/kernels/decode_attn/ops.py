@@ -1,4 +1,11 @@
-"""Jit'd wrapper for multi-strided flash-decode attention."""
+"""Jit'd wrapper for multi-strided flash-decode attention.
+
+The hand-written Pallas body is retired (ROADMAP retirement plan): the
+wrapper lowers the family's ``TraversalSpec`` builder in ``specs.py``
+through ``repro.codegen`` — a single online-softmax stream-reduction
+sweep of the (flattened) cache.  ``kv_len`` masking rides a validity
+row stream (the ``masked=True`` spec variant), so a traced length (the
+models' decode loop) works under jit."""
 from __future__ import annotations
 
 import functools
@@ -6,26 +13,41 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.codegen import run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.decode_attn import decode_attn as k
-from repro.kernels.decode_attn import ref
+from repro.kernels.decode_attn import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
-@functools.partial(jax.jit, static_argnames=("config", "mode", "block_s"))
-def _decode_attn(q, kc, vc, kv_len, config: StridingConfig, mode: str,
-                 block_s: int) -> jax.Array:
-    s = kc.shape[1]
-    if mode == "ref":
-        return ref.decode_attn_ref(q, kc, vc, kv_len)
-    d = config.stride_unroll
-    bs = common.choose_block(s // d, block_s)
-    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
-    return k.decode_attn(q, kc, vc, kv_len_arr, d, bs,
-                         interpret=(mode == "interpret"))
+def _flatten(q, kc, vc):
+    b, hq = q.shape[0], q.shape[1]
+    s, hkv, dh = kc.shape[1], kc.shape[2], kc.shape[3]
+    return (kc.reshape(b, s, hkv * dh), vc.reshape(b, s, hkv * dh),
+            q.reshape(b, hq * dh))
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _decode_attn(q, kc, vc, config: StridingConfig, mode: str) -> jax.Array:
+    hkv, dh = kc.shape[2], kc.shape[3]
+    out, _ = run_spec(specs.decode_spec(hkv, dh), _flatten(q, kc, vc),
+                      config, mode)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def _decode_attn_masked(q, kc, vc, kv_len, config: StridingConfig,
+                        mode: str) -> jax.Array:
+    b, s, hkv, dh = kc.shape[0], kc.shape[1], kc.shape[2], kc.shape[3]
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((b,), kv_len)
+    mask = (jnp.arange(s)[None, :] < kv_len[:, None]).astype(jnp.float32)
+    out, _ = run_spec(specs.decode_spec(hkv, dh, masked=True),
+                      (*_flatten(q, kc, vc), mask), config, mode)
+    return out.reshape(q.shape).astype(q.dtype)
 
 
 def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array,
@@ -35,13 +57,16 @@ def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array,
     """One-token GQA attention against a [B, S, Hkv, dh] KV cache.
 
     The sequence axis is stride-unrolled into D concurrent KV streams
-    (multi-striding); per-segment online softmax merges at the end.
+    (multi-striding); the online-softmax partial states merge across
+    streams and grid steps.  ``block_s`` is advisory (the emitter plans
+    its own sequence blocking) and kept for call-site compatibility.
     """
+    del block_s
     mode = mode or common.kernel_mode()
     s, hkv, dh = kc.shape[1], kc.shape[2], kc.shape[3]
-    if kv_len is None:
-        kv_len = s
     traffic = Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype, read_arrays=2)
     cfg = common.resolve_config("decode_attn", kc.shape, kc.dtype, config, s,
                                 _DEFAULT, traffic=traffic, mode=mode)
-    return _decode_attn(q, kc, vc, kv_len, cfg, mode, block_s)
+    if kv_len is None:
+        return _decode_attn(q, kc, vc, cfg, mode)
+    return _decode_attn_masked(q, kc, vc, kv_len, cfg, mode)

@@ -1,31 +1,27 @@
-"""Jit'd wrapper for doitgen."""
+"""Jit'd wrapper for doitgen.
+
+The hand-written Pallas body is retired (ROADMAP retirement plan): the
+wrapper lowers the family's ``TraversalSpec`` builder in ``specs.py``
+through ``repro.codegen`` (the batched 3-D nest keeps ``r`` as a batch
+grid dim instead of the hand kernel's flatten-to-2-D reshape)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.codegen import run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.doitgen import doitgen as k
-from repro.kernels.doitgen import ref
+from repro.kernels.doitgen import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _doitgen(a, c4, config: StridingConfig, mode: str):
-    if mode == "ref":
-        return ref.doitgen_ref(a, c4)
-    r, q, s = a.shape
-    p = c4.shape[1]
-    m = r * q
-    d = config.stride_unroll
-    bm = common.choose_block(m // d, 8 * config.portion_unroll)
-    a2 = common.pad_axis(a.reshape(m, s), 0, d * bm)
-    out = k.doitgen(a2, c4, d, bm, interpret=(mode == "interpret"))
-    return out[:m].reshape(r, q, p)
+    return run_spec(specs.doitgen_spec, (a, c4), config, mode)
 
 
 def doitgen(a: jax.Array, c4: jax.Array,

@@ -1,0 +1,34 @@
+"""``TraversalSpec`` builder for the doitgen family.
+
+This spec IS the doitgen kernel now: the hand-written Pallas body
+(``doitgen.py``) was retired once the generated variant had matched it
+for a full release cycle (ROADMAP retirement plan); ``ops.py`` and the
+``doitgen_gen`` registry variant both lower this builder through
+``repro.codegen``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec
+
+__all__ = ["doitgen_spec"]
+
+
+def doitgen_spec(a, c4) -> TraversalSpec:
+    """Batched 3-D nest: ``r`` is a batch grid dim, ``q`` streams, ``s``
+    contracts inside the body against resident C4 — the §5.1 analysis
+    picks the *written* array as critical (vectorize ``p``), exactly as
+    the paper and the hand kernel derive."""
+    r, q, s = a.shape
+    p = c4.shape[1]
+    return TraversalSpec(
+        name="doitgen",
+        axes=(Axis("r", r, kind="batch"), Axis("q", q),
+              Axis("s", s, kind="reduction"), Axis("p", p)),
+        reads=(Access("A", ("r", "q", "s")), Access("C4", ("s", "p"))),
+        writes=(Access("o", ("r", "q", "p")),),
+        body=lambda env: jnp.einsum("bqs,sp->bqp", env["A"], env["C4"],
+                                    preferred_element_type=jnp.float32),
+        full_width=True,
+    )

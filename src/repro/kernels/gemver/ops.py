@@ -1,5 +1,11 @@
 """Jit'd wrappers for gemver: the four steps + the reassembled kernel
-(paper §6.4: each step individually tuned, then unified)."""
+(paper §6.4: each step individually tuned, then unified).
+
+The hand-written Pallas bodies are retired (ROADMAP retirement plan):
+``gemver_outer`` and ``gemver_sum`` lower the family's ``TraversalSpec``
+builders in ``specs.py`` through ``repro.codegen``; the two mxv steps
+keep delegating to the (already spec-lowered) ``mxv`` family, with a
+tuned entry under their own variant name taking precedence."""
 from __future__ import annotations
 
 import functools
@@ -7,11 +13,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.codegen import run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.gemver import gemver as k
-from repro.kernels.gemver import ref
+from repro.kernels.gemver import specs
 from repro.kernels.mxv import ops as mxv_ops
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
@@ -19,20 +25,8 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=2)
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _outer(a, u1, v1, u2, v2, config: StridingConfig, mode: str):
-    if mode == "ref":
-        return ref.outer_ref(a, u1, v1, u2, v2)
-    m, n = a.shape
-    d = config.stride_unroll
-    bm = common.choose_block(m // d, 8)
-    bn = 128 * config.portion_unroll
-    a_p = common.pad_axis(common.pad_axis(a, 1, bn), 0, d * bm)
-    u1_p = common.pad_axis(u1, 0, d * bm)
-    u2_p = common.pad_axis(u2, 0, d * bm)
-    v1_p = common.pad_axis(v1, 0, bn)
-    v2_p = common.pad_axis(v2, 0, bn)
-    out = k.outer(a_p, u1_p, v1_p, u2_p, v2_p, d, bm, bn,
-                  interpret=(mode == "interpret"))
-    return out[:m, :n]
+    return run_spec(specs.gemver_outer_spec, (a, u1, v1, u2, v2),
+                    config, mode)
 
 
 def gemver_outer(a, u1, v1, u2, v2, config: StridingConfig | None = None,
@@ -49,21 +43,7 @@ def gemver_outer(a, u1, v1, u2, v2, config: StridingConfig | None = None,
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _vsum(x, z, config: StridingConfig, mode: str):
-    if mode == "ref":
-        return ref.sum_ref(x, z)
-    d = config.stride_unroll
-    bn = 128 * config.portion_unroll
-    n = x.shape[0]
-    # loop blocking (paper §5.1.1): distribute the 1-D array over D
-    # partitions; view as [d*bm, cols].
-    cols = bn
-    rows = -(-n // cols)
-    bm = 1
-    rows_p = common.pad_to_multiple(rows, d * bm)
-    x_p = common.pad_axis(x, 0, rows_p * cols).reshape(rows_p, cols)
-    z_p = common.pad_axis(z, 0, rows_p * cols).reshape(rows_p, cols)
-    out = k.vsum(x_p, z_p, d, bm, cols, interpret=(mode == "interpret"))
-    return out.reshape(-1)[:n]
+    return run_spec(specs.gemver_sum_spec, (x, z), config, mode)
 
 
 def gemver_sum(x, z, config: StridingConfig | None = None,

@@ -1,29 +1,32 @@
 """Codegen-derived kernel family: hand-written families re-expressed as
 ``TraversalSpec``s and lowered by ``repro.codegen`` — no Pallas by hand.
 
-This module holds the first three ported archetypes:
+Every hand family is fully *retired*: the spec builders live with their
+families (``kernels/<family>/specs.py``) and are shared verbatim by the
+public ``ops.py`` wrappers and the ``*_gen`` registry variants alike —
+one definition, two registry rows (hand-named and ``_gen``), zero hand
+Pallas anywhere outside ``repro.codegen``.
+
+This module holds the first ported archetypes plus two spec-only
+kernels that exist to exercise dedicated emitter features:
 
   * ``stream_copy_gen``  — streaming elementwise
+  * ``stream_triad_gen`` — STREAM triad a = b + αc (paper Table 1 class)
   * ``mxv_gen``          — vector-axis reduction
   * ``jacobi2d_gen``     — 5-point stencil
+  * ``rowstat_gen``      — row max AND row sum in ONE sweep: two writes
+    with *per-write combinators* (``reduce=("max", "sum")``), each
+    output merging its vector-axis partials under its own combine.
+  * ``transpose_gen``    — y = xᵀ via *transposed stores*: the write's
+    access map is the (vector, stride) pair, so each stream's block
+    stores through a transposed BlockSpec instead of a copy-out pass.
 
-plus ``stream_triad_gen`` (STREAM triad a = b + αc, paper Table 1 class),
-which exists *only* as a spec — the registry, conformance matrix,
-autotuner, and fig6 benchmark all pick it up with zero bespoke plumbing.
-
-The stream and mxv hand-written bodies are fully *retired*: their spec
-builders now live with their families (``kernels/stream/specs.py``,
-``kernels/mxv/specs.py``) and are shared by the public ``ops.py``
-wrappers and the ``*_gen`` registry variants alike — one definition,
-two registry rows (hand-named and ``_gen``), zero hand Pallas.
-
-The remaining families live in sibling modules (every hand family now
-has a generated counterpart):
+The remaining families live in sibling modules:
 
   * ``polybench``  — bicg, the four gemver steps, conv3x3, doitgen
     (stride-axis reductions, rank-1 row streams, §5.1.1 loop blocking,
     batch axes);
-  * ``framework``  — decode_attn, rmsnorm, adamw (batched two-pass
+  * ``framework``  — decode_attn, rmsnorm, adamw (online-softmax
     stream reductions, full-width rows, blocked 1-D optimizer nests).
 
 Each ``*_gen`` variant registers with the hand family's problem sizes and
@@ -34,10 +37,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.codegen import (Access, Axis, TraversalSpec, make_kernel_op,
-                           tap, traffic_of)
+                           traffic_of)
 from repro.core.striding import StridingConfig
 from repro.kernels.common import example_input as _rand
 from repro.kernels.jacobi2d import ref as _jac_ref
+from repro.kernels.jacobi2d.specs import jacobi_spec
 from repro.kernels.mxv import ref as _mxv_ref
 from repro.kernels.mxv.specs import mxv_spec
 from repro.kernels.stream import ref as _stream_ref
@@ -46,6 +50,7 @@ from repro.registry.base import KernelSpec, register
 
 __all__ = [
     "stream_copy_gen", "stream_triad_gen", "mxv_gen", "jacobi2d_gen",
+    "rowstat_gen", "transpose_gen",
     "bicg_gen", "gemver_outer_gen", "gemver_sum_gen", "gemver_mxv1_gen",
     "gemver_mxv1_sum_gen", "gemver_mxv2_gen", "conv3x3_gen",
     "doitgen_gen", "decode_attn_gen", "rmsnorm_gen", "adamw_update_gen",
@@ -53,31 +58,40 @@ __all__ = [
 
 
 # ------------------------------------------------------------- specs
-# copy/triad/mxv specs live with their families (stream/specs.py,
-# mxv/specs.py) — shared verbatim by the retired families' ops wrappers
+# family specs live with their families (stream/specs.py, mxv/specs.py,
+# jacobi2d/specs.py, ...) — shared verbatim by the retired families'
+# ops wrappers.  Only the two emitter-feature kernels are defined here.
 
-_JAC_HALO = ((1, 1), (1, 1))
-
-
-def _jacobi_body(env):
-    x = env["x"].astype(jnp.float32)
-    c = tap(x, _JAC_HALO, 0, 0)
-    l = tap(x, _JAC_HALO, 0, -1)
-    r = tap(x, _JAC_HALO, 0, +1)
-    u = tap(x, _JAC_HALO, -1, 0)
-    b = tap(x, _JAC_HALO, +1, 0)
-    return 0.2 * (c + l + r + u + b)
-
-
-def jacobi_spec(x) -> TraversalSpec:
-    h, w = x.shape
+def rowstat_spec(x) -> TraversalSpec:
+    """Row max AND row sum in ONE sweep of x: two rank-1 writes off the
+    same vector-axis reduction, each with its own combinator
+    (``reduce=("max", "sum")``) merging that output's partials across
+    the column grid.  Extents stay lane multiples: zero-padded lanes
+    would poison the max accumulator, and the emitter refuses them."""
+    m, n = x.shape
     return TraversalSpec(
-        name="jacobi2d_gen",
-        axes=(Axis("i", h - 2), Axis("j", w - 2)),
-        reads=(Access("x", ("i", "j"), halo=_JAC_HALO),),
-        writes=(Access("y", ("i", "j")),),
-        body=_jacobi_body,
-        out_dtype=None,
+        name="rowstat",
+        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("mx", ("i",)), Access("sm", ("i",))),
+        body=lambda env: (env["x"].astype(jnp.float32).max(axis=-1),
+                          env["x"].astype(jnp.float32).sum(axis=-1)),
+        out_dtype=(jnp.float32, jnp.float32),
+        reduce=("max", "sum"),
+    )
+
+
+def transpose_spec(x) -> TraversalSpec:
+    """y = xᵀ: the write's access map is the (vector, stride) pair, so
+    each of the D streams stores its block through a *transposed*
+    BlockSpec — no separate transpose copy after the sweep."""
+    m, n = x.shape
+    return TraversalSpec(
+        name="transpose",
+        axes=(Axis("i", m), Axis("j", n)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("xt", ("j", "i")),),
+        body=lambda env: jnp.swapaxes(env["x"], -1, -2),
     )
 
 
@@ -91,6 +105,10 @@ mxv_gen = make_kernel_op("mxv_gen", mxv_spec,
                          default=StridingConfig(4, 2))
 jacobi2d_gen = make_kernel_op("jacobi2d_gen", jacobi_spec,
                               default=StridingConfig(4, 1))
+rowstat_gen = make_kernel_op("rowstat_gen", rowstat_spec,
+                             default=StridingConfig(4, 2))
+transpose_gen = make_kernel_op("transpose_gen", transpose_spec,
+                               default=StridingConfig(4, 1))
 
 
 # ---------------------------------------------------------- registry
@@ -121,6 +139,10 @@ def _rc(s):
     return (s["rows"], s["cols"])
 
 
+def _mn(s):
+    return (s["m"], s["n"])
+
+
 register(KernelSpec(
     name="stream_copy_gen", family="gen", fn=stream_copy_gen,
     make_inputs=lambda s, dt: (_rand(_rc(s), 0, dt),),
@@ -144,7 +166,7 @@ register(KernelSpec(
 
 register(KernelSpec(
     name="mxv_gen", family="gen", fn=mxv_gen,
-    make_inputs=lambda s, dt: (_rand((s["m"], s["n"]), 0, dt),
+    make_inputs=lambda s, dt: (_rand(_mn(s), 0, dt),
                                _rand((s["n"],), 1, dt)),
     run=lambda inp, cfg, mode: mxv_gen(inp[0], inp[1], config=cfg,
                                        mode=mode),
@@ -152,7 +174,7 @@ register(KernelSpec(
     default_sizes=_MXV_SIZES, aliased_sizes=_MXV_ALIASED,
     traffic=_traffic(mxv_spec,
                      lambda s: ((s["m"], s["n"]), (s["n"],))),
-    cache_shape=lambda s: (s["m"], s["n"]),
+    cache_shape=_mn,
     bench_sizes=_MXV_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -165,6 +187,31 @@ register(KernelSpec(
     cache_shape=lambda s: (s["h"], s["w"]),
     bench_sizes=_JAC_BENCH,
     rtol=1e-5, atol=1e-5, tags=("paper", "gen")))
+
+# lane-multiple extents: the padded-lanes refusal under a non-'sum'
+# per-write combinator never triggers at these sizes
+register(KernelSpec(
+    name="rowstat_gen", family="gen", fn=rowstat_gen,
+    make_inputs=lambda s, dt: (_rand(_mn(s), 0, dt),),
+    run=lambda inp, cfg, mode: rowstat_gen(inp[0], config=cfg, mode=mode),
+    ref=lambda inp, cfg: (inp[0].astype(jnp.float32).max(axis=-1),
+                          inp[0].astype(jnp.float32).sum(axis=-1)),
+    default_sizes=_MXV_SIZES, aliased_sizes=_MXV_ALIASED,
+    traffic=_traffic(rowstat_spec, lambda s: (_mn(s),)),
+    cache_shape=_mn,
+    bench_sizes=_MXV_BENCH,
+    rtol=1e-5, atol=1e-5, tags=("paper", "gen")))
+
+register(KernelSpec(
+    name="transpose_gen", family="gen", fn=transpose_gen,
+    make_inputs=lambda s, dt: (_rand(_mn(s), 0, dt),),
+    run=lambda inp, cfg, mode: transpose_gen(inp[0], config=cfg,
+                                             mode=mode),
+    ref=lambda inp, cfg: inp[0].T,
+    default_sizes=_MXV_SIZES, aliased_sizes=_MXV_ALIASED,
+    traffic=_traffic(transpose_spec, lambda s: (_mn(s),)),
+    cache_shape=_mn,
+    bench_sizes=_MXV_BENCH, tags=("paper", "gen")))
 
 
 # the remaining ported families register on import (they self-register

@@ -1,6 +1,10 @@
-"""Codegen ports of the framework kernel families: flash-decode GQA
-attention, fused RMSNorm, and the fused AdamW step — as
-``TraversalSpec``s, no hand-written Pallas.
+"""Codegen variants of the framework kernel families: flash-decode GQA
+attention, fused RMSNorm, and the fused AdamW step.
+
+The spec builders live with their families
+(``kernels/decode_attn/specs.py``, ``kernels/rmsnorm/specs.py``,
+``kernels/adamw/specs.py``) and are shared verbatim by the public
+``ops.py`` wrappers and the ``*_gen`` registry rows here.
 
   * ``decode_attn_gen`` — ONE generated *stride-axis reduction* sweep
     over the KV cache (``b`` a batch grid dim, the sequence axis split
@@ -31,80 +35,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.codegen import (Access, Axis, OnlineSoftmax, TraversalSpec,
-                           evaluate, run_spec)
+from repro.codegen import run_spec
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels.adamw import ref as _adamw_ref
+from repro.kernels.adamw.ops import _adamw, _blocking as _adamw_blocking
+from repro.kernels.adamw.specs import adamw_spec
 from repro.kernels.common import example_input as _rand
 from repro.kernels.decode_attn import ref as _da_ref
+from repro.kernels.decode_attn.specs import decode_spec as _decode_spec
 from repro.kernels.gen.polybench import _mode, _resolve
 from repro.kernels.rmsnorm import ref as _rms_ref
+from repro.kernels.rmsnorm.specs import rmsnorm_spec
 from repro.registry.base import KernelSpec, register
 
-__all__ = ["decode_attn_gen", "rmsnorm_gen", "adamw_update_gen"]
+__all__ = ["decode_attn_gen", "rmsnorm_gen", "adamw_update_gen",
+           # family specs re-exported for spec-level consumers
+           "adamw_spec", "rmsnorm_spec"]
 
 
 # --------------------------------------------------------- decode attn
-
-@functools.lru_cache(maxsize=None)
-def _decode_spec(hkv: int, dh: int):
-    """Per-(Hkv, dh) single-pass spec builder (the head split is a
-    static reshape inside the body).  The body emits the online-softmax
-    partial state for its KV block; the ``OnlineSoftmax`` combinator
-    merges states across the D streams and the sequence grid and
-    finalizes ``num / den`` into the output — one K sweep, one V sweep.
-    """
-
-    def heads(block, rows):
-        return block.reshape(block.shape[0], rows, hkv, dh)
-
-    def scores(env, scale):
-        kb = env["K"]
-        b, rows = kb.shape[0], kb.shape[1]
-        hq = env["q"].shape[-1] // dh
-        g = hq // hkv
-        q4 = env["q"].reshape(b, hkv, g, dh).astype(jnp.float32)
-        k4 = heads(kb, rows).astype(jnp.float32)
-        s4 = jnp.einsum("bhgd,bshd->bhgs", q4, k4) * scale
-        return s4.reshape(b, hq, rows)
-
-    def spec(kc2, vc2, q2):
-        b, s, e = kc2.shape
-        hq = q2.shape[-1] // dh
-        g = hq // hkv
-        scale = 1.0 / (dh ** 0.5)
-
-        def body(env):
-            sc = scores(env, scale)                       # (B, Hq, rows)
-            m = sc.max(axis=-1)                           # (B, Hq)
-            w = jnp.exp(sc - m[..., None])
-            b_, rows = w.shape[0], w.shape[-1]
-            v4 = heads(env["V"], rows).astype(jnp.float32)
-            pv = jnp.einsum("bhgs,bshd->bhgd",
-                            w.reshape(b_, hkv, g, rows), v4)
-            return (m, pv.reshape(b_, hq * dh), w.sum(axis=-1))
-
-        return TraversalSpec(
-            name="decode_attn_gen_spec",
-            axes=(Axis("b", b, kind="batch"),
-                  Axis("s", s, kind="reduction"), Axis("e", e),
-                  Axis("f", hq * dh), Axis("z", hq * dh),
-                  Axis("h", hq)),
-            reads=(Access("K", ("b", "s", "e")),
-                   Access("V", ("b", "s", "e")),
-                   Access("q", ("b", "f"))),
-            # two writes, two access maps: the attention row (Hq·dh
-            # lanes) and the Hq-wide log-sum-exp row statistic — both
-            # finalized from ONE accumulated online-softmax state
-            writes=(Access("o", ("b", "z")), Access("lse", ("b", "h"))),
-            body=body, out_dtype=(jnp.float32, jnp.float32),
-            reduce=OnlineSoftmax(groups=hq, vwidth=dh, with_lse=True),
-            full_width=True,
-        )
-
-    return spec
-
 
 @functools.partial(jax.jit, static_argnames=("hkv", "dh", "config", "mode"))
 def _decode_run(q, kc, vc, hkv, dh, config, mode):
@@ -134,29 +84,6 @@ def decode_attn_gen(q, kc, vc, config=None, mode=None, with_lse=False):
 
 # ------------------------------------------------------------- rmsnorm
 
-def _rms_body(env):
-    xf = env["x"].astype(jnp.float32)
-    inv = 1.0 / jnp.sqrt((xf * xf).mean(axis=-1) + env["eps"])
-    return (xf * inv[..., None]) * env["w"].astype(jnp.float32), inv
-
-
-def rmsnorm_spec(x, w, eps=0.0) -> TraversalSpec:
-    t, dm = x.shape
-    return TraversalSpec(
-        name="rmsnorm_gen",
-        axes=(Axis("i", t), Axis("j", dm)),
-        reads=(Access("x", ("i", "j")), Access("w", ("j",))),
-        # the inverse-rms row statistic is a native rank-1 second
-        # output: its own (i,)-only access map lowers to a (d, bm)
-        # block next to the matrix write's (d, bm, cols)
-        writes=(Access("o", ("i", "j")), Access("r", ("i",))),
-        scalars=("eps",),
-        body=_rms_body,
-        out_dtype=(x.dtype, jnp.float32),
-        full_width=True,   # the per-row mean needs the whole row
-    )
-
-
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _rms_run(x, w, eps, config, mode):
     shape = x.shape
@@ -184,83 +111,8 @@ def rmsnorm_gen(x, w, eps=1e-6, config=None, mode=None,
 
 # --------------------------------------------------------------- adamw
 
-_ADAMW_COLS = 512   # §5.1.1 blocking of the flattened tensor (hand _COLS)
-
-
-def adamw_spec(p2, g2, m2, v2, lr=0.0, b1=0.0, b2=0.0, eps=0.0, wd=0.0,
-               bc1=1.0, bc2=1.0) -> TraversalSpec:
-    """One fused spec with three *native* outputs: (p', m', v') lower to
-    three Pallas output refs sharing the write access map — the hand
-    kernel's triple store as 4 load + 3 store streams per stride, no
-    re-reads, no stacked free axis, no unstack copies."""
-    rows, cols = p2.shape
-
-    def body(env):
-        pf = env["p"].astype(jnp.float32)
-        gf = env["g"].astype(jnp.float32)
-        m_new = env["b1"] * env["m"] + (1.0 - env["b1"]) * gf
-        v_new = env["b2"] * env["v"] + (1.0 - env["b2"]) * gf * gf
-        update = ((m_new / env["bc1"])
-                  / (jnp.sqrt(v_new / env["bc2"]) + env["eps"])
-                  + env["wd"] * pf)
-        return (pf - env["lr"] * update, m_new, v_new)
-
-    return TraversalSpec(
-        name="adamw_update_gen",
-        axes=(Axis("i", rows), Axis("j", cols)),
-        reads=(Access("p", ("i", "j")), Access("g", ("i", "j")),
-               Access("m", ("i", "j")), Access("v", ("i", "j"))),
-        writes=(Access("po", ("i", "j")), Access("mo", ("i", "j")),
-                Access("vo", ("i", "j"))),
-        scalars=("lr", "b1", "b2", "eps", "wd", "bc1", "bc2"),
-        body=body,
-        out_dtype=(jnp.float32, jnp.float32, jnp.float32),
-    )
-
-
+_ADAMW_COLS = 512   # §5.1.1 blocking of the flattened tensor (ops._COLS)
 _ADAMW_DEFAULT = StridingConfig(2, 2)
-
-
-def _adamw_blocking(n: int) -> tuple[int, int]:
-    cols = min(_ADAMW_COLS, max(128, n))
-    return -(-n // cols), cols
-
-
-@functools.partial(jax.jit, static_argnames=("config", "mode"))
-def _adamw_run(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2, config, mode):
-    shape = p.shape
-    n = p.size
-    if mode == "ref":
-        # Evaluate the elementwise body at the tensor's NATIVE shape.
-        # The [rows, 512] re-block below is free in the emitted kernel
-        # (the tiles ARE the traversal) but its reshape boundaries make
-        # XLA recompute the shared (m', v') staging inside each of the
-        # three output fusions — 14 array-wide multiplies instead of 9,
-        # the BENCH_PR4 1.133 gen_vs_hand outlier.  The spec's axes only
-        # describe the traversal; evaluate() never tiles, so a 2-D
-        # stand-in spec plus native-rank operands is exact.
-        spec = adamw_spec(p.reshape(-1, shape[-1]) if p.ndim > 1
-                          else p.reshape(1, -1), None, None, None)
-        po, mo, vo = evaluate(spec, (p, g, m.astype(jnp.float32),
-                                     v.astype(jnp.float32),
-                                     lr, b1, b2, eps, wd, bc1, bc2))
-        return po.astype(p.dtype), mo, vo
-    rows, cols = _adamw_blocking(max(n, 1))
-
-    def flat(a, dt):
-        a = a.reshape(-1).astype(dt)
-        return jnp.pad(a, (0, rows * cols - n)).reshape(rows, cols)
-
-    po, mo, vo = run_spec(adamw_spec,
-                          (flat(p, p.dtype), flat(g, g.dtype),
-                           flat(m, jnp.float32), flat(v, jnp.float32),
-                           lr, b1, b2, eps, wd, bc1, bc2), config, mode)
-
-    def unflat(a, dt):
-        return a.reshape(-1)[:n].reshape(shape).astype(dt)
-
-    return (unflat(po, p.dtype), unflat(mo, jnp.float32),
-            unflat(vo, jnp.float32))
 
 
 def adamw_update_gen(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
@@ -279,8 +131,8 @@ def adamw_update_gen(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
                    _ADAMW_DEFAULT,
                    Traffic(rows=rows, cols=cols, dtype=p.dtype,
                            read_arrays=4, write_arrays=3))
-    return _adamw_run(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2,
-                      config=cfg, mode=mode)
+    return _adamw(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2,
+                  config=cfg, mode=mode)
 
 
 # ---------------------------------------------------------- registry

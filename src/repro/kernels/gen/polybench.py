@@ -1,9 +1,15 @@
-"""Codegen ports of the PolyBench paper families (§5.1.1 blocking wave):
-bicg, the four gemver steps, conv3x3 and doitgen as ``TraversalSpec``s —
-no hand-written Pallas.  Each variant registers with its hand family's
-problem sizes and oracle so it runs on the identical conformance matrix.
+"""Codegen variants of the PolyBench paper families (§5.1.1 blocking
+wave): bicg, the four gemver steps, conv3x3 and doitgen.
 
-Archetypes exercised here (all new emitter paths):
+The spec builders live with their families (``kernels/bicg/specs.py``,
+``kernels/gemver/specs.py``, ``kernels/conv3x3/specs.py``,
+``kernels/doitgen/specs.py``) and are shared verbatim by the public
+``ops.py`` wrappers and the ``*_gen`` registry rows here — one
+definition, two registry rows (hand-named and ``_gen``), zero hand
+Pallas.  Each variant registers with its hand family's problem sizes
+and oracle so it runs on the identical conformance matrix.
+
+Archetypes exercised here (all emitter paths):
 
   * ``bicg_s`` / ``gemver_mxv1`` — *stride-axis* reduction: the streamed
     axis itself is reduced, D partial rows merge into one full-width
@@ -24,21 +30,31 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.codegen import (Access, Axis, TraversalSpec, make_kernel_op,
-                           run_spec, tap, traffic_of)
-from repro.codegen.combine import SumCombine
+from repro.codegen import make_kernel_op, run_spec, traffic_of
 from repro.core import Traffic
 from repro.core.striding import StridingConfig
 from repro.kernels.bicg import ref as _bicg_ref
+from repro.kernels.bicg.specs import bicg_q_spec, bicg_s_spec
 from repro.kernels.common import example_input as _rand
 from repro.kernels.conv3x3 import ref as _conv_ref
+from repro.kernels.conv3x3.specs import conv3x3_spec
 from repro.kernels.doitgen import ref as _doit_ref
+from repro.kernels.doitgen.specs import doitgen_spec
 from repro.kernels.gemver import ref as _gem_ref
+from repro.kernels.gemver.specs import (SumWithTotal, gemver_mxv1_spec,
+                                        gemver_mxv1_sum_spec,
+                                        gemver_mxv2_spec, gemver_outer_spec,
+                                        gemver_sum_spec)
 from repro.registry.base import KernelSpec, register
 
 __all__ = ["bicg_gen", "gemver_outer_gen", "gemver_sum_gen",
            "gemver_mxv1_gen", "gemver_mxv1_sum_gen", "gemver_mxv2_gen",
-           "conv3x3_gen", "doitgen_gen"]
+           "conv3x3_gen", "doitgen_gen",
+           # family specs re-exported for spec-level consumers
+           "bicg_q_spec", "bicg_s_spec", "gemver_outer_spec",
+           "gemver_sum_spec", "gemver_mxv1_spec", "gemver_mxv1_sum_spec",
+           "gemver_mxv2_spec", "SumWithTotal", "conv3x3_spec",
+           "doitgen_spec"]
 
 
 def _resolve(kernel: str, lead, config, mode, rows: int,
@@ -62,32 +78,6 @@ def _mode(mode):
 
 # ---------------------------------------------------------------- bicg
 
-def bicg_q_spec(a, p) -> TraversalSpec:
-    m, n = a.shape
-    return TraversalSpec(
-        name="bicg_q_gen",
-        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
-        reads=(Access("A", ("i", "j")), Access("p", ("j",))),
-        writes=(Access("q", ("i",)),),
-        body=lambda env: jnp.dot(env["A"], env["p"],
-                                 preferred_element_type=jnp.float32),
-    )
-
-
-def bicg_s_spec(a, r) -> TraversalSpec:
-    """s = rᵀA: the reduction runs over the *streamed* rows — every
-    stream's partial row of s merges across D streams and grid steps."""
-    m, n = a.shape
-    return TraversalSpec(
-        name="bicg_s_gen",
-        axes=(Axis("i", m, kind="reduction"), Axis("j", n)),
-        reads=(Access("A", ("i", "j")), Access("r", ("i",))),
-        writes=(Access("s", ("j",)),),
-        body=lambda env: jnp.dot(env["r"], env["A"],
-                                 preferred_element_type=jnp.float32),
-    )
-
-
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _bicg_run(a, r, p, config, mode):
     return (run_spec(bicg_q_spec, (a, p), config, mode),
@@ -104,98 +94,6 @@ def bicg_gen(a, r, p, config=None, mode=None):
 
 
 # -------------------------------------------------------------- gemver
-
-def gemver_outer_spec(a, u1, v1, u2, v2) -> TraversalSpec:
-    m, n = a.shape
-    return TraversalSpec(
-        name="gemver_outer_gen",
-        axes=(Axis("i", m), Axis("j", n)),
-        reads=(Access("A", ("i", "j")),
-               Access("u1", ("i",)), Access("v1", ("j",)),
-               Access("u2", ("i",)), Access("v2", ("j",))),
-        writes=(Access("o", ("i", "j")),),
-        body=lambda env: (env["A"]
-                          + env["u1"][..., None] * env["v1"][None, :]
-                          + env["u2"][..., None] * env["v2"][None, :]),
-    )
-
-
-def gemver_sum_spec(x, z) -> TraversalSpec:
-    """1-D x+z: classified ``blocked`` — the emitter tiles it into a
-    ``[rows, 128·P]`` grid (§5.1.1) before the D-stream split."""
-    n = x.shape[0]
-    return TraversalSpec(
-        name="gemver_sum_gen",
-        axes=(Axis("i", n),),
-        reads=(Access("x", ("i",)), Access("z", ("i",))),
-        writes=(Access("o", ("i",)),),
-        body=lambda env: env["x"] + env["z"],
-    )
-
-
-def gemver_mxv1_spec(a, y, beta=0.0) -> TraversalSpec:
-    """β·(Aᵀy): pure stride-axis reduction (the affine +x lives in the
-    composite wrapper — partials must stay linear to merge)."""
-    m, n = a.shape
-    return TraversalSpec(
-        name="gemver_mxv1_gen",
-        axes=(Axis("i", m, kind="reduction"), Axis("j", n)),
-        reads=(Access("A", ("i", "j")), Access("y", ("i",))),
-        writes=(Access("s", ("j",)),),
-        scalars=("beta",),
-        body=lambda env: env["beta"] * jnp.dot(
-            env["y"], env["A"], preferred_element_type=jnp.float32),
-    )
-
-
-class SumWithTotal(SumCombine):
-    """Sum reduction whose finalize ALSO emits the accumulated row's
-    total — a *finalizing* single-state combinator: the body keeps the
-    historical partial-row contract, and the fused gemver mxv1+sum
-    sweep writes (s = βAᵀy, Σⱼ sⱼ) as two native outputs with distinct
-    access maps (the vector row and an extent-1 free axis)."""
-
-    name = "sum_with_total"
-    finalizing = True
-
-    def finalize(self, state):
-        row = state[0]
-        return row, row.sum(axis=-1, keepdims=True)
-
-
-def gemver_mxv1_sum_spec(a, y, beta=0.0) -> TraversalSpec:
-    """β·(Aᵀy) AND its reduction Σⱼ in ONE sweep of A: the stride-axis
-    reduction accumulates the full-width row, ``SumWithTotal`` finalizes
-    both outputs from that single state — the second sweep the separate
-    mxv1 + sum steps would have paid is gone."""
-    m, n = a.shape
-    return TraversalSpec(
-        name="gemver_mxv1_sum_gen",
-        axes=(Axis("i", m, kind="reduction"), Axis("j", n),
-              Axis("t", 1)),
-        reads=(Access("A", ("i", "j")), Access("y", ("i",))),
-        writes=(Access("s", ("j",)), Access("ssum", ("t",))),
-        scalars=("beta",),
-        body=lambda env: env["beta"] * jnp.dot(
-            env["y"], env["A"], preferred_element_type=jnp.float32),
-        out_dtype=(jnp.float32, jnp.float32),
-        reduce=SumWithTotal(),
-        full_width=True,   # the total needs the whole accumulated row
-    )
-
-
-def gemver_mxv2_spec(a, x, alpha=0.0) -> TraversalSpec:
-    m, n = a.shape
-    return TraversalSpec(
-        name="gemver_mxv2_gen",
-        axes=(Axis("i", m), Axis("j", n, kind="reduction")),
-        reads=(Access("A", ("i", "j")), Access("x", ("j",))),
-        writes=(Access("w", ("i",)),),
-        scalars=("alpha",),
-        body=lambda env: env["alpha"] * jnp.dot(
-            env["A"], env["x"], preferred_element_type=jnp.float32),
-    )
-
 
 gemver_outer_gen = make_kernel_op("gemver_outer_gen", gemver_outer_spec,
                                   default=StridingConfig(4, 2))
@@ -241,32 +139,6 @@ def gemver_mxv1_sum_gen(a, y, x, z, beta, config=None, mode=None):
 
 # ------------------------------------------------------------- conv3x3
 
-_C3_HALO = ((1, 1), (1, 1))
-_C3_NAMES = tuple(f"w{r}{c}" for r in range(3) for c in range(3))
-
-
-def _conv_body(env):
-    x = env["x"].astype(jnp.float32)
-    acc = None
-    for idx, name in enumerate(_C3_NAMES):
-        r, c = divmod(idx, 3)
-        term = env[name] * tap(x, _C3_HALO, r - 1, c - 1)
-        acc = term if acc is None else acc + term
-    return acc
-
-
-def conv3x3_spec(x, *w9) -> TraversalSpec:
-    h, w = x.shape
-    return TraversalSpec(
-        name="conv3x3_gen",
-        axes=(Axis("i", h - 2), Axis("j", w - 2)),
-        reads=(Access("x", ("i", "j"), halo=_C3_HALO),),
-        writes=(Access("o", ("i", "j")),),
-        scalars=_C3_NAMES,
-        body=_conv_body,
-    )
-
-
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _conv_run(x, w, config, mode):
     w9 = [w[r, c] for r in range(3) for c in range(3)]
@@ -285,25 +157,6 @@ def conv3x3_gen(x, w, config=None, mode=None):
 
 
 # ------------------------------------------------------------- doitgen
-
-def doitgen_spec(a, c4) -> TraversalSpec:
-    """Batched 3-D nest: ``r`` is a batch grid dim, ``q`` streams, ``s``
-    contracts inside the body against resident C4 — the §5.1 analysis
-    picks the *written* array as critical (vectorize ``p``), exactly as
-    the paper and the hand kernel derive."""
-    r, q, s = a.shape
-    p = c4.shape[1]
-    return TraversalSpec(
-        name="doitgen_gen",
-        axes=(Axis("r", r, kind="batch"), Axis("q", q),
-              Axis("s", s, kind="reduction"), Axis("p", p)),
-        reads=(Access("A", ("r", "q", "s")), Access("C4", ("s", "p"))),
-        writes=(Access("o", ("r", "q", "p")),),
-        body=lambda env: jnp.einsum("bqs,sp->bqp", env["A"], env["C4"],
-                                    preferred_element_type=jnp.float32),
-        full_width=True,
-    )
-
 
 doitgen_gen = make_kernel_op("doitgen_gen", doitgen_spec,
                              default=StridingConfig(4, 1))

@@ -1,29 +1,26 @@
-"""Jit'd wrapper for jacobi2d."""
+"""Jit'd wrapper for jacobi2d.
+
+The hand-written Pallas body is retired (ROADMAP retirement plan): the
+wrapper lowers the family's ``TraversalSpec`` builder in ``specs.py``
+through ``repro.codegen`` (halo blocks and pad + crop handled by the
+emitter)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.codegen import run_spec
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.jacobi2d import jacobi2d as k
-from repro.kernels.jacobi2d import ref
+from repro.kernels.jacobi2d import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _jacobi2d(x, config: StridingConfig, mode: str):
-    if mode == "ref":
-        return ref.jacobi2d_ref(x)
-    h, w_in = x.shape
-    h_out = h - 2
-    d = config.stride_unroll
-    pad_rows = common.pad_to_multiple(h_out, d) - h_out
-    x_p = common.pad_axis(x, 0, h_out + pad_rows + 2) if pad_rows else x
-    out = k.jacobi2d(x_p, d, interpret=(mode == "interpret"))
-    return out[:h_out]
+    return run_spec(specs.jacobi_spec, (x,), config, mode)
 
 
 def jacobi2d(x: jax.Array, config: StridingConfig | None = None,

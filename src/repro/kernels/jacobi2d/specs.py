@@ -1,0 +1,43 @@
+"""``TraversalSpec`` builder for the jacobi2d family.
+
+This spec IS the jacobi2d kernel now: the hand-written Pallas body
+(``jacobi2d.py``) was retired once the generated variant had matched it
+for a full release cycle (ROADMAP retirement plan); ``ops.py`` and the
+``jacobi2d_gen`` registry variant both lower this builder through
+``repro.codegen``.
+
+One 5-point Jacobi sweep over the interior: the read carries a
+((1,1),(1,1)) halo and the body averages the centre plus the four
+``tap``-shifted neighbours in f32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec, tap
+
+__all__ = ["jacobi_spec", "JAC_HALO"]
+
+JAC_HALO = ((1, 1), (1, 1))
+
+
+def _jacobi_body(env):
+    x = env["x"].astype(jnp.float32)
+    c = tap(x, JAC_HALO, 0, 0)
+    l = tap(x, JAC_HALO, 0, -1)
+    r = tap(x, JAC_HALO, 0, +1)
+    u = tap(x, JAC_HALO, -1, 0)
+    b = tap(x, JAC_HALO, +1, 0)
+    return 0.2 * (c + l + r + u + b)
+
+
+def jacobi_spec(x) -> TraversalSpec:
+    h, w = x.shape
+    return TraversalSpec(
+        name="jacobi2d",
+        axes=(Axis("i", h - 2), Axis("j", w - 2)),
+        reads=(Access("x", ("i", "j"), halo=JAC_HALO),),
+        writes=(Access("y", ("i", "j")),),
+        body=_jacobi_body,
+        out_dtype=None,
+    )

@@ -1,14 +1,20 @@
-"""Jit'd wrapper for fused RMSNorm (any leading batch dims)."""
+"""Jit'd wrapper for fused RMSNorm (any leading batch dims).
+
+The hand-written Pallas body is retired (ROADMAP retirement plan): the
+wrapper lowers the family's ``TraversalSpec`` builder in ``specs.py``
+through ``repro.codegen``; the spec's native second output (the f32
+inverse-rms row statistic) is computed either way and simply dropped
+here — the ``rmsnorm_gen`` registry variant exposes it."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.codegen import run_spec
 from repro.core.striding import StridingConfig
 from repro.kernels import common
-from repro.kernels.rmsnorm import ref
-from repro.kernels.rmsnorm import rmsnorm as k
+from repro.kernels.rmsnorm import specs
 
 _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 
@@ -16,17 +22,10 @@ _DEFAULT = StridingConfig(stride_unroll=4, portion_unroll=1)
 @functools.partial(jax.jit, static_argnames=("eps", "config", "mode"))
 def _rmsnorm(x, w, eps: float, config: StridingConfig,
              mode: str) -> jax.Array:
-    if mode == "ref":
-        return ref.rmsnorm_ref(x, w, eps)
     shape = x.shape
-    dm = shape[-1]
-    x2 = x.reshape(-1, dm)
-    t = x2.shape[0]
-    d = config.stride_unroll
-    bm = common.choose_block(t // d, 8 * config.portion_unroll)
-    x2 = common.pad_axis(x2, 0, d * bm)
-    out = k.rmsnorm(x2, w, eps, d, bm, interpret=(mode == "interpret"))
-    return out[:t].reshape(shape)
+    out, _ = run_spec(specs.rmsnorm_spec, (x.reshape(-1, shape[-1]), w, eps),
+                      config, mode)
+    return out.reshape(shape)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,

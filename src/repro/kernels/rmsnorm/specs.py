@@ -1,0 +1,43 @@
+"""``TraversalSpec`` builder for the rmsnorm family.
+
+This spec IS the rmsnorm kernel now: the hand-written Pallas body
+(``rmsnorm.py``) was retired once the generated variant had matched it
+for a full release cycle (ROADMAP retirement plan); ``ops.py`` and the
+``rmsnorm_gen`` registry variant both lower this builder through
+``repro.codegen``.
+
+A ``full_width`` streaming nest: the body takes a per-row mean over the
+whole vector extent and emits the f32 inverse-rms row statistic as a
+native rank-1 SECOND output next to the rank-2 normalized matrix
+(per-output access maps).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codegen import Access, Axis, TraversalSpec
+
+__all__ = ["rmsnorm_spec"]
+
+
+def _rms_body(env):
+    xf = env["x"].astype(jnp.float32)
+    inv = 1.0 / jnp.sqrt((xf * xf).mean(axis=-1) + env["eps"])
+    return (xf * inv[..., None]) * env["w"].astype(jnp.float32), inv
+
+
+def rmsnorm_spec(x, w, eps=0.0) -> TraversalSpec:
+    t, dm = x.shape
+    return TraversalSpec(
+        name="rmsnorm",
+        axes=(Axis("i", t), Axis("j", dm)),
+        reads=(Access("x", ("i", "j")), Access("w", ("j",))),
+        # the inverse-rms row statistic is a native rank-1 second
+        # output: its own (i,)-only access map lowers to a (d, bm)
+        # block next to the matrix write's (d, bm, cols)
+        writes=(Access("o", ("i", "j")), Access("r", ("i",))),
+        scalars=("eps",),
+        body=_rms_body,
+        out_dtype=(x.dtype, jnp.float32),
+        full_width=True,   # the per-row mean needs the whole row
+    )

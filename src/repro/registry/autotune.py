@@ -59,6 +59,36 @@ def _kernel_mode(mode: Optional[str]) -> str:
 _BLOCK_CANDIDATES = (0, 4, 16)
 
 
+def _fallback_configs(spec: base.KernelSpec, sizes: Mapping[str, int],
+                      max_candidates: int,
+                      ) -> list[tuple[StridingConfig, float]]:
+    """The low-D fallback sweep, validated against the problem: each
+    candidate's stride_unroll is clamped to the largest valid divisor of
+    the row extent (``valid_stride_unrolls``) and the post-clamp list is
+    deduped — a D the kernel would silently clamp anyway must not be
+    measured twice under two labels."""
+    shape = (spec.cache_shape(sizes) if spec.cache_shape is not None
+             else tuple(sizes.values()))
+    rows = int(shape[0]) if shape else 1
+    valid = set(valid_stride_unrolls(rows))
+    out: list[tuple[StridingConfig, float]] = []
+    seen: set[tuple[int, int]] = set()
+    for cfg in _FALLBACK:
+        d = cfg.stride_unroll
+        if d not in valid:
+            d = max((v for v in valid if v < d), default=1)
+        key = (d, cfg.portion_unroll)
+        if key in seen:
+            continue
+        seen.add(key)
+        if d != cfg.stride_unroll:
+            cfg = cfg.replace(stride_unroll=d)
+        out.append((cfg, 0.0))
+        if len(out) >= max_candidates:
+            break
+    return out
+
+
 def candidate_configs(spec: base.KernelSpec, sizes: Mapping[str, int],
                       dtype, max_candidates: int = 8,
                       ) -> list[tuple[StridingConfig, float]]:
@@ -86,7 +116,7 @@ def candidate_configs(spec: base.KernelSpec, sizes: Mapping[str, int],
             return out
         except ValueError:
             pass
-    return [(c, 0.0) for c in _FALLBACK[:max_candidates]]
+    return _fallback_configs(spec, sizes, max_candidates)
 
 
 def _timing_knobs(iters: int, warmup: int) -> tuple[int, int]:

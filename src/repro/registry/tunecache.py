@@ -114,10 +114,17 @@ class TuneCache:
                    mode: Optional[str] = None) -> Optional[StridingConfig]:
         """Tuned StridingConfig for a problem, or None on a cache miss.
 
-        Falls back from the mode-specific entry to the mode-agnostic one
-        (a config tuned in ``pallas`` mode also serves ``interpret``).
+        Falls back from the mode-specific entry to sibling concrete-mode
+        entries (``pallas`` first, then ``interpret``): ``tune`` always
+        writes mode-suffixed keys, so the old mode-*less* fallback key
+        could never exist — a config measured in one mode now serves
+        lookups from the other instead of silently missing.
         """
-        for m in (mode, None):
+        tried = []
+        for m in (mode, "pallas", "interpret"):
+            if m is None or m in tried:
+                continue
+            tried.append(m)
             entry = self.lookup(cache_key(kernel, shape, dtype, mode=m))
             if entry is not None:
                 return StridingConfig(

@@ -3,11 +3,11 @@
 The per-PR perf-trajectory snapshots (``BENCH_*.json``) are diffed
 across commits, so the structured payload is a contract: ``meta``
 (backend / mode / quick / jax_version) plus ``tables`` of row dicts
-each carrying ``us_per_call``.  Dropping the retired families'
-``gen_vs_hand`` rows must not change that shape — the fig6 row schema
-itself (kernel / hand / d / p / block_rows / *_seconds / ratios) is
-checked against the writer directly so the contract holds without
-timing benchmark-scale kernels in tier-1.
+each carrying ``us_per_call``.  With every hand family retired, fig6's
+paired rows compare generated kernels against the jit'd XLA oracle —
+the row schema (kernel / ref / d / p / block_rows / *_seconds /
+ratios) is checked against the writer directly so the contract holds
+without timing benchmark-scale kernels in tier-1.
 """
 import json
 import os
@@ -18,9 +18,9 @@ import pytest
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-FIG6_GEN_VS_HAND_KEYS = {
-    "kernel", "hand", "d", "p", "block_rows", "n_outputs", "gen_seconds",
-    "hand_seconds", "gen_vs_hand", "paired_median_ratio", "seconds",
+FIG6_GEN_VS_REF_KEYS = {
+    "kernel", "ref", "d", "p", "block_rows", "n_outputs", "gen_seconds",
+    "ref_seconds", "gen_vs_ref", "paired_median_ratio", "seconds",
 }
 
 
@@ -61,54 +61,47 @@ def test_json_payload_writer_is_total():
     json.dumps(payload)   # json-clean
 
 
-def test_fig6_gen_vs_hand_row_schema_unchanged():
-    """The gen_vs_hand row writer still emits the full key set for the
-    surviving (non-retired) pairs — asserted against the row-builder's
-    code path with a stubbed timer, so no benchmark-scale kernels run."""
+def test_fig6_gen_vs_ref_row_schema():
+    """The gen_vs_ref row writer emits the full key set — asserted
+    against the row-builder's code path with a stubbed timer, so no
+    benchmark-scale kernels run."""
     from benchmarks import fig6_kernels as f6
 
-    pairs = f6.gen_hand_pairs()
-    assert pairs, "live gen-vs-hand pairs must remain after retirement"
+    specs = f6.gen_specs()
+    assert specs, "generated variants must populate the paired table"
 
     real_paired, real_tuned = f6._paired_best, f6._tuned_config
-    real_nout = f6._n_outputs
+    real_nout, real_specs_fn = f6._n_outputs, f6.gen_specs
     from repro.core.striding import StridingConfig
     try:
         f6._paired_best = lambda fa, fb, iters, **kw: (1e-4, 1e-4, 1.0)
         f6._tuned_config = lambda spec, sizes: StridingConfig(2, 1)
         f6._n_outputs = lambda spec, inputs, cfg: 3
-        # restrict to one cheap pair: monkeypatch the pair list
-        f6_pairs = pairs[:1]
-        real_pairs_fn = f6.gen_hand_pairs
-        f6.gen_hand_pairs = lambda: f6_pairs
-        try:
-            rows = f6.gen_vs_hand_rows(quick=True)
-        finally:
-            f6.gen_hand_pairs = real_pairs_fn
+        # restrict to one cheap spec: monkeypatch the list
+        f6.gen_specs = lambda: specs[:1]
+        rows = f6.gen_vs_ref_rows(quick=True)
     finally:
         f6._paired_best, f6._tuned_config = real_paired, real_tuned
-        f6._n_outputs = real_nout
+        f6._n_outputs, f6.gen_specs = real_nout, real_specs_fn
     assert len(rows) == 1
-    assert set(rows[0]) == FIG6_GEN_VS_HAND_KEYS
+    assert set(rows[0]) == FIG6_GEN_VS_REF_KEYS
     assert rows[0]["n_outputs"] == 3
-    retired = f6.RETIRED_HAND_KERNELS
-    assert all(r["hand"] not in retired for r in rows)
+    assert rows[0]["ref"] + "_gen" == rows[0]["kernel"]
 
 
 def test_fig6_covers_side_output_kernels():
     """The per-output-access-map kernels ride the registry-driven fig6
     lists automatically: gemver_mxv1_sum_gen gets a model row
-    (paper-tagged + Traffic) and the side-output gen variants stay in
-    the gen_vs_hand pair list against their hand counterparts."""
+    (paper-tagged + Traffic) and the side-output and emitter-feature
+    variants all land in the generated-only paired table."""
     from benchmarks import fig6_kernels as f6
     model_kernels = {s.name for s in f6.bench_specs()}
     assert "gemver_mxv1_sum_gen" in model_kernels
-    pair_names = {(g.name, h.name) for g, h in f6.gen_hand_pairs()}
-    assert ("rmsnorm_gen", "rmsnorm") in pair_names
-    assert ("decode_attn_gen", "decode_attn") in pair_names
-    # no hand counterpart exists for the fused sweep — and that must
-    # not crash the pair derivation
-    assert all(g != "gemver_mxv1_sum_gen" for g, _ in pair_names)
+    # the per-write-combinator and transposed-store consumers too
+    assert {"rowstat_gen", "transpose_gen"} <= model_kernels
+    gen_names = {s.name for s in f6.gen_specs()}
+    assert {"rmsnorm_gen", "decode_attn_gen", "gemver_mxv1_sum_gen",
+            "rowstat_gen", "transpose_gen"} <= gen_names
 
 
 def test_descriptor_sweep_fit_row_schema():

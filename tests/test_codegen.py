@@ -460,16 +460,32 @@ def test_unsupported_nests_fail_loudly():
     x = jnp.arange(64.0)
     np.testing.assert_allclose(
         emit_spec(spec_1d, (x,), StridingConfig(2, 1), interpret=True), x)
+    # a transposed WRITE is supported now (the classify reads-only
+    # retry + transposed-store lowering) — the body returns the block
+    # in the write's index order
     spec_t = TraversalSpec(
         name="tt",
         axes=(Axis("i", 8), Axis("j", 8)),
-        reads=(Access("x", ("j", "i")),),     # transposed operand layout
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("j", "i")),),
+        body=lambda env: jnp.swapaxes(env["x"], -2, -1),
+    )
+    xt = jax.random.normal(jax.random.PRNGKey(7), (8, 8), jnp.float32)
+    np.testing.assert_array_equal(
+        emit_spec(spec_t, (xt,), StridingConfig(2, 1), interpret=True),
+        xt.T)
+    # ...but CONFLICTING read layouts still have no critical access:
+    # neither the full access set nor the reads alone share a last axis
+    spec_c = TraversalSpec(
+        name="tc",
+        axes=(Axis("i", 8), Axis("j", 8)),
+        reads=(Access("x", ("i", "j")), Access("xt", ("j", "i"))),
         writes=(Access("y", ("i", "j")),),
-        body=lambda env: env["x"],
+        body=lambda env: env["x"] + jnp.swapaxes(env["xt"], -2, -1),
     )
     with pytest.raises((NotImplementedError, ValueError)):
-        emit_spec(spec_t, (jnp.ones((8, 8)),), StridingConfig(2, 1),
-                  interpret=True)
+        emit_spec(spec_c, (jnp.ones((8, 8)), jnp.ones((8, 8))),
+                  StridingConfig(2, 1), interpret=True)
 
 
 # ------------------------------------- end-to-end new kernel, no Pallas
@@ -647,6 +663,31 @@ def test_stream_reduction_finalizes_per_write(d):
                                    rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(got[1])[0],
                                np.asarray(got[0]).sum(), rtol=1e-5)
+
+
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_batched_rank1_row_stream_read(d):
+    """A [batch, stride] read lowers to D rank-1 row streams, one batch
+    element per grid step — the shape of decode attention's per-batch
+    kv_len validity mask riding the same D-split as the K/V streams."""
+    b, s, n = 2, 16, 128
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, s, n))
+    w = jax.random.normal(jax.random.PRNGKey(5), (b, s))
+    spec = TraversalSpec(
+        name="t_batched_wsum",
+        axes=(Axis("b", b, kind="batch"), Axis("s", s, kind="reduction"),
+              Axis("n", n)),
+        reads=(Access("x", ("b", "s", "n")), Access("w", ("b", "s"))),
+        writes=(Access("o", ("b", "n")),),
+        body=lambda env: (env["w"][..., None]
+                          * env["x"].astype(jnp.float32)).sum(axis=-2),
+        out_dtype=jnp.float32, reduce="sum", full_width=True,
+    )
+    got = emit_spec(spec, (x, w), StridingConfig(d, 1), interpret=True)
+    want = evaluate(spec, (x, w))
+    assert got.shape == (b, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_multi_output_stream_reduction_needs_finalizing_combinator():

@@ -5,8 +5,11 @@ optional halos, rank-1 row streams, resident reads and scalars;
 reduce / no-reduce including paired-state and finalizing combinators;
 multi-output with SHARED and with DISTINCT per-write access maps — a
 rank-1 row statistic or a log-sum-exp next to a matrix write;
-writes-only; batch axes incl. 4-D batched nests; combinators under
-``block_rows`` blocking; 1-D blocked nests) × random legal schedules
+per-write combinators — a row-max accumulator next to a row-sum;
+transposed stores — the write map permuting the stride axis after the
+vector axis; writes-only; batch axes incl. 4-D batched nests;
+combinators under ``block_rows`` blocking; 1-D blocked nests) × random
+legal schedules
 (StridingConfig points — D × P × block_rows × arrangement × lookahead —
 plus raw unroll / interchange / stride_split / block compositions),
 checked two ways:
@@ -111,7 +114,7 @@ def draw_case(draw: Draw) -> Case:
     kind = draw.sample(["map", "multiout", "stencil", "vecred",
                         "stridered", "osm", "batch", "fill", "1d",
                         "multiout_maps", "multiout_vecred", "batch4d",
-                        "osm_lse"])
+                        "osm_lse", "perwrite_vecred", "transpose"])
     any_d = (1, 2, 4)
 
     if kind == "map":
@@ -257,6 +260,49 @@ def draw_case(draw: Draw) -> Case:
         )
         return Case(spec, (x, v), tuple(_divisors(rows)),
                     rtol=1e-4, atol=1e-4)
+
+    if kind == "perwrite_vecred":
+        # PR-6 per-write combinators: a row-max accumulator next to a
+        # row-sum in ONE vecred sweep (full-width — the emitter refuses
+        # zero-padded lanes under a non-sum combinator, so whole rows)
+        x = _arr((rows, cols), 0)
+        spec = TraversalSpec(
+            name="prop_perwrite_vecred",
+            axes=(Axis("i", rows), Axis("j", cols, kind="reduction")),
+            reads=(Access("x", ("i", "j")),),
+            writes=(Access("mx", ("i",)), Access("sm", ("i",))),
+            body=lambda env: (env["x"].astype(jnp.float32).max(axis=-1),
+                              env["x"].astype(jnp.float32).sum(axis=-1)),
+            out_dtype=(jnp.float32, jnp.float32),
+            reduce=("max", "sum"), full_width=True,
+        )
+        return Case(spec, (x,), any_d)
+
+    if kind == "transpose":
+        # PR-6 transposed stores: a write whose index map permutes the
+        # stride axis after the vector axis, optionally next to a plain
+        # (i, j) sibling write — the body returns each block in its
+        # write's index order
+        x = _arr((rows, cols), 0)
+        if draw.boolean():
+            spec = TraversalSpec(
+                name="prop_transpose_pair",
+                axes=(Axis("i", rows), Axis("j", cols)),
+                reads=(Access("x", ("i", "j")),),
+                writes=(Access("z", ("i", "j")), Access("xt", ("j", "i"))),
+                body=lambda env: (env["x"] * 2.0,
+                                  jnp.swapaxes(env["x"], -2, -1)),
+                out_dtype=(jnp.float32, jnp.float32),
+            )
+        else:
+            spec = TraversalSpec(
+                name="prop_transpose",
+                axes=(Axis("i", rows), Axis("j", cols)),
+                reads=(Access("x", ("i", "j")),),
+                writes=(Access("xt", ("j", "i")),),
+                body=lambda env: jnp.swapaxes(env["x"], -2, -1),
+            )
+        return Case(spec, (x,), any_d)
 
     if kind == "stencil":
         rlo, rhi = draw.sample([(0, 0), (1, 1), (1, 0)])
@@ -485,11 +531,12 @@ def check_schedule_algebra(draw: Draw):
 
 # ------------------------------------------------- seeded sweep (always)
 
-@pytest.mark.parametrize("seed", range(36))
+@pytest.mark.parametrize("seed", range(54))
 def test_differential_seeded(seed):
-    # 36 seeds over 13 archetypes: every archetype (incl. the PR-5
-    # per-output-map, 4-D batched, and combinator-under-blocking cases)
-    # is drawn at least once by this range
+    # 54 seeds over 15 archetypes: every archetype (incl. the PR-5
+    # per-output-map / 4-D batched / combinator-under-blocking cases and
+    # the PR-6 per-write-combinator and transposed-store cases) is drawn
+    # at least once by this range
     check_differential(Draw(rng=random.Random(seed)))
 
 

@@ -91,6 +91,41 @@ def test_candidate_configs_come_from_planner():
         assert spec.default_sizes["m"] % cfg.stride_unroll == 0
 
 
+def test_fallback_candidates_respect_indivisible_rows():
+    """A spec with no Traffic signature gets the fallback sweep — but
+    validated: every proposed D divides the row extent, and the
+    post-clamp list is deduped so the same effective (D, P) point is
+    never measured twice under two labels."""
+    import dataclasses
+    spec = registry.get("mxv")
+    # rows=7 is prime: valid_stride_unrolls -> {1, 7}; the raw fallback
+    # D in {2, 4} would all silently clamp to 1 inside the kernels
+    bald = dataclasses.replace(spec, traffic=None,
+                               cache_shape=lambda s: (7, s["n"]))
+    cands = autotune.candidate_configs(bald, dict(spec.default_sizes),
+                                       jnp.float32, max_candidates=8)
+    assert cands
+    seen = set()
+    for cfg, _bw in cands:
+        assert 7 % cfg.stride_unroll == 0
+        key = (cfg.stride_unroll, cfg.portion_unroll)
+        assert key not in seen        # deduped post-clamp
+        seen.add(key)
+    # D in {2, 4} collapse onto D=1: only (1,1) and (1,2) remain
+    assert seen == {(1, 1), (1, 2)}
+
+
+def test_fallback_candidates_keep_divisible_sweep():
+    """Divisible rows keep the full low-D fallback corner."""
+    import dataclasses
+    spec = registry.get("mxv")
+    bald = dataclasses.replace(spec, traffic=None)   # rows = m = 48
+    cands = autotune.candidate_configs(bald, dict(spec.default_sizes),
+                                       jnp.float32, max_candidates=8)
+    assert [(c.stride_unroll, c.portion_unroll) for c, _ in cands] == \
+        [(1, 1), (2, 1), (2, 2), (4, 1), (4, 2)]
+
+
 def test_tune_all_sweeps_named_kernels(tmp_path):
     cache = _tiny_cache(tmp_path)
     res = autotune.tune_all(["stream_read", "rmsnorm"], mode="ref",
@@ -106,17 +141,22 @@ def test_tune_all_sweeps_named_kernels(tmp_path):
 def test_ops_resolve_via_tune_cache(tmp_path, monkeypatch):
     """A tuned entry changes the config an op resolves when config=None.
 
-    stream_read's output shape is [D], so the tuned D is observable."""
+    stream_read's output shape is [D], so the tuned D is observable.
+    The entry is stored under a *concrete* mode key (as ``tune`` writes
+    them) and resolved from a different mode via the sibling fallback."""
+    from repro.kernels import common
     from repro.kernels.common import example_input
 
     path = str(tmp_path / "tune.json")
     monkeypatch.setenv("REPRO_TUNE_CACHE", path)
     tunecache.reset_default_cache()
+    common.reset_plan_memo()
     try:
         x = example_input((32, 256))
         baseline = K.stream_read(x, mode="ref")
         tuned_d = 2 if baseline.shape[0] != 2 else 8
-        key = tunecache.cache_key("stream_read", x.shape, x.dtype)
+        key = tunecache.cache_key("stream_read", x.shape, x.dtype,
+                                  mode="pallas")
         tunecache.default_cache().store(key, {"d": tuned_d, "p": 1})
         out = K.stream_read(x, mode="ref")
         assert out.shape == (tuned_d,)
@@ -124,21 +164,26 @@ def test_ops_resolve_via_tune_cache(tmp_path, monkeypatch):
                                    np.asarray(baseline).sum(), rtol=1e-4)
     finally:
         tunecache.reset_default_cache()
+        common.reset_plan_memo()
 
 
 def test_explicit_config_beats_tune_cache(tmp_path, monkeypatch):
+    from repro.kernels import common
     from repro.kernels.common import example_input
 
     monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
     tunecache.reset_default_cache()
+    common.reset_plan_memo()
     try:
         x = example_input((32, 256))
-        key = tunecache.cache_key("stream_read", x.shape, x.dtype)
+        key = tunecache.cache_key("stream_read", x.shape, x.dtype,
+                                  mode="pallas")
         tunecache.default_cache().store(key, {"d": 8, "p": 1})
         out = K.stream_read(x, config=StridingConfig(4, 1), mode="ref")
         assert out.shape == (4,)
     finally:
         tunecache.reset_default_cache()
+        common.reset_plan_memo()
 
 
 def test_cache_key_distinguishes_problem_and_mode():
@@ -147,3 +192,64 @@ def test_cache_key_distinguishes_problem_and_mode():
     k3 = tunecache.cache_key("mxv", (64, 64), jnp.bfloat16)
     k4 = tunecache.cache_key("mxv", (64, 64), jnp.float32, mode="interpret")
     assert len({k1, k2, k3, k4}) == 4
+
+
+def test_config_for_falls_back_to_sibling_modes(tmp_path):
+    """A config measured in one concrete mode serves lookups from the
+    other — both directions — and a mode-exact entry wins over the
+    fallback."""
+    cache = _tiny_cache(tmp_path)
+    shape, dt = (64, 64), jnp.float32
+
+    # pallas-tuned entry serves an interpret-mode lookup
+    cache.store(tunecache.cache_key("mxv", shape, dt, mode="pallas"),
+                {"d": 8, "p": 2})
+    got = cache.config_for("mxv", shape, dt, mode="interpret")
+    assert (got.stride_unroll, got.portion_unroll) == (8, 2)
+    # ... and a ref-mode lookup
+    got = cache.config_for("mxv", shape, dt, mode="ref")
+    assert (got.stride_unroll, got.portion_unroll) == (8, 2)
+
+    # interpret-tuned entry serves a pallas-mode lookup
+    cache.store(tunecache.cache_key("mxv_t", shape, dt, mode="interpret"),
+                {"d": 4, "p": 1})
+    got = cache.config_for("mxv_t", shape, dt, mode="pallas")
+    assert (got.stride_unroll, got.portion_unroll) == (4, 1)
+
+    # mode-exact entry beats the sibling fallback
+    cache.store(tunecache.cache_key("mxv", shape, dt, mode="interpret"),
+                {"d": 2, "p": 1})
+    got = cache.config_for("mxv", shape, dt, mode="interpret")
+    assert (got.stride_unroll, got.portion_unroll) == (2, 1)
+    # the pallas entry still wins its own mode
+    got = cache.config_for("mxv", shape, dt, mode="pallas")
+    assert (got.stride_unroll, got.portion_unroll) == (8, 2)
+
+    assert cache.config_for("absent", shape, dt, mode="pallas") is None
+
+
+def test_plan_memo_keyed_by_backend_and_resettable(monkeypatch):
+    """Planner memo entries carry the backend in their key and
+    ``reset_plan_memo`` empties the table (tests repoint the DMA-model
+    env between runs)."""
+    import jax
+
+    from repro.core import Traffic
+    from repro.kernels import common
+
+    common.reset_plan_memo()
+    tunecache.reset_default_cache()
+    try:
+        traffic = Traffic(rows=4096, cols=4096, dtype=jnp.float32)
+        cfg = common.resolve_config("memo_probe", (4096, 4096),
+                                    jnp.float32, None, 4096,
+                                    StridingConfig(1, 1), traffic=traffic)
+        assert cfg is not None
+        keys = [k for k in common._plan_memo if k[0] == "memo_probe"]
+        assert len(keys) == 1
+        assert keys[0][-1] == jax.default_backend()
+        common.reset_plan_memo()
+        assert not common._plan_memo
+    finally:
+        common.reset_plan_memo()
+        tunecache.reset_default_cache()

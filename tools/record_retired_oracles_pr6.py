@@ -1,0 +1,55 @@
+"""Record interpret-mode oracles for the nine remaining hand families.
+
+Run ONCE against the tree that still contains the hand Pallas bodies
+(immediately before their deletion).  Every hand registry row of the
+retiring families is executed at all 6 (D, P) conformance-matrix points
+in ``interpret`` mode and the raw output leaves are saved to
+
+    tests/data/retired_hand_oracles_pr6.npz
+
+keyed ``{point}__k{i}`` (one entry per output leaf, so multi-output
+kernels — bicg, gemver, adamw_update — round-trip losslessly).
+
+Usage:  PYTHONPATH=src python tools/record_retired_oracles_pr6.py
+"""
+import os
+import sys
+
+import jax.numpy as jnp
+import jax
+import numpy as np
+
+from repro import registry
+
+KERNELS = (
+    "bicg", "gemver_outer", "gemver_sum", "gemver_mxv1", "gemver_mxv2",
+    "gemver", "conv3x3", "doitgen", "jacobi2d", "rmsnorm",
+    "adamw_update", "decode_attn",
+)
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "tests", "data", "retired_hand_oracles_pr6.npz")
+
+
+def main() -> int:
+    arrays: dict[str, np.ndarray] = {}
+    n_pts = 0
+    for point, kernel, sizes, config in registry.conformance_points():
+        if kernel not in KERNELS:
+            continue
+        spec = registry.get(kernel)
+        inputs = spec.make_inputs(sizes, jnp.float32)
+        got = spec.run(inputs, config, "interpret")
+        leaves = jax.tree.leaves(got)
+        for i, leaf in enumerate(leaves):
+            arrays[f"{point}__k{i}"] = np.asarray(leaf)
+        n_pts += 1
+        print(f"{point}: {len(leaves)} leaf(s)", flush=True)
+    assert n_pts == 6 * len(KERNELS), (n_pts, 6 * len(KERNELS))
+    np.savez_compressed(OUT, **arrays)
+    print(f"wrote {len(arrays)} arrays over {n_pts} points -> {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
