@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from benchmarks import common
 from benchmarks.common import emit, run_cbench, time_jax
 from repro import registry
-from repro.core import rank_configs
+from repro.core import rank_configs, traffic_bytes
+from repro.roofline.hw import TPU_V5E_HW
 from repro.kernels.bicg import ref as bicg_ref
 from repro.kernels.conv3x3 import ref as conv_ref
 from repro.kernels.doitgen import ref as doit_ref
@@ -150,6 +151,38 @@ def gen_specs() -> list:
     return [s for s in registry.all_specs() if s.name.endswith("_gen")]
 
 
+def _bw_pair(spec, sizes, cfg, seconds):
+    """Predicted-vs-measured effective bandwidth (GiB/s) for one timed
+    kernel: the prediction is the planner's DMA-model bound at the timed
+    (D, P, block_rows) point, capped at the roofline HBM peak; the
+    measurement divides the spec's Traffic bytes by the measured
+    wall-clock.  This pair per row is the training datum the
+    model-guided-planning ROADMAP arc accumulates (spec features →
+    predicted vs measured).  Returns (None, None) when the spec has no
+    Traffic signature or the planner rejects every point."""
+    if spec.traffic is None:
+        return None, None
+    try:
+        traffic = spec.traffic(sizes, jnp.float32)
+        nbytes = traffic_bytes(traffic)
+    except (ValueError, TypeError, KeyError):
+        return None, None
+    measured = (nbytes / seconds / 2**30
+                if seconds and seconds > 0 else None)
+    predicted = None
+    try:
+        blocks = (cfg.block_rows,) if cfg is not None else (0,)
+        ranked = rank_configs(traffic, block_rows_candidates=blocks)
+        match = [bw for c, bw, _ in ranked if cfg is not None
+                 and (c.stride_unroll, c.portion_unroll)
+                 == (cfg.stride_unroll, cfg.portion_unroll)]
+        bw = match[0] if match else ranked[0][1]
+        predicted = min(bw, TPU_V5E_HW.hbm_bw) / 2**30
+    except ValueError:
+        pass
+    return predicted, measured
+
+
 def _n_outputs(spec, inputs, cfg) -> int:
     """Native output count of the gen variant (side outputs included) —
     doubles as an extra warmup run before the paired timing."""
@@ -179,6 +212,7 @@ def gen_vs_ref_rows(quick: bool = False) -> list[dict]:
         gen_s, ref_s, med_ratio = _paired_best(
             lambda: spec.run(inputs, cfg, None),
             lambda: ref_fn(*inputs), iters)
+        predicted_gibs, measured_gibs = _bw_pair(spec, sizes, cfg, gen_s)
         rows.append({
             "kernel": spec.name,
             "ref": spec.name[:-len("_gen")],
@@ -190,6 +224,10 @@ def gen_vs_ref_rows(quick: bool = False) -> list[dict]:
             "ref_seconds": round(ref_s, 6),
             "gen_vs_ref": round(gen_s / max(ref_s, 1e-12), 3),
             "paired_median_ratio": round(med_ratio, 3),
+            "predicted_gibs": (round(predicted_gibs, 3)
+                               if predicted_gibs is not None else None),
+            "measured_gibs": (round(measured_gibs, 3)
+                              if measured_gibs is not None else None),
             "seconds": gen_s,
         })
     return rows

@@ -22,12 +22,14 @@ def _json_payload(tables: dict[str, list[dict]], quick: bool) -> dict:
     machine context (backend, kernel mode) and microseconds per call."""
     import jax
 
+    from repro import obs
     from repro.kernels.common import kernel_mode
     meta = {
         "backend": jax.default_backend(),
         "mode": kernel_mode(),
         "quick": quick,
         "jax_version": jax.__version__,
+        "obs_enabled": obs.enabled(),
     }
     out = {"meta": meta, "tables": {}}
     for name, rows in tables.items():
@@ -62,13 +64,19 @@ def main(argv=None) -> None:
         "descriptor_sweep": descriptor_sweep.run,
         "roofline": roofline_table.run,
     }
+    from repro import obs
     only = set(args.only.split(",")) if args.only else None
     results: dict[str, list[dict]] = {}
     for name, fn in tables.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        results[name] = fn(quick=args.quick) or []
+        # with $REPRO_OBS set, each table is one timed span (row count
+        # attached) — the coarse layer of the telemetry trace
+        with obs.span("bench.table", table=name) as sp:
+            rows = fn(quick=args.quick) or []
+            sp.set(rows=len(rows))
+        results[name] = rows
     if args.json:
         with open(args.json, "w") as f:
             json.dump(_json_payload(results, args.quick), f, indent=1,

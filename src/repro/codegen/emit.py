@@ -63,6 +63,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.codegen import loopir, transforms
 from repro.codegen.combine import resolve_combine
 from repro.core.striding import StridingConfig
@@ -1013,6 +1014,7 @@ def make_kernel_op(name: str,
         mode = mode or common.kernel_mode()
         key = _shape_key(inputs)
         if key not in facts:
+            obs.counter("codegen.spec_memo.miss", kernel=name)
             spec = build_spec(*inputs)
             info = loopir.classify(spec)
             # blocked 1-D nests derive their tile grid from the config —
@@ -1021,6 +1023,8 @@ def make_kernel_op(name: str,
                     else spec.axis(info.stride_axis).extent)
             facts[key] = (rows, loopir.traffic_of(spec, inputs[0].dtype,
                                                   info=info))
+        else:
+            obs.counter("codegen.spec_memo.hit", kernel=name)
         rows, traffic = facts[key]
         lead = inputs[0]
         cfg = common.resolve_config(

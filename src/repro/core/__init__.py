@@ -10,7 +10,8 @@ Public API:
 from repro.core.dma_model import COFFEE_LAKE, TPU_V5E, CpuPrefetchModel, TpuDmaModel
 from repro.core.pipeline import (coalesced_spec, segment_blocks,
                                  stream_operands, stream_specs)
-from repro.core.planner import Plan, Traffic, plan, rank_configs
+from repro.core.planner import (Plan, Traffic, plan, rank_configs,
+                                traffic_bytes)
 from repro.core.striding import (SINGLE_STRIDED, StridingConfig, divisors,
                                  factorizations, partition_rows,
                                  stream_offsets, stream_spacing_bytes,
@@ -22,7 +23,7 @@ __all__ = [
     "StridingConfig", "SINGLE_STRIDED", "divisors", "factorizations",
     "stream_offsets", "stream_spacing_bytes", "partition_rows",
     "valid_stride_unrolls",
-    "Traffic", "Plan", "plan", "rank_configs",
+    "Traffic", "Plan", "plan", "rank_configs", "traffic_bytes",
     "ArrayAccess", "LoopNest", "TransformPlan", "plan_transform",
     "stream_specs", "stream_operands", "coalesced_spec", "segment_blocks",
     "TpuDmaModel", "CpuPrefetchModel", "TPU_V5E", "COFFEE_LAKE",

@@ -21,7 +21,7 @@ from repro.core import layout
 from repro.core.dma_model import TpuDmaModel, default_tpu_model
 from repro.core.striding import StridingConfig, valid_stride_unrolls
 
-__all__ = ["Traffic", "Plan", "plan", "rank_configs"]
+__all__ = ["Traffic", "Plan", "plan", "rank_configs", "traffic_bytes"]
 
 # Default per-core VMEM working budget (bytes). v5e VMEM ≈ 16 MiB/core; we
 # leave half for compute operands/accumulators.
@@ -52,6 +52,15 @@ class Plan:
     predicted_bw: float        # bytes/s from the DMA model
     vmem_bytes: int
     ranked: tuple = ()         # [(config, bw), ...] best-first (for sweeps)
+
+
+def traffic_bytes(traffic: Traffic) -> int:
+    """Total bytes one traversal moves (the denominator of effective
+    bandwidth): every read/write stream touches rows × cols elements
+    once, load/store streams twice, plus the resident operands.  Pairs a
+    measured wall-clock with the paper's GiB/s unit (§4)."""
+    body = traffic.rows * traffic.cols * jnp.dtype(traffic.dtype).itemsize
+    return body * traffic.arrays_per_stride + traffic.resident_bytes
 
 
 def _block_bytes(traffic: Traffic, portion: int, block_rows: int = 0) -> int:

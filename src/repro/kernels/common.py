@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.striding import (StridingConfig, choose_block,
                                  pad_to_multiple)
 
@@ -112,15 +113,24 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
     result is clamped so stride_unroll divides ``rows``; pass
     ``rows=None`` when the kernel's pad+crop makes any D valid (§5.1.1
     loop-blocked 1-D nests).
+
+    With telemetry on, every call emits one ``kernel.resolve`` event
+    recording which source won and the resolved config, plus
+    ``kernel.plan_memo.hit``/``.miss`` counters for the planner memo.
     """
+    source = "explicit"
     if config is None:
+        source = "default"
         from repro.registry import tunecache
         config = tunecache.cached_config(kernel, shape, dtype, mode=mode)
-        if config is None and traffic is not None:
+        if config is not None:
+            source = "tuned"
+        elif traffic is not None:
             key = (kernel, tuple(shape), str(jnp.dtype(dtype)),
                    jax.default_backend())
             if key in _plan_memo:
                 config = _plan_memo[key]
+                obs.counter("kernel.plan_memo.hit", kernel=kernel)
             else:
                 from repro.core.planner import plan
                 try:
@@ -128,4 +138,13 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
                 except ValueError:
                     config = None
                 _plan_memo[key] = config
-    return effective_config(config, rows, default)
+                obs.counter("kernel.plan_memo.miss", kernel=kernel)
+            if config is not None:
+                source = "planned"
+    cfg = effective_config(config, rows, default)
+    if obs.enabled():
+        obs.event("kernel.resolve", kernel=kernel, source=source,
+                  d=cfg.stride_unroll, p=cfg.portion_unroll,
+                  block_rows=cfg.block_rows, arrangement=cfg.arrangement,
+                  mode=mode)
+    return cfg

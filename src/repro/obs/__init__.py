@@ -1,0 +1,40 @@
+"""repro.obs — lightweight structured telemetry for the repro stack.
+
+Counters, point events, and timed spans with key/value attributes,
+routed to an installed collector (in-memory for tests, JSONL file for
+runs); a no-op when disabled.  Select a sink with the ``REPRO_OBS``
+env var (``memory`` / ``jsonl:PATH`` / a bare path; unset = off) or
+install one programmatically.
+
+Instrumented layers and their event names (see README § Observability):
+
+  kernel.resolve           one event per op dispatch: winning config
+                           source (explicit/tuned/planned/default) and
+                           the resolved (D, P, block_rows, arrangement)
+  kernel.plan_memo.*       planner-memo hit/miss counters
+  codegen.spec_memo.*      make_kernel_op classify/traffic memo counters
+  tune.trial               one event per autotune candidate: config,
+                           median seconds, planner predicted_bw, and
+                           measured GiB/s from the spec's Traffic bytes
+  tune.result              the sweep's winner (or the rehydrated hit)
+  tune.cache.*             autotune-level cache hit/miss counters
+  tunecache.*              entry-level hit/miss/sibling_fallback counters
+  serve.step               per-token decode/prefill step: latency,
+                           active slots, queue depth
+  serve.request            per-request TTFT / tokens-per-second
+  bench.table              one span per benchmarks.run table
+"""
+from repro.obs.core import (Event, MemoryCollector, active_collector,
+                            collect, counter, enabled, event, install,
+                            span, uninstall)
+from repro.obs.sinks import JsonlSink, configure_from_env, read_jsonl
+
+__all__ = [
+    "Event", "MemoryCollector", "JsonlSink",
+    "enabled", "active_collector", "event", "counter", "span",
+    "install", "uninstall", "collect", "configure_from_env", "read_jsonl",
+]
+
+# Honour $REPRO_OBS at import time: one env read; near-zero cost when
+# unset (every later emit call is a single None check).
+configure_from_env()

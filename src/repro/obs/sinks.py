@@ -1,0 +1,82 @@
+"""File sinks + ``REPRO_OBS`` environment wiring for repro.obs.
+
+``REPRO_OBS`` selects where telemetry flows (checked once, at first
+``repro.obs`` import; re-run :func:`configure_from_env` after changing
+it in-process):
+
+  * unset / ``""`` / ``"0"`` / ``"off"``  — disabled (no-op fast path);
+  * ``"memory"``                          — process-wide
+    :class:`~repro.obs.core.MemoryCollector`, reachable via
+    ``obs.active_collector()``;
+  * ``"jsonl:PATH"`` or any other value   — :class:`JsonlSink` writing
+    one JSON object per record to ``PATH`` (the bare value is the path).
+
+JSONL lines are ``Event.to_dict()`` payloads::
+
+    {"kind": "event", "name": "kernel.resolve", "value": 1.0,
+     "ts": 1754650000.123, "attrs": {"kernel": "mxv", "source": "tuned"}}
+
+so a tuning fleet can concatenate per-machine files and group by
+``name`` — the provenance-bearing history the learned-cost-model
+direction (ROADMAP) trains on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+from repro.obs import core
+
+__all__ = ["JsonlSink", "configure_from_env", "read_jsonl"]
+
+_ENV = "REPRO_OBS"
+_OFF = ("", "0", "off", "none", "disabled")
+
+
+class JsonlSink:
+    """Append-only JSON-lines collector (thread-safe, line-buffered)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._lock = threading.Lock()
+        self._f = open(path, "a", buffering=1)
+
+    def record(self, ev: core.Event) -> None:
+        line = json.dumps(ev.to_dict(), default=str)
+        with self._lock:
+            self._f.write(line + "\n")
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Parse a JSONL telemetry file back into record dicts."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def configure_from_env(env: Optional[str] = None) -> None:
+    """(Re)install the collector ``REPRO_OBS`` names; see module doc."""
+    val = os.environ.get(_ENV, "") if env is None else env
+    val = val.strip()
+    if val.lower() in _OFF:
+        core.uninstall()
+        return
+    if val.lower() == "memory":
+        core.install(core.MemoryCollector())
+        return
+    path = val[len("jsonl:"):] if val.startswith("jsonl:") else val
+    core.install(JsonlSink(path))

@@ -21,7 +21,8 @@ from typing import Any, Mapping, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.planner import rank_configs
+from repro import obs
+from repro.core.planner import rank_configs, traffic_bytes
 from repro.core.striding import StridingConfig, valid_stride_unrolls
 from repro.registry import base, tunecache
 
@@ -129,6 +130,17 @@ def _timing_knobs(iters: int, warmup: int) -> tuple[int, int]:
     return max(iters, 1), max(warmup, 0)
 
 
+def _median(ts: Sequence[float]) -> float:
+    """True median: even sample counts average the two middle samples
+    (``ts[len // 2]`` alone takes the upper one — a half-sample bias)."""
+    s = sorted(ts)
+    n = len(s)
+    mid = n // 2
+    if n % 2:
+        return s[mid]
+    return 0.5 * (s[mid - 1] + s[mid])
+
+
 def _measure(spec: base.KernelSpec, inputs: tuple, cfg: StridingConfig,
              mode: str, iters: int, warmup: int) -> float:
     """Median-of-``iters`` wall-clock seconds after ``warmup`` calls."""
@@ -142,8 +154,37 @@ def _measure(spec: base.KernelSpec, inputs: tuple, cfg: StridingConfig,
         t0 = time.perf_counter()
         call()
         ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2]
+    return _median(ts)
+
+
+def _problem_bytes(spec: base.KernelSpec, sizes: Mapping[str, int],
+                   dtype) -> Optional[int]:
+    """Traffic bytes of one traversal, or None without a signature —
+    the denominator turning a measured wall-clock into effective GiB/s
+    (the paper's §4 unit, recorded per trial for telemetry)."""
+    if spec.traffic is None:
+        return None
+    try:
+        return traffic_bytes(spec.traffic(sizes, dtype))
+    except (ValueError, TypeError, KeyError):
+        return None
+
+
+def _rehydrate_trials(entry: Mapping[str, Any],
+                      ) -> tuple[tuple[StridingConfig, float], ...]:
+    """Rebuild the measured sweep from a cache entry's ``trials`` list
+    so cache hits expose the same trials a fresh sweep returns.  Trial
+    rows persist (d, p, block_rows, seconds); lookahead/arrangement are
+    sweep-constant and taken from the entry."""
+    look = int(entry.get("lookahead", 2))
+    arr = entry.get("arrangement", "grouped")
+    out = []
+    for t in entry.get("trials", ()):
+        out.append((StridingConfig(int(t["d"]), int(t["p"]),
+                                   lookahead=look, arrangement=arr,
+                                   block_rows=int(t.get("block_rows", 0))),
+                    float(t["seconds"])))
+    return tuple(out)
 
 
 def tune(kernel: str | base.KernelSpec,
@@ -154,13 +195,22 @@ def tune(kernel: str | base.KernelSpec,
          force: bool = False,
          max_candidates: int = 8,
          iters: int = 5,
-         warmup: int = 2) -> TuneResult:
+         warmup: int = 2,
+         timestamp: Optional[float] = None) -> TuneResult:
     """Measured sweep for one kernel; cached on disk, hit on re-tune.
 
     ``iters``/``warmup`` (env: ``REPRO_TUNE_ITERS``/``REPRO_TUNE_WARMUP``)
     control the per-candidate timing: warmup calls are discarded (jit
     compile, first-touch) and the median of the timed calls is kept, so
     the cached winner is not a cold-start artifact.
+
+    Every cache entry records provenance (``timestamp`` — pass the
+    caller's clock, e.g. ``time.time()`` — backend, jax version, and
+    the iters/warmup knobs) so per-machine caches can be merged into a
+    fleet artifact later.  With telemetry on, each measured candidate
+    emits a ``tune.trial`` event (config, median seconds, planner
+    ``predicted_bw``, measured GiB/s from the spec's Traffic bytes) and
+    cache hits/misses tick ``tune.cache.hit``/``.miss``.
     """
     spec = kernel if isinstance(kernel, base.KernelSpec) else base.get(kernel)
     sizes = dict(sizes if sizes is not None else spec.default_sizes)
@@ -173,7 +223,8 @@ def tune(kernel: str | base.KernelSpec,
     if not force:
         entry = cache.lookup(key)
         if entry is not None:
-            return TuneResult(
+            obs.counter("tune.cache.hit", kernel=spec.name, mode=mode)
+            result = TuneResult(
                 kernel=spec.name, key=key,
                 config=StridingConfig(int(entry["d"]), int(entry["p"]),
                                       lookahead=int(entry.get("lookahead", 2)),
@@ -183,14 +234,32 @@ def tune(kernel: str | base.KernelSpec,
                                                                0))),
                 seconds=float(entry.get("seconds", 0.0)), mode=mode,
                 from_cache=True,
+                trials=_rehydrate_trials(entry),
                 predicted_bw=float(entry.get("predicted_bw", 0.0)))
+            if obs.enabled():
+                obs.event("tune.result", kernel=spec.name, key=key,
+                          from_cache=True, d=result.config.stride_unroll,
+                          p=result.config.portion_unroll,
+                          block_rows=result.config.block_rows,
+                          seconds=result.seconds, mode=mode)
+            return result
 
+    obs.counter("tune.cache.miss", kernel=spec.name, mode=mode)
     inputs = spec.make_inputs(sizes, dtype)
     iters, warmup = _timing_knobs(iters, warmup)
+    nbytes = _problem_bytes(spec, sizes, dtype)
     trials = []
     for cfg, bw in candidate_configs(spec, sizes, dtype, max_candidates):
         sec = _measure(spec, inputs, cfg, mode, iters, warmup)
         trials.append((cfg, sec, bw))
+        if obs.enabled():
+            obs.event("tune.trial", kernel=spec.name,
+                      d=cfg.stride_unroll, p=cfg.portion_unroll,
+                      block_rows=cfg.block_rows, seconds=sec,
+                      predicted_bw=bw,
+                      measured_gibs=(nbytes / sec / 2**30
+                                     if nbytes and sec > 0 else None),
+                      mode=mode)
     trials.sort(key=lambda t: t[1])
     best_cfg, best_sec, best_bw = trials[0]
     cache.store(key, {
@@ -200,10 +269,22 @@ def tune(kernel: str | base.KernelSpec,
         "block_rows": best_cfg.block_rows,
         "seconds": best_sec, "predicted_bw": best_bw, "mode": mode,
         "source": "autotune",
+        "provenance": {
+            "timestamp": timestamp,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "iters": iters, "warmup": warmup,
+        },
         "trials": [{"d": c.stride_unroll, "p": c.portion_unroll,
                     "block_rows": c.block_rows,
                     "seconds": s} for c, s, _ in trials],
     })
+    if obs.enabled():
+        obs.event("tune.result", kernel=spec.name, key=key,
+                  from_cache=False, d=best_cfg.stride_unroll,
+                  p=best_cfg.portion_unroll,
+                  block_rows=best_cfg.block_rows, seconds=best_sec,
+                  predicted_bw=best_bw, mode=mode)
     return TuneResult(kernel=spec.name, key=key, config=best_cfg,
                       seconds=best_sec, mode=mode, from_cache=False,
                       trials=tuple((c, s) for c, s, _ in trials),

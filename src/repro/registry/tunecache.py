@@ -28,6 +28,7 @@ from typing import Any, Optional
 
 import jax
 
+from repro import obs
 from repro.core.striding import StridingConfig
 
 __all__ = ["TuneCache", "default_cache", "cache_key", "cached_config",
@@ -119,6 +120,10 @@ class TuneCache:
         writes mode-suffixed keys, so the old mode-*less* fallback key
         could never exist — a config measured in one mode now serves
         lookups from the other instead of silently missing.
+
+        Telemetry: ticks ``tunecache.hit`` (mode-exact),
+        ``tunecache.sibling_fallback`` (served by another mode's entry)
+        or ``tunecache.miss``.
         """
         tried = []
         for m in (mode, "pallas", "interpret"):
@@ -127,12 +132,19 @@ class TuneCache:
             tried.append(m)
             entry = self.lookup(cache_key(kernel, shape, dtype, mode=m))
             if entry is not None:
+                if obs.enabled():
+                    if m == mode or mode is None:
+                        obs.counter("tunecache.hit", kernel=kernel, mode=m)
+                    else:
+                        obs.counter("tunecache.sibling_fallback",
+                                    kernel=kernel, mode=mode, served_by=m)
                 return StridingConfig(
                     stride_unroll=int(entry["d"]),
                     portion_unroll=int(entry["p"]),
                     lookahead=int(entry.get("lookahead", 2)),
                     arrangement=entry.get("arrangement", "grouped"),
                     block_rows=int(entry.get("block_rows", 0)))
+        obs.counter("tunecache.miss", kernel=kernel, mode=mode)
         return None
 
 

@@ -7,16 +7,28 @@ for all active slots against the shared KV cache; finished slots
 (EOS/max_tokens) are retired and refilled from the queue. The decode
 attention path is the multi-strided flash-decode kernel (on TPU), so the
 paper's technique is on the hot path of every generated token.
+
+Serving telemetry (always collected engine-side; exported via
+``stats()`` and, with ``repro.obs`` enabled, per-step/per-request
+events):
+
+  * ``serve.step``    — one event per decode/prefill step: wall-clock
+    latency, phase, active-slot count, queue depth;
+  * ``serve.request`` — one event per retired request: time-to-first-
+    token, tokens/s, generated-token count.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +46,8 @@ class Request:
     tokens: np.ndarray           # prompt [len]
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    submitted_at: float = 0.0    # perf_counter at submit()
+    first_token_at: float = 0.0  # perf_counter at first generated token
 
 
 class ServingEngine:
@@ -48,10 +62,17 @@ class ServingEngine:
         self.cache = None
         self._decode = jax.jit(
             lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx=ctx))
+        # running telemetry (cheap scalars; stats() snapshots them)
+        self._steps = {"decode": 0, "prefill": 0}
+        self._step_s = {"decode": 0.0, "prefill": 0.0}
+        self._last_step_s = 0.0
+        self._tokens_generated = 0
+        self._requests: dict[int, dict[str, float]] = {}
 
     # ------------------------------------------------------------ admit
     def submit(self, uid: int, tokens) -> None:
-        self.queue.append(Request(uid=uid, tokens=np.asarray(tokens)))
+        self.queue.append(Request(uid=uid, tokens=np.asarray(tokens),
+                                  submitted_at=time.perf_counter()))
 
     def _admit(self) -> None:
         """Fill free slots: per-slot prefill via teacher-forced decode of
@@ -66,9 +87,10 @@ class ServingEngine:
                 self.slots[i] = req
                 self.lengths[i] = 0
                 for tok in req.tokens[:-1]:   # last token steps generation
-                    self._step_slot(i, int(tok))
+                    self._step_slot(i, int(tok), phase="prefill")
 
-    def _step_slot(self, slot: int, token: int) -> int:
+    def _step_slot(self, slot: int, token: int,
+                   phase: str = "decode") -> int:
         """Advance one slot by one token; returns the argmax next token.
 
         NOTE: steps the full batch (inactive slots step a pad token) —
@@ -78,10 +100,64 @@ class ServingEngine:
         toks = np.zeros((self.cfg.slots, 1), np.int32)
         toks[slot, 0] = token
         pos = jnp.int32(int(self.lengths[slot]))
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(self.params, jnp.asarray(toks),
                                           self.cache, pos)
+        nxt = int(jnp.argmax(logits[slot]))   # device sync = step boundary
+        latency = time.perf_counter() - t0
         self.lengths[slot] += 1
-        return int(jnp.argmax(logits[slot]))
+        self._steps[phase] += 1
+        self._step_s[phase] += latency
+        self._last_step_s = latency
+        if obs.enabled():
+            obs.event("serve.step", phase=phase, slot=slot,
+                      latency_s=latency, active_slots=self.active_slots(),
+                      queue_depth=len(self.queue),
+                      pos=int(self.lengths[slot]) - 1)
+        return nxt
+
+    # ------------------------------------------------------------ stats
+    def active_slots(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def _retire(self, req: Request) -> None:
+        """Record per-request serving metrics as the slot frees."""
+        now = time.perf_counter()
+        ttft = (req.first_token_at - req.submitted_at
+                if req.first_token_at else 0.0)
+        gen_s = now - (req.first_token_at or req.submitted_at)
+        n = len(req.out)
+        rec = {"n_tokens": n, "ttft_s": ttft,
+               "tokens_per_s": (n / gen_s if gen_s > 0 else 0.0)}
+        self._requests[req.uid] = rec
+        self._tokens_generated += n
+        if obs.enabled():
+            obs.event("serve.request", uid=req.uid, **rec)
+
+    def stats(self) -> dict[str, Any]:
+        """Serving-telemetry snapshot (plain dict, json-clean).
+
+        ``decode_steps``/``prefill_steps`` + mean/last step latencies,
+        current ``slot_occupancy`` (active / configured) and
+        ``queue_depth``, total ``tokens_generated``, and per-retired-
+        request ``{uid: {n_tokens, ttft_s, tokens_per_s}}``.
+        """
+        dec, pre = self._steps["decode"], self._steps["prefill"]
+        return {
+            "decode_steps": dec,
+            "prefill_steps": pre,
+            "mean_decode_step_s": (self._step_s["decode"] / dec
+                                   if dec else 0.0),
+            "mean_prefill_step_s": (self._step_s["prefill"] / pre
+                                    if pre else 0.0),
+            "last_step_s": self._last_step_s,
+            "active_slots": self.active_slots(),
+            "slot_occupancy": self.active_slots() / self.cfg.slots,
+            "queue_depth": len(self.queue),
+            "tokens_generated": self._tokens_generated,
+            "requests": {uid: dict(rec)
+                         for uid, rec in self._requests.items()},
+        }
 
     # ------------------------------------------------------------- run
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
@@ -97,14 +173,19 @@ class ServingEngine:
                 last = req.out[-1] if req.out else int(req.tokens[-1])
                 nxt = self._step_slot(i, last)
                 req.out.append(nxt)
+                if not req.first_token_at:
+                    req.first_token_at = time.perf_counter()
                 if (nxt == cfg.eos_id
                         or len(req.out) >= cfg.max_new_tokens
                         or self.lengths[i] >= cfg.max_len - 1):
                     results[req.uid] = req.out
                     self.slots[i] = None
+                    self._retire(req)
             self._admit()
             steps += 1
-        for req in self.slots:
+        for i, req in enumerate(self.slots):
             if req is not None:
                 results[req.uid] = req.out
+                self.slots[i] = None
+                self._retire(req)
         return results

@@ -1,0 +1,192 @@
+"""tools/bench_compare.py: per-kernel trajectory diffing.
+
+Synthetic BENCH payloads exercise the report schema, regression
+detection, kernel-set-drift tolerance, the per-pair ``auto`` metric
+resolution (mixed-schema artifacts must not divide a ratio by a
+seconds value), and the CLI exit codes CI relies on.
+"""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_CLI = os.path.join(_ROOT, "tools", "bench_compare.py")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("bench_compare", _CLI)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bc = _load()
+
+
+def _payload(rows, table="fig6_kernels"):
+    return {"meta": {"backend": "cpu", "mode": "ref"},
+            "tables": {table: rows}}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+BASE_ROWS = [
+    {"kernel": "mxv_gen", "paired_median_ratio": 1.00, "seconds": 1e-3},
+    {"kernel": "bicg_gen", "paired_median_ratio": 1.02, "seconds": 2e-3},
+    {"kernel": "old_gen", "paired_median_ratio": 0.99, "seconds": 5e-4},
+]
+HEAD_ROWS = [
+    # 2x regression on the paired metric
+    {"kernel": "mxv_gen", "paired_median_ratio": 2.00, "seconds": 2e-3},
+    # slight improvement, below threshold
+    {"kernel": "bicg_gen", "paired_median_ratio": 0.98, "seconds": 1.9e-3},
+    # drift: old_gen removed, new_gen added
+    {"kernel": "new_gen", "paired_median_ratio": 1.01, "seconds": 3e-4},
+]
+
+
+def test_compare_report_schema_and_regression(tmp_path):
+    a = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    b = _write(tmp_path, "B.json", _payload(HEAD_ROWS))
+    report = bc.compare([a, b], threshold=1.5)
+    assert set(report) == {"artifacts", "table", "metric", "threshold",
+                           "pairs", "regressions"}
+    (pair,) = report["pairs"]
+    assert pair["base"] == a and pair["head"] == b
+    assert set(pair["kernels"]) == {"mxv_gen", "bicg_gen"}
+    mxv = pair["kernels"]["mxv_gen"]
+    assert mxv["ratio"] == 2.0
+    assert mxv["flag"] == "regression"
+    assert pair["kernels"]["bicg_gen"]["flag"] == ""
+    assert pair["added"] == ["new_gen"]
+    assert pair["removed"] == ["old_gen"]
+    assert pair["median_ratio"] is not None
+    assert report["regressions"] == [f"{b}:mxv_gen"]
+    json.dumps(report)              # json-clean
+
+
+def test_auto_metric_resolves_per_pair(tmp_path):
+    """A base row predating paired_median_ratio must be compared on
+    ``seconds`` on BOTH sides, never ratio-vs-seconds."""
+    base = [{"kernel": "k", "seconds": 1e-3}]                 # old schema
+    head = [{"kernel": "k", "paired_median_ratio": 1.0,
+             "seconds": 1.1e-3}]                              # new schema
+    a = _write(tmp_path, "A.json", _payload(base))
+    b = _write(tmp_path, "B.json", _payload(head))
+    (pair,) = bc.compare([a, b])["pairs"]
+    assert pair["kernels"]["k"]["ratio"] == pytest.approx(1.1, rel=1e-6)
+
+
+def test_rows_without_metric_are_skipped(tmp_path):
+    base = [{"kernel": "k", "seconds": None},
+            {"kernel": "ok", "seconds": 1.0}]
+    head = [{"kernel": "k", "seconds": 1e-3},
+            {"kernel": "ok", "seconds": 2.0}]
+    a = _write(tmp_path, "A.json", _payload(base))
+    b = _write(tmp_path, "B.json", _payload(head))
+    (pair,) = bc.compare([a, b])["pairs"]
+    assert pair["skipped"] == ["k"]
+    assert pair["kernels"]["ok"]["ratio"] == 2.0
+
+
+def test_three_artifact_chain(tmp_path):
+    mid = [{"kernel": "mxv_gen", "paired_median_ratio": 1.2,
+            "seconds": 1e-3}]
+    a = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    b = _write(tmp_path, "B.json", _payload(mid))
+    c = _write(tmp_path, "C.json", _payload(HEAD_ROWS))
+    report = bc.compare([a, b, c])
+    assert len(report["pairs"]) == 2
+    assert report["pairs"][0]["kernels"]["mxv_gen"]["ratio"] == \
+        pytest.approx(1.2)
+    assert report["pairs"][1]["kernels"]["mxv_gen"]["ratio"] == \
+        pytest.approx(2.0 / 1.2, rel=1e-3)
+
+
+def test_malformed_and_missing_raise(tmp_path):
+    good = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    with pytest.raises(bc.BenchCompareError, match="cannot read"):
+        bc.compare([good, str(tmp_path / "absent.json")])
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(bc.BenchCompareError, match="malformed"):
+        bc.compare([good, str(bad)])
+    notables = _write(tmp_path, "nt.json", {"rows": []})
+    with pytest.raises(bc.BenchCompareError, match="tables"):
+        bc.compare([good, notables])
+    with pytest.raises(bc.BenchCompareError, match="absent"):
+        bc.compare([good, _write(tmp_path, "ot.json",
+                                 _payload([], table="other"))])
+    with pytest.raises(bc.BenchCompareError, match="at least two"):
+        bc.compare([good])
+
+
+def test_explicit_metric(tmp_path):
+    a = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    b = _write(tmp_path, "B.json", _payload(HEAD_ROWS))
+    (pair,) = bc.compare([a, b], metric="seconds")["pairs"]
+    assert pair["kernels"]["mxv_gen"]["ratio"] == 2.0
+    assert pair["kernels"]["bicg_gen"]["ratio"] == pytest.approx(0.95)
+
+
+def test_format_text_mentions_every_kernel(tmp_path):
+    a = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    b = _write(tmp_path, "B.json", _payload(HEAD_ROWS))
+    text = bc.format_text(bc.compare([a, b]))
+    for frag in ("mxv_gen", "bicg_gen", "regression", "added: new_gen",
+                 "removed: old_gen", "median"):
+        assert frag in text
+
+
+# ----------------------------------------------------------------- CLI
+
+def _run_cli(*args):
+    return subprocess.run([sys.executable, _CLI, *args],
+                          capture_output=True, text=True, timeout=120)
+
+
+def test_cli_report_only_exit_zero(tmp_path):
+    a = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    b = _write(tmp_path, "B.json", _payload(HEAD_ROWS))
+    out = tmp_path / "report.json"
+    res = _run_cli(a, b, "--json", str(out))
+    assert res.returncode == 0, res.stderr
+    assert "mxv_gen" in res.stdout
+    report = json.loads(out.read_text())
+    assert report["regressions"]      # reported, not fatal by default
+
+
+def test_cli_fail_on_regression(tmp_path):
+    a = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    b = _write(tmp_path, "B.json", _payload(HEAD_ROWS))
+    assert _run_cli(a, b, "--fail-on-regression").returncode == 1
+    # raising the threshold above 2x clears the flag
+    assert _run_cli(a, b, "--fail-on-regression",
+                    "--threshold", "3.0").returncode == 0
+
+
+def test_cli_malformed_exit_two(tmp_path):
+    a = _write(tmp_path, "A.json", _payload(BASE_ROWS))
+    res = _run_cli(a, str(tmp_path / "absent.json"))
+    assert res.returncode == 2
+    assert "bench_compare:" in res.stderr
+
+
+def test_cli_on_committed_lineage():
+    """The acceptance-criteria invocation: the committed BENCH_PR5 /
+    BENCH_PR6 artifacts produce a per-kernel ratio report."""
+    a = os.path.join(_ROOT, "BENCH_PR5.json")
+    b = os.path.join(_ROOT, "BENCH_PR6.json")
+    if not (os.path.exists(a) and os.path.exists(b)):
+        pytest.skip("committed lineage artifacts not present")
+    res = _run_cli(a, b)
+    assert res.returncode == 0, res.stderr
+    assert "mxv_gen" in res.stdout and "ratio" in res.stdout

@@ -20,7 +20,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 FIG6_GEN_VS_REF_KEYS = {
     "kernel", "ref", "d", "p", "block_rows", "n_outputs", "gen_seconds",
-    "ref_seconds", "gen_vs_ref", "paired_median_ratio", "seconds",
+    "ref_seconds", "gen_vs_ref", "paired_median_ratio",
+    "predicted_gibs", "measured_gibs", "seconds",
 }
 
 
@@ -38,7 +39,8 @@ def test_run_json_payload_schema(tmp_path):
     payload = json.loads(out.read_text())
     assert set(payload) == {"meta", "tables"}
     meta = payload["meta"]
-    assert {"backend", "mode", "quick", "jax_version"} <= set(meta)
+    assert {"backend", "mode", "quick", "jax_version",
+            "obs_enabled"} <= set(meta)
     assert meta["quick"] is True
     tables = payload["tables"]
     assert set(tables) == {"fig34_stalls"}
@@ -87,6 +89,60 @@ def test_fig6_gen_vs_ref_row_schema():
     assert set(rows[0]) == FIG6_GEN_VS_REF_KEYS
     assert rows[0]["n_outputs"] == 3
     assert rows[0]["ref"] + "_gen" == rows[0]["kernel"]
+    # the predicted-vs-measured bandwidth pair rides every paired row
+    # (model-only computation — no benchmark-scale kernel runs)
+    assert rows[0]["predicted_gibs"] > 0
+    assert rows[0]["measured_gibs"] > 0
+
+
+def test_fig6_bw_pair_totality():
+    """_bw_pair degrades to None rather than raising: no Traffic
+    signature, missing config, or zero seconds must not kill a row."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from benchmarks import fig6_kernels as f6
+    from repro import registry
+    from repro.core.striding import StridingConfig
+
+    spec = registry.get("mxv_gen")
+    sizes = dict(spec.bench_problem)
+    p, m = f6._bw_pair(spec, sizes, StridingConfig(4, 1), 1e-3)
+    assert p > 0 and m > 0
+    # measured GiB/s is Traffic bytes over wall-clock
+    from repro.core import traffic_bytes
+    nbytes = traffic_bytes(spec.traffic(sizes, jnp.float32))
+    assert m == pytest.approx(nbytes / 1e-3 / 2**30)
+    # degraded legs
+    assert f6._bw_pair(spec, sizes, None, 0)[1] is None
+    bald = dataclasses.replace(spec, traffic=None)
+    assert f6._bw_pair(bald, sizes, StridingConfig(4, 1), 1e-3) == (None,
+                                                                   None)
+
+
+def test_tune_cache_entry_provenance_keys(tmp_path):
+    """Every fresh tune writes mergeable provenance: caller timestamp,
+    backend, jax version, and the timing knobs."""
+    import time
+
+    from repro.registry import autotune, tunecache
+
+    cache = tunecache.TuneCache(str(tmp_path / "tune.json"))
+    ts = time.time()
+    autotune.tune("stream_copy", mode="ref", cache=cache, iters=1,
+                  warmup=0, max_candidates=2, timestamp=ts)
+    (entry,) = json.loads((tmp_path / "tune.json").read_text()).values()
+    prov = entry["provenance"]
+    assert set(prov) == {"timestamp", "backend", "jax_version", "iters",
+                         "warmup"}
+    assert prov["timestamp"] == ts
+    assert prov["iters"] == 1 and prov["warmup"] == 0
+    assert isinstance(prov["backend"], str) and prov["backend"]
+    assert isinstance(prov["jax_version"], str) and prov["jax_version"]
+    # the trials list persists alongside (rehydrated on cache hits)
+    assert entry["trials"] and {"d", "p", "block_rows", "seconds"} <= \
+        set(entry["trials"][0])
 
 
 def test_fig6_covers_side_output_kernels():

@@ -1,0 +1,427 @@
+"""repro.obs: counter/timer/span semantics, sinks, and the four
+instrumented layers (config resolution, autotune, tune cache, serving).
+
+The disabled-mode contract matters most: with no collector installed,
+every emit call must return after a single None check — the hot paths
+(op dispatch, per-token decode) are instrumented unconditionally.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.obs import core as obs_core
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_collector():
+    """Tests drive collectors explicitly; neutralize $REPRO_OBS."""
+    prev = obs_core._collector
+    obs_core._collector = None
+    yield
+    obs_core._collector = prev
+
+
+# ------------------------------------------------------------- semantics
+
+def test_event_counter_span_record_kinds():
+    with obs.collect() as col:
+        obs.event("e.one", kernel="k", d=4)
+        obs.counter("c.one")
+        obs.counter("c.one", value=2.5, tag="x")
+        with obs.span("s.one", phase="work") as sp:
+            sp.set(rows=7)
+    kinds = [(e.kind, e.name) for e in col.events]
+    assert kinds == [("event", "e.one"), ("counter", "c.one"),
+                     ("counter", "c.one"), ("span", "s.one")]
+    ev = col.named("e.one")[0]
+    assert ev.attrs == {"kernel": "k", "d": 4}
+    assert col.counter_value("c.one") == 3.5
+    sp = col.named("s.one")[0]
+    assert sp.attrs == {"phase": "work", "rows": 7}
+    assert sp.value >= 0.0          # duration_s stamped at exit
+    assert ev.ts > 0
+
+
+def test_span_times_the_region():
+    with obs.collect() as col:
+        with obs.span("s.timed"):
+            time.sleep(0.02)
+    assert col.named("s.timed")[0].value >= 0.015
+
+
+def test_counters_aggregate_by_name():
+    with obs.collect() as col:
+        for _ in range(3):
+            obs.counter("hits", kernel="a")
+        obs.counter("misses")
+    assert col.counters() == {"hits": 3.0, "misses": 1.0}
+    assert col.counter_value("absent") == 0.0
+
+
+def test_collect_restores_previous_collector():
+    outer = obs.MemoryCollector()
+    obs.install(outer)
+    try:
+        with obs.collect() as inner:
+            obs.event("inner.only")
+        obs.event("outer.only")
+        assert [e.name for e in inner.events] == ["inner.only"]
+        assert [e.name for e in outer.events] == ["outer.only"]
+    finally:
+        obs.uninstall()
+
+
+def test_install_uninstall_toggle_enabled():
+    assert not obs.enabled()
+    col = obs.MemoryCollector()
+    obs.install(col)
+    try:
+        assert obs.enabled()
+        assert obs.active_collector() is col
+    finally:
+        obs.uninstall()
+    assert not obs.enabled()
+    assert obs.active_collector() is None
+
+
+# ---------------------------------------------------------- disabled mode
+
+def test_disabled_emission_is_noop():
+    assert not obs.enabled()
+    obs.event("never", a=1)
+    obs.counter("never")
+    with obs.span("never") as sp:
+        sp.set(b=2)          # NullSpan swallows
+    with obs.collect() as col:
+        pass
+    assert col.events == []  # nothing leaked into a later collector
+
+
+def test_disabled_overhead_is_negligible():
+    """The no-op fast path: 200k disabled emits must be cheap (a single
+    None check per call).  The bound is deliberately loose — an
+    accidental Event construction or collector hop on the disabled path
+    is an order of magnitude slower and fails this clearly."""
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        obs.event("hot.path", kernel="k", d=4)
+        obs.counter("hot.counter")
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 2.0, f"disabled-mode emit too slow: {elapsed:.3f}s"
+
+
+# ------------------------------------------------------------- JSONL sink
+
+def test_jsonl_sink_round_trip(tmp_path):
+    path = str(tmp_path / "obs.jsonl")
+    sink = obs.JsonlSink(path)
+    obs.install(sink)
+    try:
+        obs.event("resolve", kernel="mxv", source="tuned")
+        obs.counter("hits", value=2)
+        with obs.span("sweep", kernel="mxv"):
+            pass
+    finally:
+        obs.uninstall()      # closes the sink
+    records = obs.read_jsonl(path)
+    assert [r["name"] for r in records] == ["resolve", "hits", "sweep"]
+    assert records[0]["kind"] == "event"
+    assert records[0]["attrs"] == {"kernel": "mxv", "source": "tuned"}
+    assert records[1]["value"] == 2
+    assert records[2]["kind"] == "span"
+    assert records[2]["value"] >= 0.0
+    for r in records:
+        json.dumps(r)        # round-trippable
+
+
+def test_configure_from_env_variants(tmp_path):
+    obs.configure_from_env("off")
+    assert not obs.enabled()
+    obs.configure_from_env("memory")
+    try:
+        assert isinstance(obs.active_collector(), obs.MemoryCollector)
+    finally:
+        obs.uninstall()
+    path = str(tmp_path / "t.jsonl")
+    obs.configure_from_env(f"jsonl:{path}")
+    try:
+        obs.event("x")
+    finally:
+        obs.uninstall()
+    assert obs.read_jsonl(path)[0]["name"] == "x"
+    obs.configure_from_env("")
+    assert not obs.enabled()
+
+
+# ----------------------------------------- layer 1: config resolution
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_resolve_emits_dispatch_event(mode, tmp_path, monkeypatch):
+    """One kernel.resolve event per op dispatch, in both kernel modes,
+    with the documented attribute set and the winning source."""
+    import repro.kernels as K
+    from repro.kernels import common
+    from repro.kernels.common import example_input
+    from repro.registry import tunecache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "t.json"))
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
+    try:
+        x = example_input((32, 256))
+        with obs.collect() as col:
+            K.stream_read(x, mode=mode)
+        (ev,) = col.named("kernel.resolve")
+        assert set(ev.attrs) == {"kernel", "source", "d", "p",
+                                 "block_rows", "arrangement", "mode"}
+        assert ev.attrs["kernel"] == "stream_read"
+        assert ev.attrs["mode"] == mode
+        assert ev.attrs["source"] == "planned"   # empty cache, has Traffic
+        assert col.counter_value("kernel.plan_memo.miss") == 1
+        assert col.counter_value("tunecache.miss") == 1
+
+        # second dispatch: memoized plan, source still recorded
+        with obs.collect() as col2:
+            K.stream_read(x, mode=mode)
+        assert col2.counter_value("kernel.plan_memo.hit") == 1
+        assert col2.named("kernel.resolve")[0].attrs["source"] == "planned"
+    finally:
+        tunecache.reset_default_cache()
+        common.reset_plan_memo()
+
+
+def test_resolve_source_explicit_and_tuned(tmp_path, monkeypatch):
+    import repro.kernels as K
+    from repro.core.striding import StridingConfig
+    from repro.kernels import common
+    from repro.kernels.common import example_input
+    from repro.registry import tunecache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "t.json"))
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
+    try:
+        x = example_input((32, 256))
+        with obs.collect() as col:
+            K.stream_read(x, config=StridingConfig(4, 1), mode="ref")
+        ev = col.named("kernel.resolve")[0]
+        assert ev.attrs["source"] == "explicit"
+        assert ev.attrs["d"] == 4
+
+        key = tunecache.cache_key("stream_read", x.shape, x.dtype,
+                                  mode="pallas")
+        tunecache.default_cache().store(key, {"d": 2, "p": 1})
+        with obs.collect() as col:
+            K.stream_read(x, mode="ref")
+        ev = col.named("kernel.resolve")[0]
+        assert ev.attrs["source"] == "tuned"
+        assert ev.attrs["d"] == 2
+        # served by the sibling concrete-mode entry (stored as pallas)
+        assert col.counter_value("tunecache.sibling_fallback") == 1
+    finally:
+        tunecache.reset_default_cache()
+        common.reset_plan_memo()
+
+
+def test_codegen_dispatch_ticks_spec_memo(tmp_path, monkeypatch):
+    import repro.kernels as K
+    from repro.kernels import common
+    from repro.kernels.common import example_input
+    from repro.registry import tunecache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "t.json"))
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
+    try:
+        a = example_input((8, 256))
+        x = example_input((256,), key=1)
+        with obs.collect() as col:
+            K.mxv_gen(a, x, mode="ref")
+            K.mxv_gen(a, x, mode="ref")
+        memo = {k: v for k, v in col.counters().items()
+                if k.startswith("codegen.spec_memo")}
+        assert memo.get("codegen.spec_memo.miss", 0) >= 1
+        assert memo.get("codegen.spec_memo.hit", 0) >= 1
+        assert len(col.named("kernel.resolve")) == 2
+    finally:
+        tunecache.reset_default_cache()
+        common.reset_plan_memo()
+
+
+# ------------------------------------------------- layer 2: autotune
+
+def test_tune_emits_trials_and_cache_counters(tmp_path):
+    from repro.registry import autotune, tunecache
+
+    cache = tunecache.TuneCache(str(tmp_path / "tune.json"))
+    with obs.collect() as col:
+        res = autotune.tune("stream_copy", mode="ref", cache=cache,
+                            iters=2, warmup=0, max_candidates=3,
+                            timestamp=time.time())
+    assert not res.from_cache
+    trials = col.named("tune.trial")
+    assert len(trials) == len(res.trials) >= 1
+    for t in trials:
+        assert {"kernel", "d", "p", "block_rows", "seconds",
+                "predicted_bw", "measured_gibs", "mode"} <= set(t.attrs)
+        assert t.attrs["seconds"] > 0
+        assert t.attrs["predicted_bw"] > 0       # planner candidates
+        assert t.attrs["measured_gibs"] > 0      # Traffic-derived GiB/s
+    assert col.counter_value("tune.cache.miss") == 1
+    (result_ev,) = col.named("tune.result")
+    assert result_ev.attrs["from_cache"] is False
+    assert result_ev.attrs["d"] == res.config.stride_unroll
+
+    # hit leg: no re-measure events, hit counter, rehydrated trials
+    with obs.collect() as col2:
+        res2 = autotune.tune("stream_copy", mode="ref", cache=cache,
+                             iters=2, warmup=0, max_candidates=3)
+    assert res2.from_cache
+    assert res2.trials == res.trials      # satellite: rehydrated on hit
+    assert col2.named("tune.trial") == []
+    assert col2.counter_value("tune.cache.hit") == 1
+    assert col2.named("tune.result")[0].attrs["from_cache"] is True
+
+
+def test_tune_hit_rehydrates_trials_from_entry(tmp_path):
+    """The cache-hit TuneResult exposes the persisted sweep — same
+    (config, seconds) list the miss leg returned, not ``()``."""
+    from repro.registry import autotune, tunecache
+
+    cache = tunecache.TuneCache(str(tmp_path / "tune.json"))
+    miss = autotune.tune("mxv", mode="ref", cache=cache, iters=1,
+                         warmup=0, max_candidates=2)
+    hit = autotune.tune("mxv", mode="ref", cache=cache, iters=1,
+                        warmup=0, max_candidates=2)
+    assert hit.from_cache and not miss.from_cache
+    assert hit.trials == miss.trials
+    assert len(hit.trials) >= 1
+    cfg, sec = hit.trials[0]
+    assert cfg.stride_unroll >= 1 and sec > 0
+
+
+# ------------------------------------------------- layer 3: serving
+
+class _ToyModel:
+    """Deterministic next-token = (token + 1) mod vocab; no params."""
+
+    vocab = 7
+
+    def init_cache(self, slots, max_len):
+        return jnp.zeros((slots, max_len))
+
+    def decode_step(self, params, toks, cache, pos, ctx=None):
+        return jax.nn.one_hot((toks[:, 0] + 1) % self.vocab,
+                              self.vocab), cache
+
+
+def _toy_engine(slots=2, max_new_tokens=3):
+    from repro.serve import ServeConfig, ServingEngine
+    return ServingEngine(_ToyModel(), None,
+                         ServeConfig(slots=slots,
+                                     max_new_tokens=max_new_tokens))
+
+
+def test_serve_emits_step_and_request_events():
+    eng = _toy_engine()
+    with obs.collect() as col:
+        eng.submit(1, [1, 2])
+        eng.submit(2, [3])
+        results = eng.run()
+    assert set(results) == {1, 2}
+    steps = col.named("serve.step")
+    assert steps, "every decode/prefill step must emit serve.step"
+    for ev in steps:
+        assert {"phase", "slot", "latency_s", "active_slots",
+                "queue_depth", "pos"} <= set(ev.attrs)
+        assert ev.attrs["latency_s"] > 0
+        assert ev.attrs["phase"] in ("prefill", "decode")
+    assert any(e.attrs["phase"] == "prefill" for e in steps)
+    assert sum(e.attrs["phase"] == "decode" for e in steps) == 6
+
+    reqs = col.named("serve.request")
+    assert {e.attrs["uid"] for e in reqs} == {1, 2}
+    for ev in reqs:
+        assert ev.attrs["n_tokens"] == 3
+        assert ev.attrs["ttft_s"] > 0
+        assert ev.attrs["tokens_per_s"] > 0
+
+
+def test_engine_stats_snapshot():
+    eng = _toy_engine()
+    eng.submit(1, [1, 2])
+    eng.submit(2, [3])
+    results = eng.run()
+    assert results == {1: [3, 4, 5], 2: [4, 5, 6]}
+    s = eng.stats()
+    assert s["decode_steps"] == 6
+    assert s["prefill_steps"] == 1          # uid 1's 2-token prompt
+    assert s["tokens_generated"] == 6
+    assert s["mean_decode_step_s"] > 0
+    assert s["last_step_s"] > 0
+    assert s["queue_depth"] == 0 and s["active_slots"] == 0
+    assert s["slot_occupancy"] == 0.0
+    assert set(s["requests"]) == {1, 2}
+    for rec in s["requests"].values():
+        assert rec["n_tokens"] == 3
+        assert rec["ttft_s"] > 0 and rec["tokens_per_s"] > 0
+    json.dumps(s)                           # snapshot is json-clean
+
+
+def test_engine_stats_without_obs_enabled():
+    """Engine-side metrics are always collected: stats() works with
+    telemetry disabled (the default)."""
+    assert not obs.enabled()
+    eng = _toy_engine(slots=1, max_new_tokens=2)
+    eng.submit(9, [1])
+    eng.run()
+    s = eng.stats()
+    assert s["decode_steps"] == 2
+    assert s["requests"][9]["n_tokens"] == 2
+
+
+# --------------------------------------- acceptance: all four layers
+
+def test_one_session_covers_all_layers(tmp_path, monkeypatch):
+    """The ISSUE acceptance path: a single tune() + one op dispatch + a
+    2-request serve run yield events from all four instrumented layers
+    in one collector."""
+    import repro.kernels as K
+    from repro.kernels import common
+    from repro.kernels.common import example_input
+    from repro.registry import autotune, tunecache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "t.json"))
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
+    try:
+        with obs.collect() as col:
+            autotune.tune("stream_read", mode="ref", iters=2, warmup=0,
+                          max_candidates=2, timestamp=time.time())
+            x = example_input((32, 256))
+            K.stream_read(x, mode="ref")
+            eng = _toy_engine()
+            eng.submit(1, [1, 2])
+            eng.submit(2, [3])
+            eng.run()
+        names = {e.name for e in col.events}
+        # resolution source + per-candidate trials + cache counters +
+        # per-step serve latency, together
+        assert "kernel.resolve" in names
+        assert "tune.trial" in names and "tune.result" in names
+        assert "tune.cache.miss" in names
+        assert {"serve.step", "serve.request"} <= names
+        # the tuned entry then serves the dispatch: source == tuned
+        resolves = col.named("kernel.resolve")
+        assert any(e.attrs["source"] == "tuned" for e in resolves)
+        trial = col.named("tune.trial")[0]
+        assert trial.attrs["predicted_bw"] > 0
+        assert trial.attrs["measured_gibs"] > 0
+    finally:
+        tunecache.reset_default_cache()
+        common.reset_plan_memo()

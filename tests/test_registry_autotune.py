@@ -54,6 +54,20 @@ def _tiny_cache(tmp_path):
     return tunecache.TuneCache(str(tmp_path / "tune.json"))
 
 
+def test_measure_median_is_true_median():
+    """Even sample counts average the two middle samples; the old
+    ``ts[len // 2]`` took the upper one — a systematic upward bias at
+    the default even ``iters``."""
+    assert autotune._median([3.0]) == 3.0
+    assert autotune._median([1.0, 2.0]) == 1.5
+    assert autotune._median([5.0, 1.0, 3.0]) == 3.0
+    assert autotune._median([4.0, 1.0, 3.0, 2.0]) == 2.5
+    # order-independent
+    assert autotune._median([2.0, 1.0, 4.0, 3.0]) == 2.5
+    # the old upper-element bug would return 3.0 here
+    assert autotune._median([1.0, 1.0, 3.0, 100.0]) == 2.0
+
+
 def test_tune_writes_then_hits_cache(tmp_path):
     cache = _tiny_cache(tmp_path)
     first = autotune.tune("stream_copy", mode="ref", cache=cache,

@@ -1,0 +1,229 @@
+#!/usr/bin/env python3
+"""Diff per-kernel performance across ``BENCH_*.json`` artifacts.
+
+The per-PR perf-trajectory snapshots (``benchmarks/run.py --json``) are
+only useful if something *reads* them: this CLI compares two or more
+artifacts per kernel and flags regressions, so CI checks the trajectory
+instead of merely archiving it.
+
+    python tools/bench_compare.py BENCH_PR5.json BENCH_PR6.json
+    python tools/bench_compare.py BENCH_PR*.json BENCH_HEAD.json \
+        --threshold 1.3 --json report.json
+
+Artifacts are compared adjacent-pairwise in the order given (lineage
+order: oldest first, head last).  For each pair, every kernel present
+in both sides gets a head/base ratio of the chosen metric:
+
+  * ``--metric auto`` (default) prefers each row's
+    ``paired_median_ratio`` — fig6's drift-cancelling gen-vs-ref
+    statistic, which compares *shapes* of performance and survives
+    artifacts recorded on differently-loaded machines — and falls back
+    to raw ``seconds`` when a row predates it;
+  * any explicit row field (``seconds``, ``gen_vs_ref``,
+    ``us_per_call``, …) can be named instead.
+
+Kernel-set drift across PRs is expected and never an error: kernels
+only in the newer artifact are reported ``added``, only in the older
+``removed``, and rows without a usable metric are ``skipped``.
+
+Exit codes: 0 = compared fine (regressions are *reported*, not fatal,
+unless ``--fail-on-regression``); 1 = regressions with
+``--fail-on-regression``; 2 = missing/malformed artifact or table.
+
+Stdlib-only on purpose — CI can run it before any repro import works.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Optional
+
+__all__ = ["BenchCompareError", "load_artifact", "index_rows",
+           "compare_pair", "compare", "format_text", "main"]
+
+DEFAULT_TABLE = "fig6_kernels"
+DEFAULT_THRESHOLD = 1.25
+
+
+class BenchCompareError(Exception):
+    """Missing/malformed artifact or table (CLI exit code 2)."""
+
+
+def load_artifact(path: str) -> dict:
+    """Parse one BENCH_*.json payload; loud on anything malformed."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except OSError as e:
+        raise BenchCompareError(f"{path}: cannot read artifact ({e})")
+    except json.JSONDecodeError as e:
+        raise BenchCompareError(f"{path}: malformed JSON ({e})")
+    if (not isinstance(payload, dict)
+            or not isinstance(payload.get("tables"), dict)):
+        raise BenchCompareError(
+            f"{path}: not a benchmarks.run payload (no 'tables' dict)")
+    return payload
+
+
+def index_rows(payload: dict, table: str, key: str,
+               path: str = "<artifact>") -> dict[str, dict]:
+    """{row[key]: row} for one table; loud if the table is absent."""
+    tables = payload["tables"]
+    if table not in tables:
+        raise BenchCompareError(
+            f"{path}: table {table!r} absent (has: {sorted(tables)})")
+    out: dict[str, dict] = {}
+    for row in tables[table]:
+        name = row.get(key)
+        if isinstance(name, str):
+            out[name] = row
+    return out
+
+
+def _metric_value(row: dict, metric: str) -> Optional[float]:
+    """The row's metric as a positive float, or None if unusable."""
+    v = row.get(metric)
+    try:
+        v = float(v)
+    except (TypeError, ValueError):
+        return None
+    return v if v > 0 else None
+
+
+def _pair_values(base: dict, head: dict, metric: str,
+                 ) -> tuple[Optional[float], Optional[float]]:
+    """Metric values for one kernel's (base, head) row pair.
+
+    ``auto`` resolves per *pair*, not per row: both sides must carry the
+    same field, or the ratio compares apples to oranges (a schema-drift
+    artifact where only the newer row has ``paired_median_ratio`` must
+    fall back to ``seconds`` on BOTH sides)."""
+    if metric == "auto":
+        for m in ("paired_median_ratio", "seconds"):
+            b, h = _metric_value(base, m), _metric_value(head, m)
+            if b is not None and h is not None:
+                return b, h
+        return None, None
+    return _metric_value(base, metric), _metric_value(head, metric)
+
+
+def _median(xs: list[float]) -> Optional[float]:
+    if not xs:
+        return None
+    s = sorted(xs)
+    mid = len(s) // 2
+    return s[mid] if len(s) % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def compare_pair(base_rows: dict[str, dict], head_rows: dict[str, dict],
+                 metric: str, threshold: float) -> dict[str, Any]:
+    """Per-kernel head/base ratios for one adjacent artifact pair."""
+    kernels: dict[str, dict] = {}
+    skipped: list[str] = []
+    for name in sorted(set(base_rows) & set(head_rows)):
+        b, h = _pair_values(base_rows[name], head_rows[name], metric)
+        if b is None or h is None:
+            skipped.append(name)
+            continue
+        ratio = h / b
+        flag = ("regression" if ratio > threshold
+                else "improvement" if ratio < 1.0 / threshold else "")
+        kernels[name] = {"base": b, "head": h,
+                         "ratio": round(ratio, 4), "flag": flag}
+    ratios = [k["ratio"] for k in kernels.values()]
+    return {
+        "kernels": kernels,
+        "added": sorted(set(head_rows) - set(base_rows)),
+        "removed": sorted(set(base_rows) - set(head_rows)),
+        "skipped": skipped,
+        "median_ratio": (round(_median(ratios), 4) if ratios else None),
+        "regressions": sorted(n for n, k in kernels.items()
+                              if k["flag"] == "regression"),
+    }
+
+
+def compare(paths: list[str], table: str = DEFAULT_TABLE,
+            key: str = "kernel", metric: str = "auto",
+            threshold: float = DEFAULT_THRESHOLD) -> dict[str, Any]:
+    """Full report across ≥2 artifacts (adjacent-pairwise, in order)."""
+    if len(paths) < 2:
+        raise BenchCompareError("need at least two artifacts to compare")
+    indexed = [(p, index_rows(load_artifact(p), table, key, path=p))
+               for p in paths]
+    pairs = []
+    for (bp, brows), (hp, hrows) in zip(indexed, indexed[1:]):
+        pair = compare_pair(brows, hrows, metric, threshold)
+        pair.update(base=bp, head=hp)
+        pairs.append(pair)
+    return {
+        "artifacts": list(paths),
+        "table": table,
+        "metric": metric,
+        "threshold": threshold,
+        "pairs": pairs,
+        "regressions": sorted({f"{p['head']}:{n}" for p in pairs
+                               for n in p["regressions"]}),
+    }
+
+
+def format_text(report: dict[str, Any]) -> str:
+    """Human-readable per-kernel ratio tables, one block per pair."""
+    lines = [f"# bench_compare: table={report['table']} "
+             f"metric={report['metric']} threshold={report['threshold']}"]
+    for pair in report["pairs"]:
+        lines.append(f"\n## {pair['base']} -> {pair['head']}")
+        lines.append(f"{'kernel':34s} {'base':>12s} {'head':>12s} "
+                     f"{'ratio':>8s}  flag")
+        for name, k in pair["kernels"].items():
+            lines.append(f"{name:34s} {k['base']:12.6g} {k['head']:12.6g} "
+                         f"{k['ratio']:8.3f}  {k['flag']}")
+        if pair["median_ratio"] is not None:
+            lines.append(f"{'median':34s} {'':12s} {'':12s} "
+                         f"{pair['median_ratio']:8.3f}")
+        for label in ("added", "removed", "skipped"):
+            if pair[label]:
+                lines.append(f"{label}: {', '.join(pair[label])}")
+    regs = report["regressions"]
+    lines.append(f"\nregressions (> {report['threshold']}x): "
+                 + (", ".join(regs) if regs else "none"))
+    return "\n".join(lines)
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff per-kernel perf across BENCH_*.json artifacts")
+    ap.add_argument("artifacts", nargs="+",
+                    help="two or more BENCH_*.json paths, oldest first")
+    ap.add_argument("--table", default=DEFAULT_TABLE)
+    ap.add_argument("--key", default="kernel",
+                    help="row field identifying a kernel")
+    ap.add_argument("--metric", default="auto",
+                    help="'auto' (paired_median_ratio, else seconds) or "
+                         "an explicit row field")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="flag head/base ratios above this as regressions")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the structured report")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 if any pair flags a regression")
+    args = ap.parse_args(argv)
+
+    try:
+        report = compare(args.artifacts, table=args.table, key=args.key,
+                         metric=args.metric, threshold=args.threshold)
+    except BenchCompareError as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 2
+    print(format_text(report))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if args.fail_on_regression and report["regressions"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
