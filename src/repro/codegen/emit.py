@@ -998,6 +998,11 @@ def make_kernel_op(name: str,
     outside jit — identical plumbing to the hand-written ``ops.py``
     wrappers, but the kernel itself is derived from the spec.
 
+    Execution is *guarded* (``common.guarded_run``): a config that fails
+    to lower or execute is classified, quarantined in the tune cache,
+    and the call degrades alt-config → interpret → ref, emitting a
+    ``kernel.fallback`` event instead of taking the caller down.
+
     Classification and the Traffic signature are pure in the input
     shapes/dtypes and memoized, so a hot-loop call costs the same
     Python-side work as a hand ops wrapper."""
@@ -1030,7 +1035,9 @@ def make_kernel_op(name: str,
         cfg = common.resolve_config(
             name, lead.shape, lead.dtype, config, rows, default,
             traffic=(None if config is not None else traffic), mode=mode)
-        return _run(tuple(inputs), cfg, mode)
+        return common.guarded_run(
+            name, lambda c, m: _run(tuple(inputs), c, m), cfg, mode,
+            shape=lead.shape, dtype=lead.dtype, rows=rows, traffic=traffic)
 
     op.__name__ = name
     op.__qualname__ = name

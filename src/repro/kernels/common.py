@@ -1,4 +1,7 @@
-"""Shared kernel utilities: mode dispatch, padding, divisibility."""
+"""Shared kernel utilities: mode dispatch, padding, divisibility, and
+the guarded-dispatch fallback chain (classify a kernel failure →
+degrade alt-config → interpret → ref, quarantining the failing config
+in the tune cache)."""
 from __future__ import annotations
 
 import functools
@@ -9,13 +12,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.core.striding import (StridingConfig, choose_block,
-                                 pad_to_multiple)
+from repro.core.striding import (SINGLE_STRIDED, StridingConfig,
+                                 choose_block, pad_to_multiple)
 
 __all__ = [
     "kernel_mode", "use_pallas", "interpret_mode",
     "pad_axis", "pad_to_multiple", "choose_block", "resolve_config",
     "reset_plan_memo", "example_input",
+    "classify_failure", "guarded_run",
 ]
 
 
@@ -142,9 +146,160 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
             if config is not None:
                 source = "planned"
     cfg = effective_config(config, rows, default)
+    if source != "explicit":
+        # a config the guarded fallback chain watched fail must never be
+        # re-resolved: the tuned source already skips quarantined entries
+        # (tunecache.config_for); this guards the planned/default sources
+        from repro.registry import tunecache
+        cache = tunecache.default_cache()
+        qkey = tunecache.cache_key(kernel, shape, dtype, mode=mode)
+        if cache.is_quarantined(qkey, cfg):
+            cfg = _next_unquarantined(cache, qkey, cfg, rows, default,
+                                      traffic)
+            source = "quarantine_alt"
+            obs.counter("kernel.quarantine_skip", kernel=kernel)
     if obs.enabled():
         obs.event("kernel.resolve", kernel=kernel, source=source,
                   d=cfg.stride_unroll, p=cfg.portion_unroll,
                   block_rows=cfg.block_rows, arrangement=cfg.arrangement,
                   mode=mode)
     return cfg
+
+
+def _next_unquarantined(cache, qkey: str, failed: StridingConfig,
+                        rows: int | None, default: StridingConfig,
+                        traffic) -> StridingConfig:
+    """Best non-quarantined alternative: next planner-ranked configs,
+    then the static default, then single-strided (D=1 streams one
+    contiguous run — the most conservative point in the space, kept as
+    the unconditional floor even if it too is quarantined: resolution
+    must return *something* and D=1 is the least likely to re-fail)."""
+    cands = []
+    if traffic is not None:
+        from repro.core.planner import rank_configs
+        try:
+            cands = [c for c, _bw, _cols in rank_configs(traffic)]
+        except ValueError:
+            cands = []
+    cands += [default, SINGLE_STRIDED]
+    for cand in cands:
+        cand = effective_config(cand, rows, cand)
+        if not cache.is_quarantined(qkey, cand):
+            return cand
+    return SINGLE_STRIDED
+
+
+# ------------------------------------------------- guarded dispatch
+
+# failure classes the guard distinguishes (recorded in the quarantine
+# entry and the kernel.fallback event):
+#   injected        — repro.runtime.faults fired at an injection point
+#   unsupported     — the emitter refused the (spec, config) combination
+#   resource        — VMEM/scratch/memory exhaustion in lowering/compile
+#   invalid_config  — config rejected by validation (ValueError & kin)
+#   backend         — XLA/runtime execution failure
+_RESOURCE_MARKERS = ("vmem", "out of memory", "resource exhausted",
+                     "scratch", "allocat")
+
+
+def classify_failure(exc: BaseException) -> str:
+    """Map a kernel lowering/execution failure onto a degradation class."""
+    from repro.runtime.faults import InjectedFault
+    if isinstance(exc, InjectedFault):
+        return "injected"
+    if isinstance(exc, NotImplementedError):
+        return "unsupported"
+    msg = str(exc).lower()
+    if any(m in msg for m in _RESOURCE_MARKERS):
+        return "resource"
+    if isinstance(exc, (ValueError, TypeError)):
+        return "invalid_config"
+    return "backend"
+
+
+def _fallback_tiers(cache, qkey: str, failed: StridingConfig,
+                    mode: str, rows: int | None, traffic):
+    """The degradation chain after ``failed`` crashed in ``mode``:
+    next-ranked planner configs (same mode) → interpret → ref oracle."""
+    tiers = []
+    if traffic is not None:
+        from repro.core.planner import rank_configs
+        try:
+            ranked = [c for c, _bw, _cols in rank_configs(traffic)]
+        except ValueError:
+            ranked = []
+        seen = {(failed.stride_unroll, failed.portion_unroll,
+                 failed.block_rows)}
+        for cand in ranked:
+            cand = effective_config(cand, rows, cand)
+            key = (cand.stride_unroll, cand.portion_unroll,
+                   cand.block_rows)
+            if key in seen or cache.is_quarantined(qkey, cand):
+                continue
+            seen.add(key)
+            tiers.append(("alt_config", cand, mode))
+            if len(tiers) >= 2:
+                break
+    if mode == "pallas":
+        # interpret escapes backend/VMEM failures (the body runs in
+        # Python) while still exercising the generated lowering
+        tiers.append(("interpret", failed, "interpret"))
+    tiers.append(("ref", failed, "ref"))
+    return tiers
+
+
+def guarded_run(kernel: str, run, cfg: StridingConfig, mode: str, *,
+                shape, dtype, rows: int | None = None, traffic=None):
+    """Execute ``run(cfg, mode)`` behind the fallback chain.
+
+    On failure the error is classified (:func:`classify_failure`), the
+    failing config is quarantined in the tune cache under the same key
+    resolution uses (so it is never re-resolved), and the call degrades
+    down the chain — next-ranked planner config, interpret mode, ref
+    oracle — emitting one ``kernel.fallback`` event recording the
+    failure class and the tier that served the result.  ``ref`` mode has
+    no tier below it: a ref failure is an oracle bug and re-raises
+    untouched.
+
+    The ``lower`` fault-injection site fires here (non-ref modes), so
+    ``REPRO_FAULTS=lower:<kernel>`` forces any guarded kernel down the
+    chain deterministically.
+    """
+    from repro.runtime import faults
+
+    def attempt(c: StridingConfig, m: str):
+        if m != "ref":
+            faults.fire_if("lower", kernel)
+        return run(c, m)
+
+    try:
+        return attempt(cfg, mode)
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except Exception as exc:                 # noqa: BLE001 — classified below
+        if mode == "ref":
+            raise
+        failure = classify_failure(exc)
+        from repro.registry import tunecache
+        cache = tunecache.default_cache()
+        qkey = tunecache.cache_key(kernel, shape, dtype, mode=mode)
+        cache.quarantine(qkey, cfg, failure)
+        obs.counter("kernel.fallback.count", kernel=kernel)
+        for tier, tcfg, tmode in _fallback_tiers(cache, qkey, cfg, mode,
+                                                 rows, traffic):
+            try:
+                out = attempt(tcfg, tmode)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as exc2:        # noqa: BLE001 — keep degrading
+                if tier == "alt_config":
+                    cache.quarantine(qkey, tcfg, classify_failure(exc2))
+                continue
+            obs.event("kernel.fallback", kernel=kernel, failure=failure,
+                      tier=tier, from_mode=mode, to_mode=tmode,
+                      failed_d=cfg.stride_unroll,
+                      failed_p=cfg.portion_unroll,
+                      failed_block_rows=cfg.block_rows,
+                      d=tcfg.stride_unroll, p=tcfg.portion_unroll)
+            return out
+        raise exc

@@ -44,7 +44,7 @@ from repro.kernels.adamw.specs import adamw_spec
 from repro.kernels.common import example_input as _rand
 from repro.kernels.decode_attn import ref as _da_ref
 from repro.kernels.decode_attn.specs import decode_spec as _decode_spec
-from repro.kernels.gen.polybench import _mode, _resolve
+from repro.kernels.gen.polybench import _guarded, _mode, _resolve
 from repro.kernels.rmsnorm import ref as _rms_ref
 from repro.kernels.rmsnorm.specs import rmsnorm_spec
 from repro.registry.base import KernelSpec, register
@@ -74,11 +74,14 @@ def decode_attn_gen(q, kc, vc, config=None, mode=None, with_lse=False):
     kernel's native second output."""
     mode = _mode(mode)
     s, hkv, dh = kc.shape[1], kc.shape[2], kc.shape[3]
+    traffic = Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype, read_arrays=2)
     cfg = _resolve("decode_attn_gen", kc, config, mode, s,
-                   StridingConfig(4, 1),
-                   Traffic(rows=s, cols=hkv * dh, dtype=kc.dtype,
-                           read_arrays=2))
-    out, lse = _decode_run(q, kc, vc, hkv=hkv, dh=dh, config=cfg, mode=mode)
+                   StridingConfig(4, 1), traffic)
+    out, lse = _guarded(
+        "decode_attn_gen",
+        lambda c, km: _decode_run(q, kc, vc, hkv=hkv, dh=dh, config=c,
+                                  mode=km),
+        kc, cfg, mode, s, traffic)
     return (out, lse) if with_lse else out
 
 
@@ -100,12 +103,15 @@ def rmsnorm_gen(x, w, eps=1e-6, config=None, mode=None,
     t = 1
     for s in x.shape[:-1]:
         t *= s
+    traffic = Traffic(rows=max(t, 1), cols=x.shape[-1], dtype=x.dtype,
+                      read_arrays=1, write_arrays=1,
+                      resident_bytes=x.shape[-1] * 4)
     cfg = _resolve("rmsnorm_gen", x, config, mode, max(t, 1),
-                   StridingConfig(4, 1),
-                   Traffic(rows=max(t, 1), cols=x.shape[-1], dtype=x.dtype,
-                           read_arrays=1, write_arrays=1,
-                           resident_bytes=x.shape[-1] * 4))
-    out, inv = _rms_run(x, w, eps, config=cfg, mode=mode)
+                   StridingConfig(4, 1), traffic)
+    out, inv = _guarded(
+        "rmsnorm_gen",
+        lambda c, km: _rms_run(x, w, eps, config=c, mode=km),
+        x, cfg, mode, max(t, 1), traffic)
     return (out, inv) if with_inv_rms else out
 
 
@@ -127,12 +133,15 @@ def adamw_update_gen(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
     rows, cols = _adamw_blocking(max(n, 1))
     # rows=None: pad+crop inside the emitter makes any D valid, no
     # divisibility clamp against the tile count
+    traffic = Traffic(rows=rows, cols=cols, dtype=p.dtype,
+                      read_arrays=4, write_arrays=3)
     cfg = _resolve("adamw_update_gen", p, config, mode, None,
-                   _ADAMW_DEFAULT,
-                   Traffic(rows=rows, cols=cols, dtype=p.dtype,
-                           read_arrays=4, write_arrays=3))
-    return _adamw(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2,
-                  config=cfg, mode=mode)
+                   _ADAMW_DEFAULT, traffic)
+    return _guarded(
+        "adamw_update_gen",
+        lambda c, km: _adamw(p, g, m, v, lr, b1, b2, eps, wd, bc1, bc2,
+                             config=c, mode=km),
+        p, cfg, mode, None, traffic)
 
 
 # ---------------------------------------------------------- registry

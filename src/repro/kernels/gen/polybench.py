@@ -76,6 +76,16 @@ def _mode(mode):
     return mode
 
 
+def _guarded(kernel: str, run, lead, cfg, mode, rows, traffic):
+    """Composite wrappers dispatch through the same guarded fallback
+    chain as ``make_kernel_op`` kernels: a failed lowering degrades
+    alt-config → interpret → ref and quarantines the failing config
+    (see ``common.guarded_run``)."""
+    from repro.kernels import common
+    return common.guarded_run(kernel, run, cfg, mode, shape=lead.shape,
+                              dtype=lead.dtype, rows=rows, traffic=traffic)
+
+
 # ---------------------------------------------------------------- bicg
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
@@ -88,9 +98,12 @@ def bicg_gen(a, r, p, config=None, mode=None):
     """q = A p ; s = Aᵀ r (generated; two specs fused in one program)."""
     mode = _mode(mode)
     m, n = a.shape
+    traffic = Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2)
     cfg = _resolve("bicg_gen", a, config, mode, m, StridingConfig(4, 2),
-                   Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2))
-    return _bicg_run(a, r, p, config=cfg, mode=mode)
+                   traffic)
+    return _guarded("bicg_gen",
+                    lambda c, km: _bicg_run(a, r, p, config=c, mode=km),
+                    a, cfg, mode, m, traffic)
 
 
 # -------------------------------------------------------------- gemver
@@ -112,10 +125,13 @@ def gemver_mxv1_gen(a, y, x, beta, config=None, mode=None):
     """x = x + β Aᵀ y (generated core + affine update, one program)."""
     mode = _mode(mode)
     m, n = a.shape
+    traffic = Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2)
     cfg = _resolve("gemver_mxv1_gen", a, config, mode, m,
-                   StridingConfig(4, 2),
-                   Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2))
-    return _mxv1_run(a, y, x, beta, config=cfg, mode=mode)
+                   StridingConfig(4, 2), traffic)
+    return _guarded(
+        "gemver_mxv1_gen",
+        lambda c, km: _mxv1_run(a, y, x, beta, config=c, mode=km),
+        a, cfg, mode, m, traffic)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
@@ -131,10 +147,13 @@ def gemver_mxv1_sum_gen(a, y, x, z, beta, config=None, mode=None):
     mxv1 and sum steps traversed x twice.  Returns (x', ssum)."""
     mode = _mode(mode)
     m, n = a.shape
+    traffic = Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2)
     cfg = _resolve("gemver_mxv1_sum_gen", a, config, mode, m,
-                   StridingConfig(4, 2),
-                   Traffic(rows=m, cols=n, dtype=a.dtype, read_arrays=2))
-    return _mxv1_sum_run(a, y, x, z, beta, config=cfg, mode=mode)
+                   StridingConfig(4, 2), traffic)
+    return _guarded(
+        "gemver_mxv1_sum_gen",
+        lambda c, km: _mxv1_sum_run(a, y, x, z, beta, config=c, mode=km),
+        a, cfg, mode, m, traffic)
 
 
 # ------------------------------------------------------------- conv3x3
@@ -149,11 +168,13 @@ def conv3x3_gen(x, w, config=None, mode=None):
     """3x3 correlation stencil (generated; weights lowered as scalars)."""
     mode = _mode(mode)
     h_out = max(x.shape[0] - 2, 1)
+    traffic = Traffic(rows=h_out, cols=max(x.shape[1] - 2, 1),
+                      dtype=x.dtype, read_arrays=3, write_arrays=1)
     cfg = _resolve("conv3x3_gen", x, config, mode, h_out,
-                   StridingConfig(4, 1),
-                   Traffic(rows=h_out, cols=max(x.shape[1] - 2, 1),
-                           dtype=x.dtype, read_arrays=3, write_arrays=1))
-    return _conv_run(x, w, config=cfg, mode=mode)
+                   StridingConfig(4, 1), traffic)
+    return _guarded("conv3x3_gen",
+                    lambda c, km: _conv_run(x, w, config=c, mode=km),
+                    x, cfg, mode, h_out, traffic)
 
 
 # ------------------------------------------------------------- doitgen

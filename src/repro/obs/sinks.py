@@ -45,11 +45,24 @@ class JsonlSink:
             os.makedirs(d, exist_ok=True)
         self._lock = threading.Lock()
         self._f = open(path, "a", buffering=1)
+        self.dropped = 0     # records lost to IO failures (see record)
 
     def record(self, ev: core.Event) -> None:
         line = json.dumps(ev.to_dict(), default=str)
-        with self._lock:
-            self._f.write(line + "\n")
+        from repro.runtime import faults
+        try:
+            if faults.enabled():
+                # probed outside the sink lock: the fired rule's audit
+                # event re-enters record() on this same sink
+                faults.fire_if("sink_io", self.path)
+            with self._lock:
+                self._f.write(line + "\n")
+        except (OSError, faults.InjectedFault):
+            # telemetry must never take the workload down: swallow the
+            # write failure and count it in-object (a failing sink
+            # can't report its own failure through itself)
+            with self._lock:
+                self.dropped += 1
 
     def close(self) -> None:
         with self._lock:
@@ -57,15 +70,33 @@ class JsonlSink:
                 self._f.close()
 
 
-def read_jsonl(path: str) -> list[dict]:
-    """Parse a JSONL telemetry file back into record dicts."""
+def read_jsonl(path: str, strict: bool = False) -> list[dict]:
+    """Parse a JSONL telemetry file back into record dicts.
+
+    A process killed mid-write leaves a truncated final line; by default
+    malformed lines are skipped (counted in ``read_jsonl.skipped``, a
+    function attribute reset per call) so a torn telemetry file is still
+    analysable.  ``strict=True`` restores the raise-on-bad-line
+    behaviour.
+    """
     out = []
+    skipped = 0
     with open(path) as f:
         for line in f:
             line = line.strip()
-            if line:
+            if not line:
+                continue
+            try:
                 out.append(json.loads(line))
+            except json.JSONDecodeError:
+                if strict:
+                    raise
+                skipped += 1
+    read_jsonl.skipped = skipped
     return out
+
+
+read_jsonl.skipped = 0
 
 
 def configure_from_env(env: Optional[str] = None) -> None:

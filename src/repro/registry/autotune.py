@@ -26,7 +26,8 @@ from repro.core.planner import rank_configs, traffic_bytes
 from repro.core.striding import StridingConfig, valid_stride_unrolls
 from repro.registry import base, tunecache
 
-__all__ = ["TuneResult", "tune", "tune_all", "candidate_configs"]
+__all__ = ["TuneResult", "TrialTimeout", "tune", "tune_all",
+           "candidate_configs"]
 
 # fallback sweep when a spec has no Traffic signature (or the planner
 # rejects every point): the paper's low-D corner of the space
@@ -130,6 +131,22 @@ def _timing_knobs(iters: int, warmup: int) -> tuple[int, int]:
     return max(iters, 1), max(warmup, 0)
 
 
+def _trial_timeout(timeout_s: Optional[float]) -> Optional[float]:
+    """Per-trial wall-clock budget (env: ``REPRO_TUNE_TRIAL_TIMEOUT_S``).
+
+    A single candidate call exceeding the budget abandons that candidate
+    (remaining iters skipped) rather than letting one pathological
+    config stall the whole sweep.  None/0 = unbounded."""
+    env = os.environ.get("REPRO_TUNE_TRIAL_TIMEOUT_S")
+    if env:
+        timeout_s = float(env)
+    return timeout_s if timeout_s and timeout_s > 0 else None
+
+
+class TrialTimeout(RuntimeError):
+    """A single autotune measurement exceeded the per-trial budget."""
+
+
 def _median(ts: Sequence[float]) -> float:
     """True median: even sample counts average the two middle samples
     (``ts[len // 2]`` alone takes the upper one — a half-sample bias)."""
@@ -141,20 +158,54 @@ def _median(ts: Sequence[float]) -> float:
     return 0.5 * (s[mid - 1] + s[mid])
 
 
+def _reject_outliers(ts: Sequence[float], k: float = 5.0,
+                     ) -> tuple[list[float], int]:
+    """Drop samples farther than ``k`` median-absolute-deviations from
+    the median (a GC pause or an interfering process inflating one
+    sample must not move the winner).  Returns (kept, n_rejected); if
+    every sample would be rejected (degenerate MAD) the originals are
+    kept unchanged."""
+    med = _median(ts)
+    mad = _median([abs(t - med) for t in ts])
+    if mad <= 0.0:
+        return list(ts), 0
+    kept = [t for t in ts if abs(t - med) <= k * mad]
+    if not kept:
+        return list(ts), 0
+    return kept, len(ts) - len(kept)
+
+
 def _measure(spec: base.KernelSpec, inputs: tuple, cfg: StridingConfig,
-             mode: str, iters: int, warmup: int) -> float:
-    """Median-of-``iters`` wall-clock seconds after ``warmup`` calls."""
+             mode: str, iters: int, warmup: int,
+             timeout_s: Optional[float] = None) -> tuple[float, int]:
+    """Median-of-``iters`` wall-clock seconds after ``warmup`` calls,
+    with MAD outlier rejection.  Returns (median, n_outliers_rejected);
+    raises :class:`TrialTimeout` when any single call exceeds
+    ``timeout_s``.  Fault sites: ``tune_trial`` (candidate crash),
+    ``tune_slow`` (per-call stall), ``tune_outlier`` (one inflated
+    sample, which the MAD filter must absorb)."""
+    from repro.runtime import faults
+
+    faults.fire_if("tune_trial", spec.name)
+
     def call():
-        return jax.block_until_ready(spec.run(inputs, cfg, mode))
+        t0 = time.perf_counter()
+        faults.sleep_if("tune_slow", spec.name, seconds=0.05)
+        jax.block_until_ready(spec.run(inputs, cfg, mode))
+        dt = time.perf_counter() - t0
+        if timeout_s is not None and dt > timeout_s:
+            raise TrialTimeout(
+                f"{spec.name} candidate d={cfg.stride_unroll} "
+                f"p={cfg.portion_unroll}: {dt:.3f}s > {timeout_s:.3f}s")
+        return dt
 
     for _ in range(warmup):
         call()
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        call()
-        ts.append(time.perf_counter() - t0)
-    return _median(ts)
+    ts = [call() for _ in range(iters)]
+    if faults.should_fire("tune_outlier", spec.name):
+        ts[0] = max(ts) * 100.0 + 1.0
+    kept, rejected = _reject_outliers(ts)
+    return _median(kept), rejected
 
 
 def _problem_bytes(spec: base.KernelSpec, sizes: Mapping[str, int],
@@ -196,7 +247,8 @@ def tune(kernel: str | base.KernelSpec,
          max_candidates: int = 8,
          iters: int = 5,
          warmup: int = 2,
-         timestamp: Optional[float] = None) -> TuneResult:
+         timestamp: Optional[float] = None,
+         trial_timeout_s: Optional[float] = None) -> TuneResult:
     """Measured sweep for one kernel; cached on disk, hit on re-tune.
 
     ``iters``/``warmup`` (env: ``REPRO_TUNE_ITERS``/``REPRO_TUNE_WARMUP``)
@@ -211,6 +263,15 @@ def tune(kernel: str | base.KernelSpec,
     emits a ``tune.trial`` event (config, median seconds, planner
     ``predicted_bw``, measured GiB/s from the spec's Traffic bytes) and
     cache hits/misses tick ``tune.cache.hit``/``.miss``.
+
+    The sweep is self-healing: a crashing candidate is quarantined and
+    skipped (``tune.candidate_failed``), one exceeding the per-trial
+    budget (``trial_timeout_s`` / ``REPRO_TUNE_TRIAL_TIMEOUT_S``) is
+    abandoned (``tune.trial_timeout``), timing samples beyond 5 MADs of
+    the median are rejected (``tune.outlier_rejected``), and a cache hit
+    whose provenance records a different jax version is re-measured
+    (``tune.cache.stale``).  If every candidate fails the sweep returns
+    the single-strided floor without writing the cache.
     """
     spec = kernel if isinstance(kernel, base.KernelSpec) else base.get(kernel)
     sizes = dict(sizes if sizes is not None else spec.default_sizes)
@@ -222,6 +283,10 @@ def tune(kernel: str | base.KernelSpec,
 
     if not force:
         entry = cache.lookup(key)
+        if entry is not None and not tunecache.entry_is_fresh(entry):
+            # provenance says another jax version measured this: re-tune
+            obs.counter("tune.cache.stale", kernel=spec.name, mode=mode)
+            entry = None
         if entry is not None:
             obs.counter("tune.cache.hit", kernel=spec.name, mode=mode)
             result = TuneResult(
@@ -247,10 +312,36 @@ def tune(kernel: str | base.KernelSpec,
     obs.counter("tune.cache.miss", kernel=spec.name, mode=mode)
     inputs = spec.make_inputs(sizes, dtype)
     iters, warmup = _timing_knobs(iters, warmup)
+    timeout_s = _trial_timeout(trial_timeout_s)
     nbytes = _problem_bytes(spec, sizes, dtype)
     trials = []
     for cfg, bw in candidate_configs(spec, sizes, dtype, max_candidates):
-        sec = _measure(spec, inputs, cfg, mode, iters, warmup)
+        if cache.is_quarantined(key, cfg):
+            # a config the guarded fallback chain watched fail must not
+            # be re-measured (let alone win the sweep)
+            obs.counter("tune.candidate_quarantined", kernel=spec.name)
+            continue
+        try:
+            sec, n_outliers = _measure(spec, inputs, cfg, mode, iters,
+                                       warmup, timeout_s)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except TrialTimeout:
+            obs.counter("tune.trial_timeout", kernel=spec.name,
+                        d=cfg.stride_unroll, p=cfg.portion_unroll)
+            continue
+        except Exception as exc:             # noqa: BLE001 — classified
+            from repro.kernels.common import classify_failure
+            failure = classify_failure(exc)
+            cache.quarantine(key, cfg, failure)
+            obs.counter("tune.candidate_failed", kernel=spec.name,
+                        failure=failure, d=cfg.stride_unroll,
+                        p=cfg.portion_unroll)
+            continue
+        if n_outliers:
+            obs.counter("tune.outlier_rejected", float(n_outliers),
+                        kernel=spec.name, d=cfg.stride_unroll,
+                        p=cfg.portion_unroll)
         trials.append((cfg, sec, bw))
         if obs.enabled():
             obs.event("tune.trial", kernel=spec.name,
@@ -260,6 +351,14 @@ def tune(kernel: str | base.KernelSpec,
                       measured_gibs=(nbytes / sec / 2**30
                                      if nbytes and sec > 0 else None),
                       mode=mode)
+    if not trials:
+        # every candidate crashed, timed out, or was quarantined: fall
+        # back to the single-strided floor without poisoning the cache
+        from repro.core.striding import SINGLE_STRIDED
+        obs.event("tune.exhausted", kernel=spec.name, key=key, mode=mode)
+        return TuneResult(kernel=spec.name, key=key,
+                          config=SINGLE_STRIDED, seconds=float("inf"),
+                          mode=mode, from_cache=False)
     trials.sort(key=lambda t: t[1])
     best_cfg, best_sec, best_bw = trials[0]
     cache.store(key, {

@@ -6,14 +6,36 @@ the persistence layer for those measurements.  Entries are keyed by
 
     kernel name | problem shape | dtype | jax backend | kernel mode
 
-and stored as one JSON file so a tuned machine resolves kernels via the
-measured best rather than the analytic DMA-model prediction.
+and stored in one schema-versioned JSON file so a tuned machine resolves
+kernels via the measured best rather than the analytic DMA-model
+prediction.
 
 Location: ``$REPRO_TUNE_CACHE`` if set, else
-``~/.cache/repro/tune_cache.json``.  The file maps key → entry:
+``~/.cache/repro/tune_cache.json``.  The file layout (schema 2)::
 
-    {"d": 4, "p": 2, "lookahead": 2, "arrangement": "grouped",
-     "seconds": 1.2e-4, "predicted_bw": 8.1e11, "source": "autotune"}
+    {"schema": 2,
+     "entries":    {key: {"d": 4, "p": 2, "lookahead": 2, ...}},
+     "quarantine": {key: {"4|2|0": {"reason": "resource", "count": 1}}}}
+
+A legacy flat ``{key: entry}`` file (schema 1) is migrated in memory on
+load and rewritten as schema 2 on the next store.
+
+Self-healing (this cache feeds the learned planner, so bad data must be
+*detected*, not absorbed):
+
+  * **torn/corrupt files** — a file that fails to parse is moved aside
+    to ``<path>.corrupt`` (one ``os.replace``, never deleted: the
+    sidecar is the forensic artifact) and the cache rebuilds empty
+    instead of crashing resolve/tune;
+  * **atomic writes** — every save goes through write-tmp + ``fsync`` +
+    ``os.replace`` so a concurrent or interrupted tuner can never tear
+    the file a reader sees;
+  * **stale entries** — an entry whose provenance records a different
+    ``jax_version`` than the running process is rejected as stale
+    (lowering/runtime changed under it) and treated as a miss;
+  * **quarantine** — configs the guarded dispatch chain watched fail
+    (``kernels.common.guarded_run``) are recorded per cache key and
+    never re-resolved, by ``config_for`` or the autotune sweep.
 
 This module deliberately imports no kernel code so ``repro.kernels.*``
 wrappers can consult it without an import cycle.
@@ -24,7 +46,7 @@ import json
 import os
 import tempfile
 import threading
-from typing import Any, Optional
+from typing import Any, Mapping, Optional
 
 import jax
 
@@ -32,9 +54,12 @@ from repro import obs
 from repro.core.striding import StridingConfig
 
 __all__ = ["TuneCache", "default_cache", "cache_key", "cached_config",
-           "reset_default_cache"]
+           "reset_default_cache", "config_key", "entry_is_fresh",
+           "SCHEMA_VERSION"]
 
 _ENV = "REPRO_TUNE_CACHE"
+
+SCHEMA_VERSION = 2
 
 
 def default_path() -> str:
@@ -57,8 +82,43 @@ def cache_key(kernel: str, shape, dtype, backend: Optional[str] = None,
     return key
 
 
+def config_key(config: StridingConfig) -> str:
+    """Stable identity of one config point for the quarantine store.
+
+    ``lookahead``/``arrangement`` are folded in only when non-default so
+    the common (D, P, block_rows) points stay short and greppable."""
+    key = (f"{config.stride_unroll}|{config.portion_unroll}"
+           f"|{config.block_rows}")
+    if config.lookahead != 2 or config.arrangement != "grouped":
+        key += f"|{config.lookahead}|{config.arrangement}"
+    return key
+
+
+def entry_is_fresh(entry: Mapping[str, Any]) -> bool:
+    """Provenance-based staleness: an entry measured under a different
+    jax version predates the current lowering/runtime and must not be
+    trusted over a re-tune.  Entries without provenance (hand-written
+    test fixtures, pre-PR-7 caches) are accepted — staleness needs
+    positive evidence."""
+    prov = entry.get("provenance")
+    if not isinstance(prov, dict):
+        return True
+    ver = prov.get("jax_version")
+    return ver is None or ver == jax.__version__
+
+
+def _entry_config(entry: Mapping[str, Any]) -> StridingConfig:
+    return StridingConfig(
+        stride_unroll=int(entry["d"]),
+        portion_unroll=int(entry["p"]),
+        lookahead=int(entry.get("lookahead", 2)),
+        arrangement=entry.get("arrangement", "grouped"),
+        block_rows=int(entry.get("block_rows", 0)))
+
+
 class TuneCache:
-    """JSON-backed measured-config store (thread-safe, lazily loaded)."""
+    """JSON-backed measured-config store (thread-safe, lazily loaded,
+    self-healing — see module doc)."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_path()
@@ -67,18 +127,49 @@ class TuneCache:
         self._mtime: float = -1.0
 
     # ------------------------------------------------------------ load/save
+    def _quarantine_file(self) -> None:
+        """Move the unparseable file aside (``<path>.corrupt`` sidecar)
+        so the rebuild never silently destroys the forensic evidence of
+        what tore it."""
+        sidecar = self.path + ".corrupt"
+        try:
+            os.replace(self.path, sidecar)
+        except OSError:
+            sidecar = None
+        obs.counter("tunecache.corrupt_quarantined")
+        obs.event("tunecache.corrupt", path=self.path, sidecar=sidecar)
+
     def _load(self) -> dict[str, dict[str, Any]]:
+        from repro.runtime import faults
         try:
             mtime = os.path.getmtime(self.path)
         except OSError:
-            self._data, self._mtime = {}, -1.0
+            self._data = {"entries": {}, "quarantine": {}}
+            self._mtime = -1.0
             return self._data
         if self._data is None or mtime != self._mtime:
             try:
                 with open(self.path) as f:
-                    self._data = json.load(f)
-            except (OSError, json.JSONDecodeError):
-                self._data = {}
+                    raw = f.read()
+                if faults.should_fire("cache_corrupt", self.path):
+                    raw = raw[: len(raw) // 2]     # simulate a torn write
+                parsed = json.loads(raw)
+                if not isinstance(parsed, dict):
+                    raise json.JSONDecodeError("top-level object", raw, 0)
+            except OSError:
+                parsed = {}
+            except json.JSONDecodeError:
+                # torn or corrupted file: quarantine + rebuild empty
+                self._quarantine_file()
+                parsed = {}
+            if "schema" in parsed:
+                self._data = {
+                    "entries": dict(parsed.get("entries", {})),
+                    "quarantine": dict(parsed.get("quarantine", {})),
+                }
+            else:
+                # schema 1: a flat {key: entry} map, no quarantine
+                self._data = {"entries": parsed, "quarantine": {}}
             self._mtime = mtime
         return self._data
 
@@ -86,11 +177,25 @@ class TuneCache:
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        # atomic replace so concurrent readers never see a torn file
+        payload = {"schema": SCHEMA_VERSION,
+                   "entries": self._data["entries"],
+                   "quarantine": self._data["quarantine"]}
+        # atomic + durable replace so concurrent/interrupted tuners can
+        # never tear the file a reader sees: the tmp is fully written and
+        # fsync'd before the rename makes it visible
         fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(self._data, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         try:
             self._mtime = os.path.getmtime(self.path)
         except OSError:
@@ -99,18 +204,51 @@ class TuneCache:
     # ------------------------------------------------------------- access
     def lookup(self, key: str) -> Optional[dict[str, Any]]:
         with self._lock:
-            return self._load().get(key)
+            return self._load()["entries"].get(key)
 
     def store(self, key: str, entry: dict[str, Any]) -> None:
         with self._lock:
             data = self._load()
-            data[key] = entry
+            data["entries"][key] = entry
             self._save()
 
     def entries(self) -> dict[str, dict[str, Any]]:
         with self._lock:
-            return dict(self._load())
+            return dict(self._load()["entries"])
 
+    # --------------------------------------------------------- quarantine
+    def quarantine(self, key: str, config: StridingConfig,
+                   reason: str) -> None:
+        """Record a config that failed under this key so it is never
+        re-resolved (by ``config_for`` or the autotune sweep)."""
+        ck = config_key(config)
+        with self._lock:
+            data = self._load()
+            q = data["quarantine"].setdefault(key, {})
+            rec = q.get(ck)
+            if rec is None:
+                q[ck] = {"reason": reason, "count": 1,
+                         "d": config.stride_unroll,
+                         "p": config.portion_unroll,
+                         "block_rows": config.block_rows}
+            else:
+                rec["count"] = int(rec.get("count", 0)) + 1
+                rec["reason"] = reason
+            self._save()
+        obs.event("tunecache.quarantine", key=key, config=ck,
+                  reason=reason)
+
+    def is_quarantined(self, key: str, config: StridingConfig) -> bool:
+        with self._lock:
+            q = self._load()["quarantine"].get(key)
+        return bool(q) and config_key(config) in q
+
+    def quarantined(self, key: str) -> dict[str, dict[str, Any]]:
+        """{config_key: record} for one cache key (empty when clean)."""
+        with self._lock:
+            return dict(self._load()["quarantine"].get(key, {}))
+
+    # ------------------------------------------------------------ resolve
     def config_for(self, kernel: str, shape, dtype,
                    mode: Optional[str] = None) -> Optional[StridingConfig]:
         """Tuned StridingConfig for a problem, or None on a cache miss.
@@ -121,29 +259,44 @@ class TuneCache:
         could never exist — a config measured in one mode now serves
         lookups from the other instead of silently missing.
 
+        An entry is skipped (treated as a miss) when it is *stale*
+        (``entry_is_fresh``: provenance records a different jax version)
+        or when its config is *quarantined* under the lookup key (the
+        guarded dispatch chain watched it fail).
+
         Telemetry: ticks ``tunecache.hit`` (mode-exact),
-        ``tunecache.sibling_fallback`` (served by another mode's entry)
-        or ``tunecache.miss``.
+        ``tunecache.sibling_fallback`` (served by another mode's entry),
+        ``tunecache.stale_rejected`` / ``tunecache.quarantined_skip``
+        (entry present but unusable) or ``tunecache.miss``.
         """
         tried = []
         for m in (mode, "pallas", "interpret"):
             if m is None or m in tried:
                 continue
             tried.append(m)
-            entry = self.lookup(cache_key(kernel, shape, dtype, mode=m))
-            if entry is not None:
-                if obs.enabled():
-                    if m == mode or mode is None:
-                        obs.counter("tunecache.hit", kernel=kernel, mode=m)
-                    else:
-                        obs.counter("tunecache.sibling_fallback",
-                                    kernel=kernel, mode=mode, served_by=m)
-                return StridingConfig(
-                    stride_unroll=int(entry["d"]),
-                    portion_unroll=int(entry["p"]),
-                    lookahead=int(entry.get("lookahead", 2)),
-                    arrangement=entry.get("arrangement", "grouped"),
-                    block_rows=int(entry.get("block_rows", 0)))
+            key = cache_key(kernel, shape, dtype, mode=m)
+            entry = self.lookup(key)
+            if entry is None:
+                continue
+            if not entry_is_fresh(entry):
+                obs.counter("tunecache.stale_rejected", kernel=kernel,
+                            mode=m)
+                continue
+            cfg = _entry_config(entry)
+            # quarantine is checked against the MODE the caller will run
+            # in — that is where the config failed and must not return
+            qkey = cache_key(kernel, shape, dtype, mode=mode or m)
+            if self.is_quarantined(qkey, cfg):
+                obs.counter("tunecache.quarantined_skip", kernel=kernel,
+                            mode=m)
+                continue
+            if obs.enabled():
+                if m == mode or mode is None:
+                    obs.counter("tunecache.hit", kernel=kernel, mode=m)
+                else:
+                    obs.counter("tunecache.sibling_fallback",
+                                kernel=kernel, mode=mode, served_by=m)
+            return cfg
         obs.counter("tunecache.miss", kernel=kernel, mode=mode)
         return None
 

@@ -1,6 +1,22 @@
-from repro.runtime.elastic import plan_mesh, remesh_state
+"""Runtime resilience: fault injection, straggler/heartbeat machinery,
+elastic re-meshing.
+
+Submodules are imported lazily (PEP 562): ``repro.runtime.faults`` is
+consulted from low-level layers (tune cache, obs sinks, op dispatch)
+whose import must not drag in the elastic/mesh stack.
+"""
 from repro.runtime.fault_tolerance import (HeartbeatRegistry, StepMonitor,
                                            RestartPolicy)
 
 __all__ = ["StepMonitor", "HeartbeatRegistry", "RestartPolicy",
-           "plan_mesh", "remesh_state"]
+           "plan_mesh", "remesh_state", "faults"]
+
+
+def __getattr__(name):
+    import importlib
+    if name in ("plan_mesh", "remesh_state"):
+        return getattr(importlib.import_module("repro.runtime.elastic"),
+                       name)
+    if name == "faults":
+        return importlib.import_module("repro.runtime.faults")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

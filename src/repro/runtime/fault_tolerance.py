@@ -31,8 +31,19 @@ class StepMonitor:
 
     @staticmethod
     def _median(xs) -> float:
+        """True median: even windows average the two middle samples
+        (``s[len // 2]`` alone takes the upper one — the same systematic
+        upward bias autotune's ``_measure`` had, which inflates every
+        host's rolling median and masks real stragglers near the
+        threshold)."""
         s = sorted(xs)
-        return s[len(s) // 2] if s else 0.0
+        n = len(s)
+        if not n:
+            return 0.0
+        mid = n // 2
+        if n % 2:
+            return s[mid]
+        return 0.5 * (s[mid - 1] + s[mid])
 
     def medians(self) -> dict[str, float]:
         return {h: self._median(d) for h, d in self._t.items()}

@@ -1,0 +1,243 @@
+"""Deterministic fault injection for the robustness layer.
+
+Production failure modes — a (D, P, block_rows) that fails to lower, a
+torn tune-cache file, a hung decode step — are rare by construction, so
+the code paths that survive them rot unless they can be *forced*.  This
+module is the single switchboard: every guarded subsystem asks
+``should_fire(site, target)`` at its injection point and, when armed,
+fails exactly the way the real fault would (an exception of the real
+class, a corrupt read, an added delay).  Nothing here runs unless a
+fault plan is armed: the disarmed fast path is one module-global
+``is None`` check, same contract as ``repro.obs``.
+
+Arming, either way:
+
+  * environment — ``REPRO_FAULTS="site[:target][:count],..."``, read
+    once per process (call :func:`reset` after changing it in-process).
+    ``target`` filters by the caller-supplied target string (kernel
+    name, file path, …; substring match, empty = any); ``count`` caps
+    how many times the rule fires (default: unlimited).  Examples::
+
+        REPRO_FAULTS=lower:mxv_gen            # every mxv_gen lowering
+        REPRO_FAULTS=lower:mxv_gen:1          # only the first one
+        REPRO_FAULTS=cache_corrupt,sink_io:2  # two independent rules
+
+  * programmatic — ``with inject("lower:mxv_gen:1"):`` installs a plan
+    for the scope of the block (tests, the CI chaos leg).
+
+Sites wired in this repo (grep for ``faults.should_fire`` /
+``faults.sleep_if``):
+
+  ============== =====================================================
+  ``lower``      ``kernels.common.guarded_run`` — a non-ref kernel
+                 dispatch fails as if lowering crashed (raises
+                 :class:`InjectedFault`; exercises the fallback chain)
+  ``tune_trial`` one autotune candidate measurement raises
+  ``tune_slow``  one autotune candidate exceeds its trial timeout
+  ``tune_outlier`` one timing sample is inflated 100x (MAD rejection)
+  ``cache_corrupt`` tune-cache file parses as corrupt JSON
+  ``sink_io``    ``JsonlSink.record`` write raises ``OSError``
+  ``serve_slow`` one engine step sleeps past the slow-step threshold
+  ============== =====================================================
+
+Every fired rule emits a ``fault.injected`` obs event (site, target,
+fire index) so chaos runs leave the same audit trail real faults do.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import time
+from typing import Iterator, Optional
+
+from repro import obs
+
+__all__ = [
+    "InjectedFault", "FaultRule", "FaultPlan",
+    "active_plan", "reset", "inject", "should_fire", "fire_if",
+    "sleep_if", "enabled",
+]
+
+_ENV = "REPRO_FAULTS"
+
+
+class InjectedFault(RuntimeError):
+    """Raised at an armed injection point.
+
+    Deliberately a ``RuntimeError``: guards must catch it through the
+    same handler that catches the real failure class, never through an
+    injection-only special case — otherwise the chaos leg validates a
+    path production errors never take.
+    """
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """One armed fault: a site, an optional target filter, a fire cap."""
+
+    site: str
+    target: str = ""            # substring of the caller's target; "" = any
+    count: Optional[int] = None  # max fires; None = unlimited
+    fired: int = 0
+
+    def matches(self, site: str, target: str) -> bool:
+        if site != self.site:
+            return False
+        if self.target and self.target not in target:
+            return False
+        return self.count is None or self.fired < self.count
+
+
+# Reentrancy guard: emitting the fault.injected audit event routes
+# through the installed collector, which may itself be a guarded sink
+# (sink_io) that probes should_fire again.  Without the guard that
+# re-entry deadlocks on the plan lock.
+_emitting = threading.local()
+
+
+class FaultPlan:
+    """A set of armed rules (thread-safe fire accounting)."""
+
+    def __init__(self, rules: list[FaultRule]):
+        self.rules = rules
+        self._lock = threading.Lock()
+
+    def should_fire(self, site: str, target: str = "") -> bool:
+        if getattr(_emitting, "on", False):
+            return False
+        with self._lock:
+            for rule in self.rules:
+                if rule.matches(site, target):
+                    rule.fired += 1
+                    _emitting.on = True
+                    try:
+                        obs.event("fault.injected", site=site,
+                                  target=target, n=rule.fired)
+                    finally:
+                        _emitting.on = False
+                    return True
+        return False
+
+    def fired(self, site: str) -> int:
+        with self._lock:
+            return sum(r.fired for r in self.rules if r.site == site)
+
+
+def parse_plan(spec: str) -> FaultPlan:
+    """Parse a ``REPRO_FAULTS`` spec string into a plan.
+
+    Malformed segments raise ``ValueError`` loudly — a chaos run whose
+    fault silently failed to arm would green-light untested paths.
+    """
+    rules = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        if len(bits) > 3:
+            raise ValueError(f"bad {_ENV} rule {part!r} "
+                             "(site[:target][:count])")
+        site, target = bits[0], (bits[1] if len(bits) > 1 else "")
+        count = None
+        if len(bits) == 3:
+            try:
+                count = int(bits[2])
+            except ValueError:
+                raise ValueError(
+                    f"bad {_ENV} count in rule {part!r}") from None
+            if count < 1:
+                raise ValueError(f"bad {_ENV} count in rule {part!r}")
+        if not site:
+            raise ValueError(f"bad {_ENV} rule {part!r} (empty site)")
+        rules.append(FaultRule(site=site, target=target, count=count))
+    return FaultPlan(rules)
+
+
+# The armed plan.  ``None`` = disarmed (the default): every injection
+# point is a single None check.  ``_env_read`` distinguishes "no plan"
+# from "env not parsed yet" so the env is read at most once.
+_plan: Optional[FaultPlan] = None
+_env_read = False
+_lock = threading.Lock()
+
+
+def _active() -> Optional[FaultPlan]:
+    global _plan, _env_read
+    if _plan is not None or _env_read:
+        return _plan
+    with _lock:
+        if not _env_read:
+            spec = os.environ.get(_ENV, "")
+            _plan = parse_plan(spec) if spec.strip() else None
+            if _plan is not None and not _plan.rules:
+                _plan = None
+            _env_read = True
+    return _plan
+
+
+def active_plan() -> Optional[FaultPlan]:
+    """The armed plan (env or injected), or None when disarmed."""
+    return _active()
+
+
+def enabled() -> bool:
+    return _active() is not None
+
+
+def reset() -> None:
+    """Disarm and forget the parsed env (tests repoint ``REPRO_FAULTS``)."""
+    global _plan, _env_read
+    with _lock:
+        _plan, _env_read = None, False
+
+
+@contextlib.contextmanager
+def inject(spec: str) -> Iterator[FaultPlan]:
+    """Scoped fault plan: arm on entry, restore the prior state on exit.
+
+    The test idiom::
+
+        with faults.inject("lower:mxv_gen:1"):
+            out = K.mxv_gen(a, x)          # lowering fails once,
+        np.testing.assert_allclose(...)    # fallback chain recovers
+    """
+    global _plan, _env_read
+    plan = parse_plan(spec)
+    with _lock:
+        prev, prev_read = _plan, _env_read
+        _plan, _env_read = plan, True
+    try:
+        yield plan
+    finally:
+        with _lock:
+            _plan, _env_read = prev, prev_read
+
+
+# --------------------------------------------------------------- probes
+
+def should_fire(site: str, target: str = "") -> bool:
+    """True when an armed rule matches (and consumes one fire)."""
+    plan = _active()
+    if plan is None:
+        return False
+    return plan.should_fire(site, target)
+
+
+def fire_if(site: str, target: str = "") -> None:
+    """Raise :class:`InjectedFault` when an armed rule matches."""
+    if should_fire(site, target):
+        raise InjectedFault(f"injected fault at {site!r} "
+                            f"(target={target!r})")
+
+
+def sleep_if(site: str, target: str = "", seconds: float = 0.05) -> float:
+    """Sleep ``seconds`` when an armed rule matches; returns the delay
+    actually added (0.0 when disarmed) so callers can fold it into
+    their own timing if they need to."""
+    if should_fire(site, target):
+        time.sleep(seconds)
+        return seconds
+    return 0.0

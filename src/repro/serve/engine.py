@@ -15,7 +15,13 @@ events):
   * ``serve.step``    — one event per decode/prefill step: wall-clock
     latency, phase, active-slot count, queue depth;
   * ``serve.request`` — one event per retired request: time-to-first-
-    token, tokens/s, generated-token count.
+    token, tokens/s, generated-token count;
+  * ``serve.shed``    — a request refused (or evicted) by the bounded
+    admission queue;
+  * ``serve.deadline``— a request retired because its per-request
+    deadline expired (queued or mid-generation);
+  * ``serve.slow_step`` — a step slower than ``slow_step_factor`` × the
+    slot's rolling median (StepMonitor straggler machinery).
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.runtime.fault_tolerance import HeartbeatRegistry, StepMonitor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +45,12 @@ class ServeConfig:
     max_new_tokens: int = 128
     eos_id: int = -1             # -1: never stops early
     greedy: bool = True
+    # ------------------------------------------------ robustness knobs
+    deadline_s: Optional[float] = None   # per-request wall-clock budget
+    max_queue: Optional[int] = None      # bounded admission (None = ∞)
+    shed_policy: str = "reject"          # "reject" new | "drop_oldest"
+    slow_step_factor: float = 3.0        # slow-step flag vs rolling median
+    heartbeat_timeout_s: float = 60.0    # engine-loop liveness window
 
 
 @dataclasses.dataclass
@@ -68,22 +81,74 @@ class ServingEngine:
         self._last_step_s = 0.0
         self._tokens_generated = 0
         self._requests: dict[int, dict[str, float]] = {}
+        # robustness state: bounded-queue shedding, per-request deadlines,
+        # slow-step/straggler detection over per-slot step times
+        self._shed = 0
+        self._deadline_expired = 0
+        self._slow_steps = 0
+        self._expired_uids: list[int] = []
+        self.monitor = StepMonitor(window=50)
+        self.heartbeats = HeartbeatRegistry(
+            timeout_s=cfg.heartbeat_timeout_s)
 
     # ------------------------------------------------------------ admit
-    def submit(self, uid: int, tokens) -> None:
+    def submit(self, uid: int, tokens) -> bool:
+        """Enqueue a request; returns False when the bounded queue sheds
+        it (``shed_policy="reject"``).  With ``"drop_oldest"`` the oldest
+        *queued* request is evicted instead and the new one admitted —
+        back-pressure favouring freshness over fairness."""
+        cfg = self.cfg
+        if cfg.max_queue is not None and len(self.queue) >= cfg.max_queue:
+            if cfg.shed_policy == "drop_oldest" and self.queue:
+                victim = self.queue.popleft()
+                self._shed += 1
+                self._expired_uids.append(victim.uid)
+                if obs.enabled():
+                    obs.event("serve.shed", uid=victim.uid,
+                              policy="drop_oldest",
+                              queue_depth=len(self.queue))
+            else:
+                self._shed += 1
+                if obs.enabled():
+                    obs.event("serve.shed", uid=uid, policy="reject",
+                              queue_depth=len(self.queue))
+                return False
         self.queue.append(Request(uid=uid, tokens=np.asarray(tokens),
                                   submitted_at=time.perf_counter()))
+        return True
+
+    def _expired(self, req: Request,
+                 now: Optional[float] = None) -> bool:
+        if self.cfg.deadline_s is None:
+            return False
+        now = time.perf_counter() if now is None else now
+        return now - req.submitted_at > self.cfg.deadline_s
+
+    def _expire(self, req: Request, where: str) -> None:
+        """Retire a request whose deadline lapsed (queued or in-slot)."""
+        self._deadline_expired += 1
+        if obs.enabled():
+            obs.event("serve.deadline", uid=req.uid, where=where,
+                      n_tokens=len(req.out),
+                      waited_s=time.perf_counter() - req.submitted_at)
+        self._retire(req, deadline_exceeded=True)
 
     def _admit(self) -> None:
         """Fill free slots: per-slot prefill via teacher-forced decode of
         the prompt (single compiled step reused; avoids a second compiled
-        prefill graph for ragged prompt lengths)."""
+        prefill graph for ragged prompt lengths).  Queued requests whose
+        deadline already lapsed are expired here instead of wasting a
+        prefill on them."""
         cfg = self.cfg
         if self.cache is None:
             self.cache = self.model.init_cache(cfg.slots, cfg.max_len)
         for i in range(cfg.slots):
-            if self.slots[i] is None and self.queue:
+            while self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
+                if self._expired(req):
+                    self._expired_uids.append(req.uid)
+                    self._expire(req, where="queue")
+                    continue         # expired: try the next queued request
                 self.slots[i] = req
                 self.lengths[i] = 0
                 for tok in req.tokens[:-1]:   # last token steps generation
@@ -97,10 +162,12 @@ class ServingEngine:
         with static shapes that is the standard continuous-batching
         trade; the fused decode amortizes it across active slots.
         """
+        from repro.runtime import faults
         toks = np.zeros((self.cfg.slots, 1), np.int32)
         toks[slot, 0] = token
         pos = jnp.int32(int(self.lengths[slot]))
         t0 = time.perf_counter()
+        faults.sleep_if("serve_slow", f"slot{slot}")   # injected stall
         logits, self.cache = self._decode(self.params, jnp.asarray(toks),
                                           self.cache, pos)
         nxt = int(jnp.argmax(logits[slot]))   # device sync = step boundary
@@ -109,6 +176,15 @@ class ServingEngine:
         self._steps[phase] += 1
         self._step_s[phase] += latency
         self._last_step_s = latency
+        self.heartbeats.beat("engine")
+        host = f"slot{slot}"
+        med = self.monitor.medians().get(host, 0.0)
+        self.monitor.record(host, latency)
+        if med > 0 and latency > self.cfg.slow_step_factor * med:
+            self._slow_steps += 1
+            if obs.enabled():
+                obs.event("serve.slow_step", slot=slot, phase=phase,
+                          latency_s=latency, median_s=med)
         if obs.enabled():
             obs.event("serve.step", phase=phase, slot=slot,
                       latency_s=latency, active_slots=self.active_slots(),
@@ -120,7 +196,8 @@ class ServingEngine:
     def active_slots(self) -> int:
         return sum(1 for s in self.slots if s is not None)
 
-    def _retire(self, req: Request) -> None:
+    def _retire(self, req: Request, deadline_exceeded: bool = False,
+                ) -> None:
         """Record per-request serving metrics as the slot frees."""
         now = time.perf_counter()
         ttft = (req.first_token_at - req.submitted_at
@@ -128,7 +205,8 @@ class ServingEngine:
         gen_s = now - (req.first_token_at or req.submitted_at)
         n = len(req.out)
         rec = {"n_tokens": n, "ttft_s": ttft,
-               "tokens_per_s": (n / gen_s if gen_s > 0 else 0.0)}
+               "tokens_per_s": (n / gen_s if gen_s > 0 else 0.0),
+               "deadline_exceeded": deadline_exceeded}
         self._requests[req.uid] = rec
         self._tokens_generated += n
         if obs.enabled():
@@ -139,11 +217,20 @@ class ServingEngine:
 
         ``decode_steps``/``prefill_steps`` + mean/last step latencies,
         current ``slot_occupancy`` (active / configured) and
-        ``queue_depth``, total ``tokens_generated``, and per-retired-
-        request ``{uid: {n_tokens, ttft_s, tokens_per_s}}``.
+        ``queue_depth``, total ``tokens_generated``, per-retired-request
+        ``{uid: {n_tokens, ttft_s, tokens_per_s, deadline_exceeded}}``,
+        plus robustness counters: ``shed_requests``,
+        ``deadline_expired``, ``slow_steps``, the StepMonitor's
+        ``straggler_slots``, and ``heartbeat_alive`` (engine-loop
+        liveness within ``heartbeat_timeout_s``).
         """
         dec, pre = self._steps["decode"], self._steps["prefill"]
         return {
+            "shed_requests": self._shed,
+            "deadline_expired": self._deadline_expired,
+            "slow_steps": self._slow_steps,
+            "straggler_slots": list(self.monitor.stragglers()),
+            "heartbeat_alive": "engine" in self.heartbeats.alive(),
             "decode_steps": dec,
             "prefill_steps": pre,
             "mean_decode_step_s": (self._step_s["decode"] / dec
@@ -170,6 +257,13 @@ class ServingEngine:
             for i, req in enumerate(self.slots):
                 if req is None:
                     continue
+                if self._expired(req):
+                    # deadline lapsed mid-generation: return the partial
+                    # output rather than burning more steps on it
+                    results[req.uid] = req.out
+                    self.slots[i] = None
+                    self._expire(req, where="slot")
+                    continue
                 last = req.out[-1] if req.out else int(req.tokens[-1])
                 nxt = self._step_slot(i, last)
                 req.out.append(nxt)
@@ -188,4 +282,9 @@ class ServingEngine:
                 results[req.uid] = req.out
                 self.slots[i] = None
                 self._retire(req)
+        # requests shed/expired before reaching a slot still get a
+        # (empty) result entry so callers are never left waiting
+        for uid in self._expired_uids:
+            results.setdefault(uid, [])
+        self._expired_uids.clear()
         return results

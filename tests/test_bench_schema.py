@@ -132,7 +132,9 @@ def test_tune_cache_entry_provenance_keys(tmp_path):
     ts = time.time()
     autotune.tune("stream_copy", mode="ref", cache=cache, iters=1,
                   warmup=0, max_candidates=2, timestamp=ts)
-    (entry,) = json.loads((tmp_path / "tune.json").read_text()).values()
+    payload = json.loads((tmp_path / "tune.json").read_text())
+    assert payload["schema"] == tunecache.SCHEMA_VERSION
+    (entry,) = payload["entries"].values()
     prov = entry["provenance"]
     assert set(prov) == {"timestamp", "backend", "jax_version", "iters",
                          "warmup"}

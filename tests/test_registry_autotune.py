@@ -80,8 +80,9 @@ def test_tune_writes_then_hits_cache(tmp_path):
     assert second.from_cache
     assert second.config == first.config
 
-    entry = json.loads((tmp_path / "tune.json").read_text())
-    (key, val), = entry.items()
+    payload = json.loads((tmp_path / "tune.json").read_text())
+    assert payload["schema"] == tunecache.SCHEMA_VERSION
+    (key, val), = payload["entries"].items()
     assert key.startswith("stream_copy|")
     assert val["source"] == "autotune"
     assert val["d"] == first.config.stride_unroll
@@ -147,7 +148,7 @@ def test_tune_all_sweeps_named_kernels(tmp_path):
                             max_candidates=2)
     assert set(res) == {"stream_read", "rmsnorm"}
     data = json.loads((tmp_path / "tune.json").read_text())
-    assert len(data) == 2
+    assert len(data["entries"]) == 2
 
 
 # ----------------------------------------------- ops pick up tuned configs

@@ -1,0 +1,149 @@
+"""Runtime resilience primitives: straggler detection (StepMonitor),
+heartbeat liveness (HeartbeatRegistry), restart policy, and elastic
+mesh re-planning."""
+import pytest
+
+from repro.runtime import plan_mesh
+from repro.runtime.fault_tolerance import (HeartbeatRegistry,
+                                           RestartPolicy, StepMonitor)
+
+
+# --------------------------------------------------------- StepMonitor
+
+def test_median_odd_and_even_windows():
+    m = StepMonitor._median
+    assert m([3.0, 1.0, 2.0]) == 2.0
+    # even windows average the two middle samples — s[n // 2] alone
+    # would report 3.0 here, a systematic upward bias
+    assert m([1.0, 2.0, 3.0, 4.0]) == 2.5
+    assert m([]) == 0.0
+    assert m([7.0]) == 7.0
+
+
+def test_straggler_flagged_against_cross_host_median():
+    mon = StepMonitor(window=10, threshold=1.5)
+    for _ in range(10):
+        mon.record("h0", 1.0)
+        mon.record("h1", 1.0)
+        mon.record("h2", 2.0)     # 2x the cross-host median
+    assert mon.stragglers() == ["h2"]
+    assert mon.medians()["h2"] == 2.0
+
+
+def test_no_stragglers_when_uniform():
+    mon = StepMonitor(window=5)
+    for _ in range(5):
+        mon.record("h0", 1.0)
+        mon.record("h1", 1.0)
+    assert mon.stragglers() == []
+
+
+def test_rolling_window_forgets_old_samples():
+    mon = StepMonitor(window=4, threshold=1.5)
+    for _ in range(4):
+        mon.record("h0", 1.0)
+        mon.record("h1", 5.0)     # straggler ...
+    assert mon.stragglers() == ["h1"]
+    for _ in range(4):
+        mon.record("h1", 1.0)     # ... recovers: slow samples age out
+    assert mon.stragglers() == []
+
+
+def test_percentile_bounds():
+    mon = StepMonitor()
+    for t in (1.0, 2.0, 3.0, 4.0):
+        mon.record("h", t)
+    assert mon.percentile("h", 0.0) == 1.0
+    assert mon.percentile("h", 1.0) == 4.0
+    assert mon.percentile("missing", 0.5) == 0.0
+
+
+# --------------------------------------------------- HeartbeatRegistry
+
+def test_heartbeat_timeout_with_injected_clock():
+    now = [0.0]
+    hb = HeartbeatRegistry(timeout_s=10.0, clock=lambda: now[0])
+    hb.beat("h0")
+    hb.beat("h1")
+    now[0] = 5.0
+    assert sorted(hb.alive()) == ["h0", "h1"] and hb.dead() == []
+    now[0] = 11.0
+    hb.beat("h1")
+    assert hb.alive() == ["h1"]
+    assert hb.dead() == ["h0"]
+
+
+# ------------------------------------------------------- RestartPolicy
+
+def test_restart_policy_halts_after_crash_loop():
+    pol = RestartPolicy(max_failures_per_hour=2)
+    assert pol.on_failure(now=0.0) == "restore_and_remesh"
+    assert pol.on_failure(now=1.0) == "restore_and_remesh"
+    assert pol.on_failure(now=2.0) == "halt"
+    # failures age out of the one-hour window
+    assert pol.on_failure(now=4000.0) == "restore_and_remesh"
+
+
+def test_restart_policy_plan_combines_dead_and_stragglers():
+    now = [0.0]
+    hb = HeartbeatRegistry(timeout_s=1.0, clock=lambda: now[0])
+    hb.beat("dead_host")
+    now[0] = 5.0
+    hb.beat("slow_host")
+    mon = StepMonitor(window=4)
+    for _ in range(4):
+        mon.record("slow_host", 9.0)
+        mon.record("ok_host", 1.0)
+    plan = RestartPolicy().plan(mon, hb, now=5.0)
+    assert plan["action"] == "restore_and_remesh"
+    assert plan["dead"] == ["dead_host"]
+    assert plan["stragglers"] == ["slow_host"]
+    assert plan["evict"] == ["dead_host", "slow_host"]
+
+
+def test_restart_policy_straggler_only_evicts_at_checkpoint():
+    hb = HeartbeatRegistry(timeout_s=100.0, clock=lambda: 0.0)
+    hb.beat("slow")
+    hb.beat("ok")
+    mon = StepMonitor(window=4)
+    for _ in range(4):
+        mon.record("slow", 9.0)
+        mon.record("ok", 1.0)
+    plan = RestartPolicy().plan(mon, hb, now=0.0)
+    assert plan["action"] == "evict_at_checkpoint"
+    assert plan["evict"] == ["slow"]
+    no_evict = RestartPolicy(evict_stragglers=False).plan(mon, hb, now=0.0)
+    assert no_evict["action"] == "none" and no_evict["evict"] == []
+
+
+# ------------------------------------------------------------- elastic
+
+def test_plan_mesh_shrinks_data_axis_on_node_loss():
+    assert plan_mesh(64, model_parallel=16) == ((4, 16), ("data", "model"))
+    # losing half the fleet halves data parallelism, not TP degree
+    assert plan_mesh(32, model_parallel=16) == ((2, 16), ("data", "model"))
+
+
+def test_plan_mesh_halves_tp_when_indivisible():
+    shape, axes = plan_mesh(24, model_parallel=16)
+    assert shape == (3, 8) and axes == ("data", "model")
+
+
+def test_plan_mesh_multi_pod():
+    shape, axes = plan_mesh(64, model_parallel=16, pods=2)
+    assert shape == (2, 2, 16) and axes == ("pod", "data", "model")
+
+
+def test_plan_mesh_rejects_impossible():
+    with pytest.raises(ValueError, match="cannot host"):
+        plan_mesh(0, model_parallel=16)
+
+
+def test_runtime_lazy_exports():
+    """The PEP 562 package surface: faults submodule + elastic names
+    resolve lazily without import cycles."""
+    import repro.runtime as rt
+    assert rt.faults.enabled() in (True, False)
+    assert callable(rt.plan_mesh) and callable(rt.remesh_state)
+    with pytest.raises(AttributeError):
+        rt.not_a_thing

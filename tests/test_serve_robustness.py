@@ -1,0 +1,147 @@
+"""Serving-engine robustness: bounded admission queue + shed policies,
+per-request deadlines, slow-step/straggler detection, heartbeats."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.runtime import faults
+from repro.serve import ServeConfig, ServingEngine
+
+
+class _ToyModel:
+    """Deterministic next-token = (token + 1) mod vocab; no params."""
+
+    vocab = 7
+
+    def init_cache(self, slots, max_len):
+        return jnp.zeros((slots, max_len))
+
+    def decode_step(self, params, toks, cache, pos, ctx=None):
+        return jax.nn.one_hot((toks[:, 0] + 1) % self.vocab,
+                              self.vocab), cache
+
+
+def _engine(**kw):
+    return ServingEngine(_ToyModel(), None, ServeConfig(**kw))
+
+
+# ------------------------------------------------------- bounded queue
+
+def test_bounded_queue_rejects_overflow():
+    eng = _engine(slots=1, max_new_tokens=2, max_queue=2)
+    with obs.collect() as col:
+        assert eng.submit(1, [1]) is True
+        assert eng.submit(2, [2]) is True
+        assert eng.submit(3, [3]) is False       # queue full: shed
+        results = eng.run()
+    assert sorted(results) == [1, 2]
+    assert eng.stats()["shed_requests"] == 1
+    shed = col.named("serve.shed")
+    assert len(shed) == 1
+    assert shed[0].attrs["uid"] == 3
+    assert shed[0].attrs["policy"] == "reject"
+
+
+def test_bounded_queue_drop_oldest_favours_freshness():
+    eng = _engine(slots=1, max_new_tokens=2, max_queue=1,
+                  shed_policy="drop_oldest")
+    with obs.collect() as col:
+        assert eng.submit(1, [1]) is True
+        assert eng.submit(2, [2]) is True        # evicts 1, admits 2
+        results = eng.run()
+    assert results[2] and results[1] == []       # evicted → empty result
+    assert eng.stats()["shed_requests"] == 1
+    assert col.named("serve.shed")[0].attrs["uid"] == 1
+
+
+def test_unbounded_queue_unchanged():
+    eng = _engine(slots=1, max_new_tokens=2)
+    for uid in range(5):
+        assert eng.submit(uid, [1]) is True
+    results = eng.run()
+    assert sorted(results) == list(range(5))
+    assert eng.stats()["shed_requests"] == 0
+
+
+# ----------------------------------------------------------- deadlines
+
+def test_queued_request_past_deadline_never_prefilled():
+    eng = _engine(slots=1, max_new_tokens=2, deadline_s=0.01)
+    with obs.collect() as col:
+        eng.submit(1, [1])
+        eng.submit(2, [2])
+        time.sleep(0.05)                          # both deadlines lapse
+        results = eng.run()
+    assert results == {1: [], 2: []}
+    stats = eng.stats()
+    assert stats["deadline_expired"] == 2
+    evs = col.named("serve.deadline")
+    assert {e.attrs["uid"] for e in evs} == {1, 2}
+    assert all(e.attrs["where"] == "queue" for e in evs)
+    assert all(rec["deadline_exceeded"]
+               for rec in stats["requests"].values())
+
+
+def test_in_slot_deadline_returns_partial_output():
+    eng = _engine(slots=1, max_new_tokens=100_000, deadline_s=0.25)
+    with obs.collect() as col:
+        eng.submit(1, [1])
+        results = eng.run()
+    assert 0 < len(results[1]) < 100_000          # cut off mid-generation
+    evs = col.named("serve.deadline")
+    assert len(evs) == 1 and evs[0].attrs["where"] == "slot"
+    assert eng.stats()["requests"][1]["deadline_exceeded"]
+
+
+def test_no_deadline_runs_to_completion():
+    eng = _engine(slots=2, max_new_tokens=3)
+    eng.submit(1, [1, 2])
+    eng.submit(2, [3])
+    results = eng.run()
+    assert all(len(v) == 3 for v in results.values())
+    stats = eng.stats()
+    assert stats["deadline_expired"] == 0
+    assert not any(rec["deadline_exceeded"]
+                   for rec in stats["requests"].values())
+
+
+# ------------------------------------------- slow steps and heartbeats
+
+def test_slow_step_flagged_after_warm_history():
+    eng = _engine(slots=1, max_new_tokens=4, slow_step_factor=3.0)
+    eng.submit(1, [1])
+    eng.run()                                     # warm rolling median
+    with obs.collect() as col:
+        with faults.inject("serve_slow:slot0:1"):
+            eng.submit(2, [2])
+            eng.run()                             # first step stalls 50ms
+    slow = col.named("serve.slow_step")
+    assert slow, "stalled step must be flagged against rolling median"
+    assert slow[0].attrs["slot"] == 0
+    assert slow[0].attrs["latency_s"] > 3.0 * slow[0].attrs["median_s"]
+    assert eng.stats()["slow_steps"] >= 1
+
+
+def test_straggler_slot_surfaces_in_stats():
+    eng = _engine(slots=2, max_new_tokens=8)
+    eng.submit(1, [1])
+    eng.submit(2, [2])
+    with faults.inject("serve_slow:slot1"):      # every slot1 step stalls
+        eng.run()
+    stats = eng.stats()
+    assert stats["straggler_slots"] == ["slot1"]
+    assert stats["heartbeat_alive"] is True
+
+
+def test_stats_carries_robustness_keys():
+    eng = _engine(slots=1, max_new_tokens=1)
+    eng.submit(1, [1])
+    eng.run()
+    stats = eng.stats()
+    for key in ("shed_requests", "deadline_expired", "slow_steps",
+                "straggler_slots", "heartbeat_alive"):
+        assert key in stats
+    import json
+    json.dumps(stats)                             # stays json-clean
