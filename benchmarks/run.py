@@ -9,6 +9,7 @@ trajectories (``BENCH_*.json``) can be diffed.
   fig6_kernels     paper Fig 6 (kernel (D,P) sweeps)
   fig7_sota        paper Fig 7 (vs BLAS/XLA baselines)
   roofline         §Roofline table from dry-run artifacts
+  serving_sweep    engine tokens/s vs concurrency (and KV shards)
 """
 from __future__ import annotations
 
@@ -53,7 +54,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (decode_kernel_sweep, descriptor_sweep,
                             fig2_stream, fig5_collisions, fig6_kernels,
-                            fig7_sota, fig34_stalls, roofline_table)
+                            fig7_sota, fig34_stalls, roofline_table,
+                            serving_sweep)
     tables = {
         "fig2_stream": fig2_stream.run,
         "fig34_stalls": fig34_stalls.run,
@@ -63,6 +65,7 @@ def main(argv=None) -> None:
         "decode_kernel_sweep": decode_kernel_sweep.run,
         "descriptor_sweep": descriptor_sweep.run,
         "roofline": roofline_table.run,
+        "serving_sweep": serving_sweep.run,
     }
     from repro import obs
     only = set(args.only.split(",")) if args.only else None

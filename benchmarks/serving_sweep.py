@@ -1,0 +1,109 @@
+"""Serving throughput sweep: tokens/s vs concurrent-request count (and
+vs KV shard count when the host has more than one device).
+
+Each point runs the continuous-batching engine end-to-end on a reduced
+arch: N requests submitted up front, one fused compiled decode step per
+engine round, tokens/s measured over the whole drain.  The concurrency
+axis shows the fused-step payoff directly — rounds cost one dispatch
+regardless of active-slot count, so tokens/s should scale with slot
+count until the batch saturates the chip.  The shard axis exercises the
+sequence-sharded flash-decode combine (static split on one device, so
+the single-device sweep still covers the merge arithmetic).
+
+Standalone: ``python -m benchmarks.serving_sweep --quick --json PATH``
+writes the ``BENCH_*`` lineage JSON (same payload shape as
+``benchmarks.run``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.common import emit
+
+
+def _build(arch: str):
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models.lm import build_model
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _point(cfg, model, params, *, slots: int, requests: int,
+           prompt_len: int, max_new: int, shards: int = 1) -> dict:
+    import numpy as np
+
+    from repro.serve import ServeConfig, ServingEngine, serving_ctx
+    engine = ServingEngine(
+        model, params,
+        ServeConfig(slots=slots, max_len=128, max_new_tokens=max_new,
+                    shards=shards),
+        ctx=serving_ctx(shards))
+    rng = np.random.default_rng(0)
+    for uid in range(requests):
+        engine.submit(uid, rng.integers(0, cfg.vocab_size, prompt_len))
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall = time.perf_counter() - t0
+    stats = engine.stats()
+    n_tok = stats["tokens_generated"]
+    assert sorted(results) == list(range(requests))
+    return {"slots": slots, "requests": requests, "shards": shards,
+            "prompt_len": prompt_len, "max_new": max_new,
+            "tokens": n_tok,
+            "tokens_per_s": round(n_tok / wall, 2) if wall > 0 else 0.0,
+            "decode_steps": stats["decode_steps"],
+            "prefill_steps": stats["prefill_steps"],
+            "mean_decode_step_s": round(stats["mean_decode_step_s"], 6),
+            "seconds": wall}
+
+
+def run(quick: bool = False, arch: str = "yi-9b") -> list[dict]:
+    import jax
+
+    cfg, model, params = _build(arch)
+    concurrency = [1, 2] if quick else [1, 2, 4, 8]
+    prompt_len, max_new = (4, 8) if quick else (8, 32)
+    rows = []
+    for n in concurrency:
+        rows.append(_point(cfg, model, params, slots=n, requests=n,
+                           prompt_len=prompt_len, max_new=max_new))
+    # shard axis: always cover the 2-way static split (the merge math is
+    # device-count independent); add wider collective points per device
+    shard_counts = [2] if quick else [2, 4]
+    shard_counts += [n for n in (len(jax.devices()),)
+                     if n > 1 and n not in shard_counts]
+    base = max(concurrency)
+    for k in shard_counts:
+        if 128 % k:
+            continue
+        rows.append(_point(cfg, model, params, slots=base, requests=base,
+                           prompt_len=prompt_len, max_new=max_new,
+                           shards=k))
+    emit(rows, "serving_sweep")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    rows = run(quick=args.quick, arch=args.arch)
+    if args.json:
+        from benchmarks.run import _json_payload
+        with open(args.json, "w") as f:
+            json.dump(_json_payload({"serving_sweep": rows}, args.quick),
+                      f, indent=1, default=str)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,36 +30,44 @@ def _flatten(q, kc, vc):
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
-def _decode_attn(q, kc, vc, config: StridingConfig, mode: str) -> jax.Array:
+def _decode_attn(q, kc, vc, config: StridingConfig, mode: str):
     hkv, dh = kc.shape[2], kc.shape[3]
-    out, _ = run_spec(specs.decode_spec(hkv, dh), _flatten(q, kc, vc),
-                      config, mode)
-    return out.reshape(q.shape).astype(q.dtype)
+    out, lse = run_spec(specs.decode_spec(hkv, dh), _flatten(q, kc, vc),
+                        config, mode)
+    return (out.reshape(q.shape).astype(q.dtype),
+            lse.reshape(q.shape[0], q.shape[1]).astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
 def _decode_attn_masked(q, kc, vc, kv_len, config: StridingConfig,
-                        mode: str) -> jax.Array:
+                        mode: str):
     b, s, hkv, dh = kc.shape[0], kc.shape[1], kc.shape[2], kc.shape[3]
     kv_len = jnp.asarray(kv_len)
     if kv_len.ndim == 0:
         kv_len = jnp.full((b,), kv_len)
     mask = (jnp.arange(s)[None, :] < kv_len[:, None]).astype(jnp.float32)
-    out, _ = run_spec(specs.decode_spec(hkv, dh, masked=True),
-                      (*_flatten(q, kc, vc), mask), config, mode)
-    return out.reshape(q.shape).astype(q.dtype)
+    out, lse = run_spec(specs.decode_spec(hkv, dh, masked=True),
+                        (*_flatten(q, kc, vc), mask), config, mode)
+    return (out.reshape(q.shape).astype(q.dtype),
+            lse.reshape(q.shape[0], q.shape[1]).astype(jnp.float32))
 
 
 def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array,
                 kv_len: jax.Array | int | None = None,
                 config: StridingConfig | None = None,
-                mode: str | None = None, block_s: int = 128) -> jax.Array:
+                mode: str | None = None, block_s: int = 128,
+                with_lse: bool = False):
     """One-token GQA attention against a [B, S, Hkv, dh] KV cache.
 
     The sequence axis is stride-unrolled into D concurrent KV streams
     (multi-striding); the online-softmax partial states merge across
     streams and grid steps.  ``block_s`` is advisory (the emitter plans
     its own sequence blocking) and kept for call-site compatibility.
+
+    ``with_lse=True`` also returns the per-(batch, query-head)
+    log-sum-exp of the scaled scores as ``(out, lse)`` with lse
+    [B, Hq] f32 — the side statistic sequence-sharded flash-decode
+    merges partial outputs with (see ``decode_attn.sharded``).
     """
     del block_s
     mode = mode or common.kernel_mode()
@@ -68,5 +76,7 @@ def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array,
     cfg = common.resolve_config("decode_attn", kc.shape, kc.dtype, config, s,
                                 _DEFAULT, traffic=traffic, mode=mode)
     if kv_len is None:
-        return _decode_attn(q, kc, vc, cfg, mode)
-    return _decode_attn_masked(q, kc, vc, kv_len, cfg, mode)
+        out, lse = _decode_attn(q, kc, vc, cfg, mode)
+    else:
+        out, lse = _decode_attn_masked(q, kc, vc, kv_len, cfg, mode)
+    return (out, lse) if with_lse else out

@@ -1,15 +1,18 @@
 """Serving launcher: batched generation with the continuous-batching
-engine (multi-strided decode kernel on the hot path)."""
+engine (multi-strided decode kernel on the hot path; one fused compiled
+step per engine round, optionally KV-sharded across local devices)."""
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models.lm import build_model
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import ServeConfig, ServingEngine, serving_ctx
 
 
 def main(argv=None):
@@ -19,14 +22,27 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="KV sequence shards for the flash-decode merge "
+                         "(collective shard_map when >= that many local "
+                         "devices, static split otherwise)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request wall-clock budget in seconds")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue (default unbounded)")
+    ap.add_argument("--stats", action="store_true",
+                    help="dump engine.stats() as JSON on exit")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params,
-                           ServeConfig(slots=args.slots, max_len=128,
-                                       max_new_tokens=args.max_new))
+    engine = ServingEngine(
+        model, params,
+        ServeConfig(slots=args.slots, max_len=128,
+                    max_new_tokens=args.max_new, shards=args.shards,
+                    deadline_s=args.deadline, max_queue=args.max_queue),
+        ctx=serving_ctx(args.shards))
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         engine.submit(uid, rng.integers(0, cfg.vocab_size,
@@ -35,6 +51,9 @@ def main(argv=None):
     for uid in sorted(results):
         print(f"req {uid}: {len(results[uid])} tokens -> "
               f"{results[uid][:8]}...")
+    if args.stats:
+        json.dump(engine.stats(), sys.stdout, indent=1)
+        print()
     return results
 
 

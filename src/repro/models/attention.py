@@ -209,15 +209,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
 
 
 def attn_decode(p, x, cfg: ModelConfig, cache, pos: jax.Array, rope,
-                ctx=None):
+                ctx=None, shards: int = 1):
     """One-token decode: update cache at `pos`, multi-strided flash-decode.
 
-    x: [B, 1, D]; pos: scalar int32 (current length); rope built for pos.
+    x: [B, 1, D]; pos: scalar int32 (current length) or a per-row [B]
+    vector (ragged continuous batching — each row writes its own cache
+    position and attends to its own ``kv_len``); rope built for pos.
+    ``shards > 1`` runs the sequence-sharded flash-decode combine (see
+    ``kernels.decode_attn.sharded``).
     """
     q, k, v = _qkv(p, x, cfg, rope, ctx)
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
-    out = da_ops.decode_attn(q[:, 0], kc, vc, kv_len=pos + 1)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim:
+        upd = jax.vmap(
+            functools.partial(jax.lax.dynamic_update_slice_in_dim, axis=0))
+        kc = upd(cache["k"], k, pos)
+        vc = upd(cache["v"], v, pos)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+    if shards > 1:
+        from repro.kernels.decode_attn import sharded as da_sharded
+        out = da_sharded.dispatch(q[:, 0], kc, vc, kv_len=pos + 1,
+                                  shards=shards, ctx=ctx)
+    else:
+        out = da_ops.decode_attn(q[:, 0], kc, vc, kv_len=pos + 1)
     b = x.shape[0]
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
     return out @ p["wo"].astype(x.dtype), {"k": kc, "v": vc}

@@ -230,13 +230,14 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
         lambda a: jnp.broadcast_to(a[None], (np_,) + a.shape), period)
 
 
-def _layer_decode(p, c, x, cfg, desc, rope, pos, ctx, cross_kv=None):
+def _layer_decode(p, c, x, cfg, desc, rope, pos, ctx, cross_kv=None,
+                  shards: int = 1):
     h = common.rms_norm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
     newc = {}
     if desc.mixer == "attn":
         a, newc["attn"] = attention.attn_decode(p["attn"], h, cfg,
                                                 c["attn"], pos, rope,
-                                                ctx=ctx)
+                                                ctx=ctx, shards=shards)
     else:
         a, newc["mamba"] = mamba2.mamba_decode(p["mamba"], h, cfg,
                                                c["mamba"])
@@ -255,7 +256,7 @@ def _layer_decode(p, c, x, cfg, desc, rope, pos, ctx, cross_kv=None):
 
 
 def stack_decode(stack, cache, x, cfg: ModelConfig, rope, pos, ctx,
-                 cross_kv=None, descs=None):
+                 cross_kv=None, descs=None, shards: int = 1):
     descs = descs or layer_descriptors(cfg)
 
     def body(x, xs):
@@ -270,7 +271,8 @@ def stack_decode(stack, cache, x, cfg: ModelConfig, rope, pos, ctx,
             if desc.cross and ckv is not None:
                 lckv = ckv[f"pos{i}"]
             x, nc = _layer_decode(pparams[f"pos{i}"], pcache[f"pos{i}"], x,
-                                  cfg, desc, rope, pos, ctx, lckv)
+                                  cfg, desc, rope, pos, ctx, lckv,
+                                  shards=shards)
             newp[f"pos{i}"] = nc
         return x, newp
 

@@ -154,14 +154,19 @@ class CausalLM:
                                                       :cfg.vocab_size]
         return logits, cache
 
-    def decode_step(self, params, tokens, cache, pos, ctx=None):
-        """tokens: [B, 1]; pos: scalar int32 current length."""
+    def decode_step(self, params, tokens, cache, pos, ctx=None,
+                    shards: int = 1):
+        """tokens: [B, 1]; pos: scalar int32 current length, or a [B]
+        vector of per-row lengths (ragged continuous batching — one
+        compiled step serves slots at different positions)."""
         cfg = self.cfg
         x = _embed_tokens(params, tokens, cfg)
-        rope = common.make_rope(jnp.asarray([pos]), cfg.head_dim,
-                                cfg.rope_theta, cfg.rope_style)
+        pos = jnp.asarray(pos, jnp.int32)
+        rope = common.make_rope(pos[:, None] if pos.ndim else pos[None],
+                                cfg.head_dim, cfg.rope_theta,
+                                cfg.rope_style)
         x, newcache = blocks.stack_decode(params["blocks"], cache, x, cfg,
-                                          rope, pos, ctx)
+                                          rope, pos, ctx, shards=shards)
         x = common.rms_norm(x, params["final_norm"].astype(x.dtype),
                             cfg.norm_eps)
         return (_head_logits(params, x, cfg)[:, 0, :cfg.vocab_size],

@@ -119,14 +119,18 @@ class EncDecLM(CausalLM):
                  "cross": kv}
         return logits, cache
 
-    def decode_step(self, params, tokens, cache, pos, ctx=None):
+    def decode_step(self, params, tokens, cache, pos, ctx=None,
+                    shards: int = 1):
         cfg = self.cfg
         x = _embed_tokens(params, tokens, cfg)
-        rope = common.make_rope(jnp.asarray([pos]), cfg.head_dim,
-                                cfg.rope_theta, cfg.rope_style)
+        pos = jnp.asarray(pos, jnp.int32)
+        rope = common.make_rope(pos[:, None] if pos.ndim else pos[None],
+                                cfg.head_dim, cfg.rope_theta,
+                                cfg.rope_style)
         x, new_self = blocks.stack_decode(params["blocks"], cache["self"],
                                           x, cfg, rope, pos, ctx,
-                                          cross_kv=cache["cross"])
+                                          cross_kv=cache["cross"],
+                                          shards=shards)
         x = common.rms_norm(x, params["final_norm"].astype(x.dtype),
                             cfg.norm_eps)
         return (_head_logits(params, x, cfg)[:, 0, :cfg.vocab_size],

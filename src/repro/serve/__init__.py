@@ -1,3 +1,5 @@
 from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.sharded import resolve_serving_mesh, serving_ctx
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["ServeConfig", "ServingEngine", "resolve_serving_mesh",
+           "serving_ctx"]

@@ -2,33 +2,41 @@
 model's prefill/decode steps.
 
 Requests are admitted into fixed `slots` (static shapes keep one compiled
-decode step). Each slot tracks its own length; decode runs one fused step
-for all active slots against the shared KV cache; finished slots
+decode step). Each slot tracks its own length; decode runs ONE fused
+compiled step per engine round for all active slots against the shared
+KV cache — the token vector is [slots, 1] and the position vector is the
+per-slot length, so ragged slots write their own cache rows and attend
+to their own ``kv_len`` inside a single dispatch.  Finished slots
 (EOS/max_tokens) are retired and refilled from the queue. The decode
 attention path is the multi-strided flash-decode kernel (on TPU), so the
-paper's technique is on the hot path of every generated token.
+paper's technique is on the hot path of every generated token; with
+``ServeConfig.shards > 1`` the KV cache is sequence-sharded and the
+kernel's (out, lse) partials merge with the online-softmax identity
+(``kernels.decode_attn.sharded``).
 
 Serving telemetry (always collected engine-side; exported via
 ``stats()`` and, with ``repro.obs`` enabled, per-step/per-request
 events):
 
-  * ``serve.step``    — one event per decode/prefill step: wall-clock
-    latency, phase, active-slot count, queue depth;
+  * ``serve.step``    — one event per fused decode/prefill step:
+    wall-clock latency, phase, the advanced slots + their positions,
+    active-slot count, queue depth;
   * ``serve.request`` — one event per retired request: time-to-first-
     token, tokens/s, generated-token count;
   * ``serve.shed``    — a request refused (or evicted) by the bounded
     admission queue;
   * ``serve.deadline``— a request retired because its per-request
-    deadline expired (queued or mid-generation);
-  * ``serve.slow_step`` — a step slower than ``slow_step_factor`` × the
-    slot's rolling median (StepMonitor straggler machinery).
+    deadline expired (queued, mid-prefill, or mid-generation);
+  * ``serve.slow_step`` — a slot's step slower than
+    ``slow_step_factor`` × the slot's rolling median (StepMonitor
+    straggler machinery).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +53,7 @@ class ServeConfig:
     max_new_tokens: int = 128
     eos_id: int = -1             # -1: never stops early
     greedy: bool = True
+    shards: int = 1              # KV sequence shards (flash-decode merge)
     # ------------------------------------------------ robustness knobs
     deadline_s: Optional[float] = None   # per-request wall-clock budget
     max_queue: Optional[int] = None      # bounded admission (None = ∞)
@@ -63,6 +72,34 @@ class Request:
     first_token_at: float = 0.0  # perf_counter at first generated token
 
 
+# Hoisted jitted decode steps, shared across engine instances: the key
+# is (model, ctx, shards), so repeated engine construction (tests, the
+# chaos leg, sweep points) reuses one traced + compiled step instead of
+# re-jitting per instance.  Unhashable models (ad-hoc test doubles) fall
+# back to a per-call jit.
+_DECODE_JIT_CACHE: dict = {}
+
+
+def _decode_fn(model, ctx, shards: int):
+    key: Any = (model, ctx, shards)
+    try:
+        cached = _DECODE_JIT_CACHE.get(key)
+    except TypeError:
+        key, cached = None, None
+    if cached is not None:
+        return cached
+    if shards != 1:
+        fn = jax.jit(lambda p, t, c, pos: model.decode_step(
+            p, t, c, pos, ctx=ctx, shards=shards))
+    else:
+        # plain call keeps duck-typed models (no ``shards`` kwarg) working
+        fn = jax.jit(lambda p, t, c, pos: model.decode_step(
+            p, t, c, pos, ctx=ctx))
+    if key is not None:
+        _DECODE_JIT_CACHE[key] = fn
+    return fn
+
+
 class ServingEngine:
     def __init__(self, model, params, cfg: ServeConfig, ctx=None):
         self.model = model
@@ -73,8 +110,7 @@ class ServingEngine:
         self.slots: list[Optional[Request]] = [None] * cfg.slots
         self.lengths = np.zeros(cfg.slots, np.int32)
         self.cache = None
-        self._decode = jax.jit(
-            lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx=ctx))
+        self._decode = _decode_fn(model, ctx, cfg.shards)
         # running telemetry (cheap scalars; stats() snapshots them)
         self._steps = {"decode": 0, "prefill": 0}
         self._step_s = {"decode": 0.0, "prefill": 0.0}
@@ -96,19 +132,23 @@ class ServingEngine:
         """Enqueue a request; returns False when the bounded queue sheds
         it (``shed_policy="reject"``).  With ``"drop_oldest"`` the oldest
         *queued* request is evicted instead and the new one admitted —
-        back-pressure favouring freshness over fairness."""
+        back-pressure favouring freshness over fairness.  Every shed uid
+        gets a terminal ``{shed: True}`` record in ``stats()`` so every
+        submitted request has exactly one terminal outcome."""
         cfg = self.cfg
         if cfg.max_queue is not None and len(self.queue) >= cfg.max_queue:
             if cfg.shed_policy == "drop_oldest" and self.queue:
                 victim = self.queue.popleft()
                 self._shed += 1
                 self._expired_uids.append(victim.uid)
+                self._record_shed(victim.uid)
                 if obs.enabled():
                     obs.event("serve.shed", uid=victim.uid,
                               policy="drop_oldest",
                               queue_depth=len(self.queue))
             else:
                 self._shed += 1
+                self._record_shed(uid)
                 if obs.enabled():
                     obs.event("serve.shed", uid=uid, policy="reject",
                               queue_depth=len(self.queue))
@@ -116,6 +156,11 @@ class ServingEngine:
         self.queue.append(Request(uid=uid, tokens=np.asarray(tokens),
                                   submitted_at=time.perf_counter()))
         return True
+
+    def _record_shed(self, uid: int) -> None:
+        self._requests[uid] = {"n_tokens": 0, "ttft_s": 0.0,
+                               "tokens_per_s": 0.0,
+                               "deadline_exceeded": False, "shed": True}
 
     def _expired(self, req: Request,
                  now: Optional[float] = None) -> bool:
@@ -138,7 +183,9 @@ class ServingEngine:
         the prompt (single compiled step reused; avoids a second compiled
         prefill graph for ragged prompt lengths).  Queued requests whose
         deadline already lapsed are expired here instead of wasting a
-        prefill on them."""
+        prefill on them; a deadline lapsing *mid-prefill* frees the slot
+        immediately (where="prefill") so the next queued request reuses
+        it."""
         cfg = self.cfg
         if self.cache is None:
             self.cache = self.model.init_cache(cfg.slots, cfg.max_len)
@@ -151,45 +198,73 @@ class ServingEngine:
                     continue         # expired: try the next queued request
                 self.slots[i] = req
                 self.lengths[i] = 0
-                for tok in req.tokens[:-1]:   # last token steps generation
-                    self._step_slot(i, int(tok), phase="prefill")
+                self._prefill(i, req)   # on lapse the slot is free again
 
-    def _step_slot(self, slot: int, token: int,
-                   phase: str = "decode") -> int:
-        """Advance one slot by one token; returns the argmax next token.
+    def _prefill(self, i: int, req: Request) -> bool:
+        """Teacher-force the prompt into slot ``i`` one token per fused
+        step; the deadline is re-checked between prefill tokens so a
+        long prompt cannot burn unbounded steps past ``deadline_s``.
+        Returns False (slot freed, partial cache rows reusable — the
+        next occupant restarts at length 0 and overwrites them) when the
+        deadline lapses mid-prompt."""
+        for t_idx, tok in enumerate(req.tokens[:-1]):  # last token: decode
+            if t_idx and self._expired(req):
+                self.slots[i] = None
+                self.lengths[i] = 0
+                self._expired_uids.append(req.uid)
+                self._expire(req, where="prefill")
+                return False
+            toks = np.zeros((self.cfg.slots, 1), np.int32)
+            toks[i, 0] = int(tok)
+            self._step(toks, [i], phase="prefill")
+        return True
 
-        NOTE: steps the full batch (inactive slots step a pad token) —
-        with static shapes that is the standard continuous-batching
-        trade; the fused decode amortizes it across active slots.
+    def _step(self, toks: np.ndarray, advance: list[int],
+              phase: str = "decode") -> np.ndarray:
+        """ONE fused compiled step for the whole slot batch; rows listed
+        in ``advance`` commit their write (length bump) — the others step
+        a pad token whose cache row is overwritten before it is ever
+        attended to.  Returns the per-row argmax next token [slots].
+
+        Per-slot stall injection (``serve_slow:slot<i>``) is timed
+        per advancing slot so slow-step/straggler attribution survives
+        the fusion: each slot's recorded latency is the shared compute
+        time plus its own injected stall.
         """
         from repro.runtime import faults
-        toks = np.zeros((self.cfg.slots, 1), np.int32)
-        toks[slot, 0] = token
-        pos = jnp.int32(int(self.lengths[slot]))
         t0 = time.perf_counter()
-        faults.sleep_if("serve_slow", f"slot{slot}")   # injected stall
+        stalls = []
+        for i in advance:
+            s0 = time.perf_counter()
+            faults.sleep_if("serve_slow", f"slot{i}")   # injected stall
+            stalls.append(time.perf_counter() - s0)
+        pos = jnp.asarray(self.lengths, jnp.int32)
         logits, self.cache = self._decode(self.params, jnp.asarray(toks),
                                           self.cache, pos)
-        nxt = int(jnp.argmax(logits[slot]))   # device sync = step boundary
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # sync = step edge
         latency = time.perf_counter() - t0
-        self.lengths[slot] += 1
+        base = max(latency - sum(stalls), 0.0)
+        for i in advance:
+            self.lengths[i] += 1
         self._steps[phase] += 1
         self._step_s[phase] += latency
         self._last_step_s = latency
         self.heartbeats.beat("engine")
-        host = f"slot{slot}"
-        med = self.monitor.medians().get(host, 0.0)
-        self.monitor.record(host, latency)
-        if med > 0 and latency > self.cfg.slow_step_factor * med:
-            self._slow_steps += 1
-            if obs.enabled():
-                obs.event("serve.slow_step", slot=slot, phase=phase,
-                          latency_s=latency, median_s=med)
+        for i, stall in zip(advance, stalls):
+            host = f"slot{i}"
+            slot_lat = base + stall
+            med = self.monitor.medians().get(host, 0.0)
+            self.monitor.record(host, slot_lat)
+            if med > 0 and slot_lat > self.cfg.slow_step_factor * med:
+                self._slow_steps += 1
+                if obs.enabled():
+                    obs.event("serve.slow_step", slot=i, phase=phase,
+                              latency_s=slot_lat, median_s=med)
         if obs.enabled():
-            obs.event("serve.step", phase=phase, slot=slot,
+            obs.event("serve.step", phase=phase, slots=list(advance),
                       latency_s=latency, active_slots=self.active_slots(),
                       queue_depth=len(self.queue),
-                      pos=int(self.lengths[slot]) - 1)
+                      pos=[int(self.lengths[i]) - 1 for i in advance])
         return nxt
 
     # ------------------------------------------------------------ stats
@@ -206,7 +281,7 @@ class ServingEngine:
         n = len(req.out)
         rec = {"n_tokens": n, "ttft_s": ttft,
                "tokens_per_s": (n / gen_s if gen_s > 0 else 0.0),
-               "deadline_exceeded": deadline_exceeded}
+               "deadline_exceeded": deadline_exceeded, "shed": False}
         self._requests[req.uid] = rec
         self._tokens_generated += n
         if obs.enabled():
@@ -217,12 +292,13 @@ class ServingEngine:
 
         ``decode_steps``/``prefill_steps`` + mean/last step latencies,
         current ``slot_occupancy`` (active / configured) and
-        ``queue_depth``, total ``tokens_generated``, per-retired-request
-        ``{uid: {n_tokens, ttft_s, tokens_per_s, deadline_exceeded}}``,
-        plus robustness counters: ``shed_requests``,
-        ``deadline_expired``, ``slow_steps``, the StepMonitor's
-        ``straggler_slots``, and ``heartbeat_alive`` (engine-loop
-        liveness within ``heartbeat_timeout_s``).
+        ``queue_depth``, total ``tokens_generated``, one terminal
+        record per submitted uid ``{uid: {n_tokens, ttft_s,
+        tokens_per_s, deadline_exceeded, shed}}``, plus robustness
+        counters: ``shed_requests``, ``deadline_expired``,
+        ``slow_steps``, the StepMonitor's ``straggler_slots``, and
+        ``heartbeat_alive`` (engine-loop liveness within
+        ``heartbeat_timeout_s``).
         """
         dec, pre = self._steps["decode"], self._steps["prefill"]
         return {
@@ -248,33 +324,44 @@ class ServingEngine:
 
     # ------------------------------------------------------------- run
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
-        """Drain the queue; returns {uid: generated tokens}."""
+        """Drain the queue; returns {uid: generated tokens}.
+
+        Every engine round is ONE fused decode step regardless of how
+        many slots are active: the per-slot token/position vectors make
+        the batch ragged-correct, so a round costs one compiled dispatch
+        instead of one per active slot."""
         cfg = self.cfg
         results: dict[int, list[int]] = {}
         steps = 0
         self._admit()
         while any(s is not None for s in self.slots) and steps < max_steps:
             for i, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                if self._expired(req):
+                if req is not None and self._expired(req):
                     # deadline lapsed mid-generation: return the partial
                     # output rather than burning more steps on it
                     results[req.uid] = req.out
                     self.slots[i] = None
                     self._expire(req, where="slot")
-                    continue
-                last = req.out[-1] if req.out else int(req.tokens[-1])
-                nxt = self._step_slot(i, last)
-                req.out.append(nxt)
-                if not req.first_token_at:
-                    req.first_token_at = time.perf_counter()
-                if (nxt == cfg.eos_id
-                        or len(req.out) >= cfg.max_new_tokens
-                        or self.lengths[i] >= cfg.max_len - 1):
-                    results[req.uid] = req.out
-                    self.slots[i] = None
-                    self._retire(req)
+            active = [i for i, r in enumerate(self.slots) if r is not None]
+            if active:
+                toks = np.zeros((cfg.slots, 1), np.int32)
+                for i in active:
+                    req = self.slots[i]
+                    toks[i, 0] = (req.out[-1] if req.out
+                                  else int(req.tokens[-1]))
+                nxt = self._step(toks, active, phase="decode")
+                now = time.perf_counter()
+                for i in active:
+                    req = self.slots[i]
+                    req.out.append(int(nxt[i]))
+                    if not req.first_token_at:
+                        req.first_token_at = now
+                    if (req.out[-1] == cfg.eos_id
+                            or len(req.out) >= cfg.max_new_tokens
+                            or self.lengths[i] >= cfg.max_len - 1):
+                        results[req.uid] = req.out
+                        self.slots[i] = None
+                        self._retire(req)
             self._admit()
             steps += 1
         for i, req in enumerate(self.slots):

@@ -335,14 +335,19 @@ def test_serve_emits_step_and_request_events():
         results = eng.run()
     assert set(results) == {1, 2}
     steps = col.named("serve.step")
-    assert steps, "every decode/prefill step must emit serve.step"
+    assert steps, "every fused decode/prefill step must emit serve.step"
     for ev in steps:
-        assert {"phase", "slot", "latency_s", "active_slots",
+        assert {"phase", "slots", "latency_s", "active_slots",
                 "queue_depth", "pos"} <= set(ev.attrs)
         assert ev.attrs["latency_s"] > 0
         assert ev.attrs["phase"] in ("prefill", "decode")
+        assert len(ev.attrs["slots"]) == len(ev.attrs["pos"])
     assert any(e.attrs["phase"] == "prefill" for e in steps)
-    assert sum(e.attrs["phase"] == "decode" for e in steps) == 6
+    # one FUSED step per engine round: 3 rounds with both slots active,
+    # not 3 per slot (the per-slot stepping was the S× throughput bug)
+    decode = [e for e in steps if e.attrs["phase"] == "decode"]
+    assert len(decode) == 3
+    assert all(e.attrs["slots"] == [0, 1] for e in decode)
 
     reqs = col.named("serve.request")
     assert {e.attrs["uid"] for e in reqs} == {1, 2}
@@ -359,7 +364,7 @@ def test_engine_stats_snapshot():
     results = eng.run()
     assert results == {1: [3, 4, 5], 2: [4, 5, 6]}
     s = eng.stats()
-    assert s["decode_steps"] == 6
+    assert s["decode_steps"] == 3           # one fused step per round
     assert s["prefill_steps"] == 1          # uid 1's 2-token prompt
     assert s["tokens_generated"] == 6
     assert s["mean_decode_step_s"] > 0
