@@ -1,0 +1,22 @@
+"""repro.analysis — static verifier for specs, schedules, and plans.
+
+Proves properties of a ``(TraversalSpec, StridingConfig)`` pair before
+anything is emitted or executed: write races/aliases, halo bounds and
+the pad+crop contract, VMEM occupancy against the planner machine
+model, and reassociation-sensitive numerics.  See
+:mod:`repro.analysis.checker` for the analyses and
+:mod:`repro.analysis.findings` for the rule vocabulary.
+
+Wired in at three layers: ``codegen.emit.make_kernel_op`` gates every
+non-ref dispatch through :func:`ensure_valid` (a rejected config is
+quarantined by ``kernels.common.guarded_run`` with failure class
+``analysis`` — zero emission attempts), ``core.planner.rank_configs``
+drops rejected candidates before the autotune sweep measures them, and
+``tools/speclint.py`` runs the full registry sweep + repo lint in CI.
+"""
+from repro.analysis.checker import check, ensure_valid
+from repro.analysis.findings import (AnalysisError, Finding, RULES,
+                                     errors, warnings)
+
+__all__ = ["check", "ensure_valid", "AnalysisError", "Finding", "RULES",
+           "errors", "warnings"]

@@ -1,0 +1,446 @@
+"""Static verifier over the codegen IR: races, bounds, VMEM, numerics.
+
+Four analyses over a ``(spec, config)`` pair, none of which executes or
+emits anything:
+
+  * **write-race/alias** (RACE001–RACE004) — compose each write access
+    map with the schedule decomposition ``plan_blocks`` derives (stride
+    split into D streams × row grid × column grid) and prove every
+    (write array, store index) pair is produced by exactly one
+    (grid step × stream × lane) point.  A write map that omits the
+    stride axis is stored once per row step per stream (the PR-9 cache-
+    clobber shape); one that omits the vector axis without whole rows is
+    stored once per column step; per-write combinators on a path with
+    no cross-stream merge race D partial accumulators; a store aliasing
+    a read of the same array under a different index map is a
+    read-after-write hazard.
+  * **bounds/halo** (BOUNDS001–BOUNDS004) — abstractly evaluate the
+    body on halo-widened block shapes (``jax.eval_shape`` — a ``tap``
+    outside its declared halo fails eagerly, no FLOPs run), prove the
+    derived schedule covers the padded iteration domain exactly once
+    (interval proof in ``transforms.preserves_domain``), and check the
+    §5.1.2 pad contract: a stride-axis reduction cannot pad rows, and
+    padded reduced lanes poison non-'sum' combinators.
+  * **resource budgeting** (RES001) — bound the emitter's VMEM
+    occupancy from the same block geometry it would allocate (operand
+    blocks × D streams × taps, per-write output blocks, combine
+    scratch, lookahead rings on the manual path, ×2 for the auto
+    pipeline's double buffering) against the planner machine model's
+    budget.
+  * **numerics lint** (NUM001) — flag schedules whose interleaved lane
+    sub-portions would reassociate a non-``full_width`` reduction fold
+    (the PR-5 bug class).  The shipping emitter regroups sub-portions
+    before folding, so this is a warning by default; pass
+    ``assume_grouped_fold=False`` to model a naive emitter and make it
+    an error (speclint's ``--fixture reassoc`` does).
+
+Entry points: :func:`check` returns findings; :func:`ensure_valid`
+additionally emits ``analysis.pass`` / ``analysis.violation`` obs
+events and raises :class:`~repro.analysis.findings.AnalysisError` on
+error-severity findings — the exception ``kernels.common.
+classify_failure`` maps to the ``analysis`` failure class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.analysis import findings as F
+from repro.analysis.findings import AnalysisError, Finding
+from repro.codegen import loopir, transforms
+from repro.core.planner import DEFAULT_VMEM_BUDGET
+from repro.core.striding import StridingConfig
+
+__all__ = ["check", "ensure_valid", "AnalysisError", "Finding"]
+
+_ITEM = 4          # VMEM model is f32: blocks/accumulators are 4-byte
+_PIPE_BUF = 2      # Pallas auto-pipeline double-buffers every block
+
+SpecLike = Union[loopir.TraversalSpec, Sequence[loopir.TraversalSpec]]
+
+
+def _specs_of(spec: SpecLike) -> tuple[loopir.TraversalSpec, ...]:
+    if isinstance(spec, loopir.TraversalSpec):
+        return (spec,)
+    return tuple(spec)
+
+
+def _rest(acc: loopir.Access, info: loopir.NestInfo) -> tuple[str, ...]:
+    """Non-batch index vars of an access, in declared order (the
+    emitter's ``_write_rest``)."""
+    return tuple(v for v in acc.index if v not in info.batch_axes)
+
+
+# ------------------------------------------------- config-independent
+
+def _alias_findings(spec: loopir.TraversalSpec) -> list[Finding]:
+    """RACE004: a store into an array the body also reads, under a
+    different index map — the transposed/permuted-store RAW hazard."""
+    out = []
+    reads = {a.array: a for a in spec.reads}
+    for w in spec.writes:
+        r = reads.get(w.array)
+        if r is not None and tuple(r.index) != tuple(w.index):
+            out.append(Finding(
+                F.RACE004, "error", spec.name, f"write {w.array!r}",
+                f"write {w.array!r} {w.index} aliases the read of "
+                f"{r.array!r} {r.index} under a permuted index map: "
+                "stores land in cells later loop points still read"))
+    return out
+
+
+def _halo_findings(spec: loopir.TraversalSpec) -> list[Finding]:
+    """BOUNDS001: propagate the padded-extent intervals through the body
+    abstractly.  Every read block is presented at its halo-widened shape
+    ``extent + lo + hi`` per dim; a ``tap`` whose offset escapes the
+    declared ``[-lo, +hi]`` window raises during abstract evaluation —
+    no arrays are materialized and no FLOPs run."""
+    env = {}
+    for acc in spec.reads:
+        shape = tuple(spec.axis(v).extent + lo + hi
+                      for v, (lo, hi) in zip(acc.index, acc.halo))
+        env[acc.array] = jax.ShapeDtypeStruct(shape, jnp.float32)
+    for name in spec.scalars:
+        env[name] = jax.ShapeDtypeStruct((), jnp.float32)
+    try:
+        jax.eval_shape(spec.body, env)
+    except ValueError as exc:
+        msg = str(exc)
+        if "outside halo" in msg or "tap offset" in msg:
+            return [Finding(
+                F.BOUNDS001, "error", spec.name, "body tap",
+                f"body read escapes the declared halo: {msg} — the "
+                "loaded block only includes the declared border, so "
+                "this tap reads outside the padded extent")]
+        # other ValueErrors are body/shape issues the differential
+        # harness owns, not halo violations
+    except Exception:
+        # a body that cannot be abstractly evaluated at these shapes is
+        # out of this analysis's scope; the emitter/oracle will report
+        pass
+    return []
+
+
+# --------------------------------------------------- per-config checks
+
+def _race_findings(spec, info, bp) -> list[Finding]:
+    out = []
+    all_row = all(_rest(w, info) == (info.stride_axis,)
+                  for w in spec.writes)
+    vecred = info.reduction and all_row
+    if isinstance(spec.reduce, tuple) and not vecred:
+        # per-write accumulators only merge on the vector-axis-reduction
+        # path (one f32 accumulator per write, shared across the column
+        # grid).  Under a stride split of a reduced axis — or on the
+        # streaming path, which has no merge at all — each of the D
+        # streams folds its own partial and the last store wins.
+        out.append(Finding(
+            F.RACE003, "error", spec.name,
+            f"reduce={tuple(getattr(r, 'name', r) for r in spec.reduce)}",
+            f"per-write combinators on this nest race D={bp.d} partial "
+            "accumulators: the stride split gives every stream its own "
+            "fold with no cross-stream merge on this lowering path"))
+    if vecred or info.stride_reduction:
+        # vecred: writes are per-row accumulators merged across the
+        # column grid.  stride reduction: writes are combine-merged
+        # across streams/rows; only column-partial finalizes can race.
+        if info.stride_reduction:
+            for w in spec.writes:
+                rest = _rest(w, info)
+                if rest != (info.vector_axis,) and bp.bn != bp.cols:
+                    out.append(Finding(
+                        F.RACE002, "error", spec.name, f"write {w.array!r}",
+                        f"write {w.array!r} {w.index} does not split over "
+                        f"the vector axis, but the schedule runs "
+                        f"{bp.cols // bp.bn} column grid steps "
+                        f"(bn={bp.bn} < cols={bp.cols}): each step "
+                        "finalizes and stores a column-partial value to "
+                        "the same index — set full_width=True"))
+        return out
+    # streaming path: no combine merge anywhere — every (row step ×
+    # stream × column step) must hit a distinct store index
+    n_row_writers = bp.rows            # d streams × (rows/d) row steps
+    n_col_steps = bp.cols // bp.bn
+    for w in spec.writes:
+        rest = _rest(w, info)
+        if info.stride_axis not in rest:
+            if n_row_writers > 1:
+                out.append(Finding(
+                    F.RACE001, "error", spec.name, f"write {w.array!r}",
+                    f"write {w.array!r} {w.index} omits the stride axis "
+                    f"{info.stride_axis!r}: all {n_row_writers} "
+                    f"(row step × D={bp.d} stream) points store to the "
+                    "same index — the batch-wide cache-clobber shape"))
+            continue
+        if info.vector_axis not in rest and n_col_steps > 1:
+            out.append(Finding(
+                F.RACE002, "error", spec.name, f"write {w.array!r}",
+                f"write {w.array!r} {w.index} omits the vector axis "
+                f"{info.vector_axis!r} while the schedule runs "
+                f"{n_col_steps} column grid steps (bn={bp.bn} < "
+                f"cols={bp.cols}): each step stores a partial row "
+                "statistic to the same index — set full_width=True"))
+    return out
+
+
+def _pad_findings(spec, info, bp) -> list[Finding]:
+    out = []
+    rows = spec.axis(info.stride_axis).extent
+    cols = spec.axis(info.vector_axis).extent
+    if info.stride_reduction and bp.rows != rows:
+        out.append(Finding(
+            F.BOUNDS003, "error", spec.name,
+            f"axis {info.stride_axis!r}",
+            f"stride-axis reduction over {info.stride_axis!r} "
+            f"(extent {rows}) cannot pad to {bp.rows}: padded rows "
+            "would have to contribute the combine identity through the "
+            f"body; pick a D dividing the extent (D={bp.d} does not)"))
+    if (info.reduction and bp.cols != cols
+            and any(c.name != "sum" for c in spec.combines())):
+        out.append(Finding(
+            F.BOUNDS004, "error", spec.name,
+            f"axis {info.vector_axis!r}",
+            f"padding the reduced vector axis ({cols} -> {bp.cols}) "
+            "feeds zeros into a non-'sum' combinator (a padded zero "
+            "beats every negative row max); use a lane-multiple extent "
+            "or full_width=True"))
+    return out
+
+
+def _domain_findings(spec, info, bp, config) -> list[Finding]:
+    """BOUNDS002: the §5.1 schedule at padded extents must cover the
+    padded iteration domain exactly once (interval/mixed-radix proof —
+    no enumeration, works at any extent)."""
+    targets = {info.stride_axis: bp.rows, info.vector_axis: bp.cols}
+    padded = dataclasses.replace(spec, axes=tuple(
+        dataclasses.replace(ax, extent=targets.get(ax.name, ax.extent))
+        for ax in spec.axes))
+    try:
+        sched = transforms.default_schedule(padded, config, blocks=bp)
+    except (ValueError, NotImplementedError):
+        return []      # schedule construction itself refuses loudly
+    if not transforms.preserves_domain(sched):
+        return [Finding(
+            F.BOUNDS002, "error", spec.name, f"config {config}",
+            f"the derived schedule does not cover the padded iteration "
+            f"domain (rows={bp.rows}, cols={bp.cols}) exactly once")]
+    return []
+
+
+def _padded_extent(spec, info, bp, var: str) -> int:
+    if var == info.stride_axis:
+        return bp.rows
+    if var == info.vector_axis:
+        return bp.cols
+    return spec.axis(var).extent
+
+
+def _vmem_bytes(spec, info, bp, config: StridingConfig) -> int:
+    """Static VMEM occupancy model mirroring the emitter's allocations
+    (f32 blocks, auto-pipeline blocks double-buffered)."""
+    from repro.codegen.emit import _manual_eligible   # deferred: pallas
+    full = info.col_halo != (0, 0) or spec.full_width
+    all_row = all(_rest(w, info) == (info.stride_axis,)
+                  for w in spec.writes)
+    vecred = info.reduction and all_row
+    streaming = not (vecred or info.stride_reduction)
+    manual = (streaming and config.lookahead != 2
+              and _manual_eligible(spec, bp))
+    if manual:
+        la = config.lookahead
+        inb = sum(la * bp.d * bp.bm * bp.cols for _ in spec.reads)
+        outb = sum(2 * bp.d * bp.bm * (bp.cols if len(w.index) == 2 else 1)
+                   for w in spec.writes)
+        return (inb + outb) * _ITEM
+
+    read_elems = 0
+    for acc in spec.reads:
+        rest = _rest(acc, info)
+        if info.stride_axis not in acc.index:
+            n = 1           # resident block (batch dims collapse to 1)
+            for v, (lo, hi) in zip(acc.index, acc.halo):
+                if v in info.batch_axes:
+                    continue
+                if (v == info.vector_axis and not full and (lo, hi) == (0, 0)):
+                    n *= bp.bn
+                else:
+                    n *= _padded_extent(spec, info, bp, v) + lo + hi
+            read_elems += n
+            continue
+        lo, hi = acc.halo_of(info.stride_axis)
+        taps = 1 + lo + hi
+        if len(rest) >= 2:
+            second = rest[1] if rest[0] == info.stride_axis else rest[0]
+            clo, chi = acc.halo_of(info.vector_axis)
+            if second != info.vector_axis:
+                width = _padded_extent(spec, info, bp, second)
+            elif full:
+                width = bp.cols + clo + chi
+            else:
+                width = bp.bn
+            read_elems += bp.d * taps * bp.bm * width
+        else:
+            read_elems += bp.d * taps * bp.bm
+
+    write_elems = 0
+    scratch_bytes = 0
+    if vecred:
+        write_elems = len(spec.writes) * bp.d * bp.bm
+        scratch_bytes = len(spec.writes) * bp.d * bp.bm * _ITEM
+    elif info.stride_reduction:
+        widths = []
+        for w in spec.writes:
+            rest = _rest(w, info)
+            if rest == (info.vector_axis,):
+                widths.append(bp.bn)
+            else:
+                n = 1
+                for v in rest:
+                    n *= _padded_extent(spec, info, bp, v)
+                widths.append(n)
+        write_elems = sum(widths)
+        if widths and not isinstance(spec.reduce, tuple):
+            try:
+                scratch_bytes = (
+                    sum(spec.combine.state_widths(widths[0])) * _ITEM)
+            except (ValueError, NotImplementedError):
+                scratch_bytes = widths[0] * _ITEM
+    else:
+        for w in spec.writes:
+            rest = _rest(w, info)
+            tail = 1
+            for v in rest:
+                if v == info.stride_axis:
+                    continue
+                if v == info.vector_axis:
+                    tail *= bp.cols if full else bp.bn
+                else:
+                    tail *= _padded_extent(spec, info, bp, v)
+            write_elems += bp.d * bp.bm * tail
+    return _PIPE_BUF * (read_elems + write_elems) * _ITEM + scratch_bytes
+
+
+def _resource_findings(spec, info, bp, config, vmem_budget) -> list[Finding]:
+    est = _vmem_bytes(spec, info, bp, config)
+    if est <= vmem_budget:
+        return []
+    return [Finding(
+        F.RES001, "error", spec.name, f"config {config}",
+        f"estimated VMEM occupancy {est / 2**20:.1f} MiB exceeds the "
+        f"machine budget {vmem_budget / 2**20:.1f} MiB "
+        f"(D={bp.d}, bm={bp.bm}, bn={bp.bn}, "
+        f"{len(spec.reads)} read / {len(spec.writes)} write streams)")]
+
+
+def _numerics_findings(spec, info, bp, config,
+                       assume_grouped_fold: bool) -> list[Finding]:
+    all_row = all(_rest(w, info) == (info.stride_axis,)
+                  for w in spec.writes)
+    vecred = info.reduction and all_row
+    if not (vecred and config.arrangement == "interleaved"
+            and not spec.full_width and bp.bn > transforms.LANE):
+        return []
+    sev = "warning" if assume_grouped_fold else "error"
+    tail = ("the emitter regroups sub-portions into contiguous runs "
+            "before folding, so totals match the grouped order — but "
+            "this schedule depends on that regroup"
+            if assume_grouped_fold else
+            "a naive lane fold would sum maximally-spaced sub-portions "
+            "in interleaved order and reassociate the reduction")
+    return [Finding(
+        F.NUM001, sev, spec.name, f"config {config}",
+        f"interleaved P={config.portion_unroll} lane sub-portions of a "
+        f"reduced row (bn={bp.bn} > {transforms.LANE}): {tail}")]
+
+
+def _config_findings(spec, config, vmem_budget,
+                     assume_grouped_fold) -> list[Finding]:
+    try:
+        info = loopir.classify(spec)
+    except (ValueError, NotImplementedError):
+        return []       # nests classify itself refuses are not plans
+    if info.blocked:
+        # mirror emit._emit_blocked: the 1-D nest becomes a
+        # [rows, 128·P] 2-D tile grid before any striding happens —
+        # analyze the derived spec the emitter would actually lower
+        ax = spec.axis(info.stride_axis)
+        cols = transforms.LANE * config.portion_unroll
+        rows = max(-(-ax.extent // cols), 1)
+        row_ax, lane_ax = ax.name + "__blk", ax.name + "__lane"
+
+        def remap(acc):
+            return dataclasses.replace(acc, index=(row_ax, lane_ax),
+                                       halo=None)
+        spec2 = dataclasses.replace(
+            spec,
+            axes=(loopir.Axis(row_ax, rows), loopir.Axis(lane_ax, cols)),
+            reads=tuple(remap(a) for a in spec.reads),
+            writes=tuple(remap(a) for a in spec.writes),
+        )
+        return _config_findings(spec2, config, vmem_budget,
+                                assume_grouped_fold)
+    try:
+        bp = transforms.plan_blocks(spec, config)
+    except (ValueError, NotImplementedError):
+        return []
+    out = []
+    out += _race_findings(spec, info, bp)
+    out += _pad_findings(spec, info, bp)
+    out += _domain_findings(spec, info, bp, config)
+    out += _resource_findings(spec, info, bp, config, vmem_budget)
+    out += _numerics_findings(spec, info, bp, config, assume_grouped_fold)
+    return out
+
+
+# --------------------------------------------------------- entry points
+
+def check(spec: SpecLike, config: Optional[StridingConfig] = None, *,
+          vmem_budget: int = DEFAULT_VMEM_BUDGET,
+          assume_grouped_fold: bool = True,
+          static: bool = True) -> list[Finding]:
+    """Run every analysis over ``spec`` (a TraversalSpec or a tuple of
+    them — composite kernels lower several) and, when ``config`` is
+    given, over the concrete schedule/plan it implies.  Returns findings
+    only — no exception, no emission, no execution.
+
+    ``static=False`` skips the config-independent analyses (alias,
+    halo-bounds probe) — ``rank_configs`` runs those once per spec and
+    only the per-config analyses per candidate."""
+    out: list[Finding] = []
+    for s in _specs_of(spec):
+        if static:
+            out += _alias_findings(s)
+            out += _halo_findings(s)
+        if config is not None:
+            out += _config_findings(s, config, vmem_budget,
+                                    assume_grouped_fold)
+    return out
+
+
+def ensure_valid(kernel: str, spec: SpecLike,
+                 config: Optional[StridingConfig] = None, *,
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                 assume_grouped_fold: bool = True) -> list[Finding]:
+    """Gatekeeper for dispatch: run :func:`check`, record the verdict on
+    the telemetry spine, and raise :class:`AnalysisError` when any
+    error-severity finding rejects the plan — BEFORE any emission."""
+    fs = check(spec, config, vmem_budget=vmem_budget,
+               assume_grouped_fold=assume_grouped_fold)
+    if obs.enabled():
+        if fs:
+            for f in fs:
+                obs.event("analysis.violation", kernel=kernel, rule=f.rule,
+                          severity=f.severity, spec=f.spec, locus=f.locus,
+                          message=f.message)
+        else:
+            obs.event("analysis.pass", kernel=kernel,
+                      specs=[s.name for s in _specs_of(spec)],
+                      config=str(config))
+    errs = F.errors(fs)
+    if errs:
+        raise AnalysisError(kernel, errs)
+    return fs

@@ -1,0 +1,145 @@
+"""Adversarial spec fixtures the static verifier must reject.
+
+Each builder returns a :class:`Fixture`: a well-formed (constructible)
+``TraversalSpec`` + ``StridingConfig`` pair that passes ``loopir``'s
+local validation but carries exactly one statically-decidable defect,
+plus the rule id the checker must flag it with.  Two are the shipped-
+and-fixed historical bugs reintroduced in spec form:
+
+  * ``cache_clobber`` — the PR-9 serving bug: a per-slot KV-cache write
+    whose access map dropped the slot (stride) axis, so every slot's
+    decode stored into the same cache row (RACE001).
+  * ``reassoc`` — the PR-5 bug: an interleaved lane arrangement over a
+    multi-portion reduced row, whose naive sub-portion fold reassociates
+    the sum (NUM001; an *error* under ``assume_grouped_fold=False``,
+    which models the pre-fix emitter).
+
+``tools/speclint.py --fixture <name>`` runs one of these and must exit
+non-zero with the expected rule id; ``tests/test_analysis.py`` pins the
+same plus that rejection happens with zero ``pallas_call`` built.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.analysis import findings as F
+from repro.codegen.loopir import Access, Axis, TraversalSpec, tap
+from repro.core.striding import StridingConfig
+
+__all__ = ["Fixture", "FIXTURES", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Fixture:
+    name: str
+    spec: TraversalSpec
+    config: StridingConfig
+    rule: str                      # the rule id check() must produce
+    check_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+def _cache_clobber() -> Fixture:
+    """PR-9 shape: 4 cache slots each hold a token row, but the write
+    map indexes only the embedding axis — all 4 slots (and both streams)
+    store the same row; the last writer clobbers the rest."""
+    spec = TraversalSpec(
+        name="fixture_cache_clobber",
+        axes=(Axis("slot", 4), Axis("e", 256)),
+        reads=(Access("tok", ("slot", "e")),),
+        writes=(Access("cache", ("e",)),),
+        body=lambda env: env["tok"].astype(jnp.float32).sum(axis=-2),
+        full_width=True,
+    )
+    return Fixture("race", spec, StridingConfig(2, 1), F.RACE001)
+
+
+def _racing_redsplit() -> Fixture:
+    """Per-write combinators under a stride split of the REDUCED axis:
+    each of the D streams folds its own (max, sum) partials and there is
+    no cross-stream merge for per-write accumulators on this path."""
+    spec = TraversalSpec(
+        name="fixture_racing_redsplit",
+        axes=(Axis("i", 16, "reduction"), Axis("j", 256)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("mx", ("j",)), Access("sm", ("j",))),
+        body=lambda env: (
+            env["x"].astype(jnp.float32).max(axis=0),
+            env["x"].astype(jnp.float32).sum(axis=0)),
+        reduce=("max", "sum"),
+        out_dtype=(jnp.float32, jnp.float32),
+    )
+    return Fixture("redsplit", spec, StridingConfig(4, 1), F.RACE003)
+
+
+def _out_of_halo() -> Fixture:
+    """A stencil body tapping offset +2 on an axis whose declared halo
+    is (1, 1): the loaded block only includes a 1-element border, so the
+    tap reads outside the padded extent."""
+    halo = ((1, 1), (0, 0))
+    spec = TraversalSpec(
+        name="fixture_out_of_halo",
+        axes=(Axis("i", 30), Axis("j", 128)),
+        reads=(Access("x", ("i", "j"), halo),),
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: tap(env["x"], halo, 2, 0),
+    )
+    return Fixture("halo", spec, StridingConfig(2, 1), F.BOUNDS001)
+
+
+def _vmem_overflow() -> Fixture:
+    """``full_width`` rows of 2^20 lanes: one double-buffered
+    (d=4, bm, 2^20) f32 block per read/write stream is ~64 MiB against
+    the 8 MiB machine budget — the emitter would OOM at lowering."""
+    spec = TraversalSpec(
+        name="fixture_vmem_overflow",
+        axes=(Axis("i", 16), Axis("j", 1 << 20)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: env["x"] * 2.0,
+        full_width=True,
+    )
+    return Fixture("vmem", spec, StridingConfig(4, 1), F.RES001)
+
+
+def _reassoc() -> Fixture:
+    """PR-5 shape: an interleaved arrangement splits each reduced row
+    into P=4 maximally-spaced lane sub-portions; folding them in that
+    order reassociates the row sum.  Checked with
+    ``assume_grouped_fold=False`` (the pre-fix emitter) it is an
+    error; the shipping emitter regroups first, so it reports as a
+    warning by default."""
+    spec = TraversalSpec(
+        name="fixture_reassoc",
+        axes=(Axis("i", 16), Axis("j", 512, "reduction")),
+        reads=(Access("a", ("i", "j")), Access("x", ("j",))),
+        writes=(Access("y", ("i",)),),
+        body=lambda env: jnp.dot(env["a"].astype(jnp.float32),
+                                 env["x"].astype(jnp.float32)),
+        out_dtype=jnp.float32,
+    )
+    return Fixture(
+        "reassoc", spec,
+        StridingConfig(2, 4, arrangement="interleaved"), F.NUM001,
+        check_kwargs={"assume_grouped_fold": False})
+
+
+_BUILDERS: dict[str, Callable[[], Fixture]] = {
+    "race": _cache_clobber,
+    "redsplit": _racing_redsplit,
+    "halo": _out_of_halo,
+    "vmem": _vmem_overflow,
+    "reassoc": _reassoc,
+}
+
+FIXTURES = tuple(_BUILDERS)
+
+
+def build(name: str) -> Fixture:
+    try:
+        return _BUILDERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown fixture {name!r} (have {', '.join(FIXTURES)})")

@@ -1001,14 +1001,22 @@ def make_kernel_op(name: str,
     Execution is *guarded* (``common.guarded_run``): a config that fails
     to lower or execute is classified, quarantined in the tune cache,
     and the call degrades alt-config → interpret → ref, emitting a
-    ``kernel.fallback`` event instead of taking the caller down.
+    ``kernel.fallback`` event instead of taking the caller down.  Before
+    any non-ref dispatch the static verifier (``repro.analysis``) must
+    pass the (spec, config) pair: a rejected plan raises
+    ``AnalysisError`` *outside* jit with zero ``pallas_call``
+    construction — ``guarded_run`` quarantines it under failure class
+    ``analysis`` and degrades to the ref oracle (the ref tier serves
+    every statically-rejected config, so results still flow).
 
     Classification and the Traffic signature are pure in the input
-    shapes/dtypes and memoized, so a hot-loop call costs the same
-    Python-side work as a hand ops wrapper."""
+    shapes/dtypes and memoized (checker verdicts per (shapes, config)
+    likewise), so a hot-loop call costs the same Python-side work as a
+    hand ops wrapper."""
     from repro.kernels import common   # deferred: avoids import cycle
 
-    facts: dict[tuple, tuple] = {}     # shape key → (rows, traffic)
+    facts: dict[tuple, tuple] = {}     # shape key → (rows, traffic, spec)
+    verdicts: dict[tuple, Optional[Exception]] = {}
 
     @functools.partial(jax.jit, static_argnames=("config", "mode"))
     def _run(inputs: tuple, config: StridingConfig, mode: str):
@@ -1027,17 +1035,37 @@ def make_kernel_op(name: str,
             rows = (None if info.blocked
                     else spec.axis(info.stride_axis).extent)
             facts[key] = (rows, loopir.traffic_of(spec, inputs[0].dtype,
-                                                  info=info))
+                                                  info=info), spec)
         else:
             obs.counter("codegen.spec_memo.hit", kernel=name)
-        rows, traffic = facts[key]
+        rows, traffic, spec = facts[key]
         lead = inputs[0]
         cfg = common.resolve_config(
             name, lead.shape, lead.dtype, config, rows, default,
-            traffic=(None if config is not None else traffic), mode=mode)
+            traffic=(None if config is not None else traffic), mode=mode,
+            spec=spec)
+
+        def run(c: StridingConfig, m: str):
+            if m != "ref":
+                # checker gate, outside jit (a jit-cached trace would
+                # skip it) and memoized per (shapes, config); ref mode
+                # skips it so the oracle tier serves rejected configs
+                vkey = (key, c)
+                if vkey not in verdicts:
+                    from repro import analysis
+                    try:
+                        analysis.ensure_valid(name, spec, c)
+                        verdicts[vkey] = None
+                    except analysis.AnalysisError as err:
+                        verdicts[vkey] = err
+                if verdicts[vkey] is not None:
+                    raise verdicts[vkey]
+            return _run(tuple(inputs), c, m)
+
         return common.guarded_run(
-            name, lambda c, m: _run(tuple(inputs), c, m), cfg, mode,
-            shape=lead.shape, dtype=lead.dtype, rows=rows, traffic=traffic)
+            name, run, cfg, mode,
+            shape=lead.shape, dtype=lead.dtype, rows=rows, traffic=traffic,
+            spec=spec)
 
     op.__name__ = name
     op.__qualname__ = name

@@ -221,18 +221,21 @@ class TraversalSpec:
             # overwritten once per batch element
             if len(set(w.index)) != len(w.index):
                 raise ValueError(
-                    f"{self.name}: write {w.array!r} repeats an axis "
-                    f"{w.index}")
+                    f"{self.name}: [SPEC001] write {w.array!r} repeats "
+                    f"an axis {w.index} — a repeated variable has no "
+                    "affine store meaning")
             hit = [v for v in w.index if v in reduced]
             if hit:
                 raise ValueError(
-                    f"{self.name}: write {w.array!r} indexes reduced "
-                    f"axis {hit[0]!r}")
+                    f"{self.name}: [SPEC002] write {w.array!r} indexes "
+                    f"reduced axis {hit[0]!r} — reduced axes are folded "
+                    "away, writing along one is ill-defined")
             missing = [b for b in batch if b not in w.index]
             if missing:
                 raise ValueError(
-                    f"{self.name}: write {w.array!r} must index every "
-                    f"batch axis (missing {missing[0]!r})")
+                    f"{self.name}: [SPEC003] write {w.array!r} must "
+                    f"index every batch axis (missing {missing[0]!r}) — "
+                    "it would be overwritten once per batch element")
 
     def axis(self, name: str) -> Axis:
         for ax in self.axes:
@@ -246,10 +249,13 @@ class TraversalSpec:
         access maps, so "THE write" of a multi-output spec would
         silently mean writes[0] geometry — refuse loudly instead."""
         if len(self.writes) != 1:
+            names = ", ".join(repr(w.array) for w in self.writes)
             raise ValueError(
-                f"{self.name}: spec has {len(self.writes)} writes with "
-                "per-output access maps; spec.write is ambiguous — use "
-                "spec.writes / out_shapes()")
+                f"{self.name}: [SPEC004] spec has {len(self.writes)} "
+                f"writes ({names}) with per-output access maps; "
+                "spec.write is ambiguous — it would silently mean "
+                f"{self.writes[0].array!r}'s geometry; use spec.writes "
+                "/ out_shapes()")
         return self.writes[0]
 
     @property
@@ -257,9 +263,12 @@ class TraversalSpec:
         """The single stride-axis combinator.  A per-write ``reduce``
         tuple has no one combinator — use :meth:`combines`."""
         if isinstance(self.reduce, tuple):
+            names = ", ".join(
+                repr(getattr(r, "name", r)) for r in self.reduce)
             raise ValueError(
-                f"{self.name}: spec has per-write combinators; "
-                "spec.combine is ambiguous — use spec.combines()")
+                f"{self.name}: [SPEC004] spec has per-write combinators "
+                f"({names}); spec.combine is ambiguous — use "
+                "spec.combines()")
         return resolve_combine(self.reduce)
 
     def combines(self) -> tuple[Combine, ...]:

@@ -18,8 +18,10 @@ concurrent streams instead of a sequential loop.
     re-use; composes with the other transforms under the same
     domain-preservation checker
 
-Every transform is checked by :func:`preserves_domain` (tests enumerate
-the domain).  :func:`default_schedule` runs the paper's full §5.1 recipe
+Every transform is checked by :func:`preserves_domain` — a per-axis
+mixed-radix interval proof (enumeration only as a small-domain fallback
+for hand-built schedules).  :func:`default_schedule` runs the paper's
+full §5.1 recipe
 on a spec: critical-access selection (``core.transform.plan_transform``)
 → interchange (contiguous axis innermost) → stride split into D streams
 × P lane portions per :class:`~repro.core.striding.StridingConfig`.
@@ -265,16 +267,64 @@ def iteration_domain(sched: Schedule) -> set[tuple[int, ...]]:
     return pts
 
 
+_ENUM_CAP = 1 << 20   # per-axis enumeration fallback bound
+
+
+def _axis_covers(loops: Sequence[LoopAxis], extent: int) -> bool:
+    """True iff the loops over ONE source axis cover ``[0, extent)``
+    exactly once.
+
+    Interval proof first: sort by stride descending and require a
+    telescoping mixed-radix decomposition — ``stride_i == extent_{i+1} ·
+    stride_{i+1}`` with the innermost stride 1 and the extent product
+    equal to the axis extent.  Then each point has a unique mixed-radix
+    representation, so the map (positions → index) is a bijection onto
+    ``[0, extent)`` — no enumeration, any extent.  Every ``_split``
+    composition (stream/unroll/vector/block) preserves this certificate
+    by construction: splitting ``(N, s)`` yields adjacent strides
+    ``s·f, s`` (or ``s·(N/f), s``) whose telescoping product is exact.
+
+    Decompositions the certificate cannot prove (hand-built schedules
+    with gaps or overlaps) fall back to enumerating this axis alone,
+    capped at ``_ENUM_CAP`` points — beyond that, unprovable means
+    rejected."""
+    if not loops:
+        return extent == 1
+    # tie-break equal strides by extent descending so extent-1 loops
+    # (stride irrelevant) sort after the loop they duplicate
+    ls = sorted(loops, key=lambda l: (-l.stride, -l.extent))
+    total = 1
+    for l in ls:
+        total *= l.extent
+    if total != extent:
+        return False
+    ok = ls[-1].stride == 1
+    for outer, inner in zip(ls, ls[1:]):
+        ok = ok and outer.stride == inner.extent * inner.stride
+    if ok:
+        return True
+    if total > _ENUM_CAP:
+        return False
+    seen = set()
+    for combo in itertools.product(*(range(l.extent) for l in ls)):
+        seen.add(sum(p * l.stride for p, l in zip(combo, ls)))
+    return seen == set(range(extent))
+
+
 def preserves_domain(sched: Schedule) -> bool:
     """True iff the schedule covers the spec's iteration domain exactly
-    once (bijection: same point count and same point set)."""
-    total = 1
+    once (bijection: same point count and same point set).
+
+    Decides per source axis via :func:`_axis_covers` — an interval /
+    mixed-radix proof, not a point-set enumeration — so it works for
+    extents far too large to enumerate (the static verifier
+    ``repro.analysis`` runs it on every candidate plan).  Axes factor
+    independently: each loop contributes only to its own source axis,
+    so the full domain is covered exactly once iff every axis is."""
+    by_axis: dict[str, list[LoopAxis]] = {}
     for l in sched.loops:
-        total *= l.extent
-    want = 1
+        by_axis.setdefault(l.axis, []).append(l)
     for ax in sched.spec.axes:
-        want *= ax.extent
-    if total != want:
-        return False
-    full = set(itertools.product(*(range(ax.extent) for ax in sched.spec.axes)))
-    return iteration_domain(sched) == full
+        if not _axis_covers(by_axis.pop(ax.name, []), ax.extent):
+            return False
+    return not by_axis   # loops over axes the spec does not declare

@@ -17,6 +17,7 @@ from typing import Optional, Sequence
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import layout
 from repro.core.dma_model import TpuDmaModel, default_tpu_model
 from repro.core.striding import StridingConfig, valid_stride_unrolls
@@ -84,6 +85,7 @@ def rank_configs(traffic: Traffic,
                  pad_layout: bool = True,
                  lookahead: int = 2,
                  block_rows_candidates: Sequence[int] = (0,),
+                 spec=None,
                  ) -> list[tuple[StridingConfig, float, int]]:
     """All feasible configs scored best-first: [(config, bw, padded_cols)].
 
@@ -94,6 +96,15 @@ def rank_configs(traffic: Traffic,
     (block, D, P) points are pruned against ``vmem_budget`` exactly like
     plain (D, P) points.
 
+    ``spec`` (a ``TraversalSpec`` or tuple of them) additionally gates
+    every candidate through the static verifier (``repro.analysis``):
+    a config the checker rejects — a write race, a pad-contract
+    violation, an emitter-geometry VMEM overflow the coarse ``_vmem``
+    signature model missed — never reaches the autotune sweep.  Each
+    drop ticks the ``analysis.rejected_candidates`` counter; if every
+    candidate is rejected this raises the same ``ValueError`` as an
+    infeasible Traffic.
+
     ``model=None`` scores with :func:`~repro.core.dma_model.
     default_tpu_model`, whose descriptor term is seedable via
     ``REPRO_DMA_DESCRIPTOR_NS`` (measured by
@@ -101,6 +112,18 @@ def rank_configs(traffic: Traffic,
     """
     if model is None:
         model = default_tpu_model()
+    rejects = None
+    if spec is not None:
+        from repro.analysis import checker as _checker   # deferred: heavy
+        static_bad = any(f.severity == "error"
+                         for f in _checker.check(spec))
+
+        def rejects(cfg):
+            if static_bad:
+                return True
+            fs = _checker.check(spec, cfg, vmem_budget=vmem_budget,
+                                static=False)
+            return any(f.severity == "error" for f in fs)
     itemsize = jnp.dtype(traffic.dtype).itemsize
     out = []
     for d in valid_stride_unrolls(traffic.rows, max_d=max_streams):
@@ -126,6 +149,9 @@ def rank_configs(traffic: Traffic,
                                      block_rows=bm)
                 vmem = _vmem(traffic, cfg)
                 if vmem > vmem_budget:
+                    continue
+                if rejects is not None and rejects(cfg):
+                    obs.counter("analysis.rejected_candidates")
                     continue
                 n_write = d * (traffic.write_arrays + traffic.rw_arrays)
                 bw = model.throughput(cfg, _block_bytes(traffic, 1, bm),

@@ -106,7 +106,7 @@ def reset_plan_memo() -> None:
 
 def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
                    default: StridingConfig, traffic=None,
-                   mode: str | None = None) -> StridingConfig:
+                   mode: str | None = None, spec=None) -> StridingConfig:
     """Config resolution chain for an op wrapper (paper §6.3 policy):
 
         explicit config  >  tune-cache (measured best)  >  planner model
@@ -138,7 +138,7 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
             else:
                 from repro.core.planner import plan
                 try:
-                    config = plan(traffic).config
+                    config = plan(traffic, spec=spec).config
                 except ValueError:
                     config = None
                 _plan_memo[key] = config
@@ -155,7 +155,7 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
         qkey = tunecache.cache_key(kernel, shape, dtype, mode=mode)
         if cache.is_quarantined(qkey, cfg):
             cfg = _next_unquarantined(cache, qkey, cfg, rows, default,
-                                      traffic)
+                                      traffic, spec=spec)
             source = "quarantine_alt"
             obs.counter("kernel.quarantine_skip", kernel=kernel)
     if obs.enabled():
@@ -168,7 +168,7 @@ def resolve_config(kernel: str, shape, dtype, config, rows: int | None,
 
 def _next_unquarantined(cache, qkey: str, failed: StridingConfig,
                         rows: int | None, default: StridingConfig,
-                        traffic) -> StridingConfig:
+                        traffic, spec=None) -> StridingConfig:
     """Best non-quarantined alternative: next planner-ranked configs,
     then the static default, then single-strided (D=1 streams one
     contiguous run — the most conservative point in the space, kept as
@@ -178,7 +178,8 @@ def _next_unquarantined(cache, qkey: str, failed: StridingConfig,
     if traffic is not None:
         from repro.core.planner import rank_configs
         try:
-            cands = [c for c, _bw, _cols in rank_configs(traffic)]
+            cands = [c for c, _bw, _cols in rank_configs(traffic,
+                                                         spec=spec)]
         except ValueError:
             cands = []
     cands += [default, SINGLE_STRIDED]
@@ -194,6 +195,8 @@ def _next_unquarantined(cache, qkey: str, failed: StridingConfig,
 # failure classes the guard distinguishes (recorded in the quarantine
 # entry and the kernel.fallback event):
 #   injected        — repro.runtime.faults fired at an injection point
+#   analysis        — the static verifier rejected the plan BEFORE any
+#                     emission (repro.analysis: race/bounds/VMEM rules)
 #   unsupported     — the emitter refused the (spec, config) combination
 #   resource        — VMEM/scratch/memory exhaustion in lowering/compile
 #   invalid_config  — config rejected by validation (ValueError & kin)
@@ -205,8 +208,13 @@ _RESOURCE_MARKERS = ("vmem", "out of memory", "resource exhausted",
 def classify_failure(exc: BaseException) -> str:
     """Map a kernel lowering/execution failure onto a degradation class."""
     from repro.runtime.faults import InjectedFault
+    from repro.analysis.findings import AnalysisError
     if isinstance(exc, InjectedFault):
         return "injected"
+    if isinstance(exc, AnalysisError):
+        # checked before the marker scan: a RES001 finding's message
+        # names VMEM, which would otherwise misclassify as "resource"
+        return "analysis"
     if isinstance(exc, NotImplementedError):
         return "unsupported"
     msg = str(exc).lower()
@@ -218,14 +226,15 @@ def classify_failure(exc: BaseException) -> str:
 
 
 def _fallback_tiers(cache, qkey: str, failed: StridingConfig,
-                    mode: str, rows: int | None, traffic):
+                    mode: str, rows: int | None, traffic, spec=None):
     """The degradation chain after ``failed`` crashed in ``mode``:
     next-ranked planner configs (same mode) → interpret → ref oracle."""
     tiers = []
     if traffic is not None:
         from repro.core.planner import rank_configs
         try:
-            ranked = [c for c, _bw, _cols in rank_configs(traffic)]
+            ranked = [c for c, _bw, _cols in rank_configs(traffic,
+                                                          spec=spec)]
         except ValueError:
             ranked = []
         seen = {(failed.stride_unroll, failed.portion_unroll,
@@ -249,7 +258,8 @@ def _fallback_tiers(cache, qkey: str, failed: StridingConfig,
 
 
 def guarded_run(kernel: str, run, cfg: StridingConfig, mode: str, *,
-                shape, dtype, rows: int | None = None, traffic=None):
+                shape, dtype, rows: int | None = None, traffic=None,
+                spec=None):
     """Execute ``run(cfg, mode)`` behind the fallback chain.
 
     On failure the error is classified (:func:`classify_failure`), the
@@ -260,6 +270,12 @@ def guarded_run(kernel: str, run, cfg: StridingConfig, mode: str, *,
     failure class and the tier that served the result.  ``ref`` mode has
     no tier below it: a ref failure is an oracle bug and re-raises
     untouched.
+
+    ``spec`` rides into the planner's candidate ranking so alternative
+    tiers are themselves pre-screened by the static verifier — a
+    statically-rejected config (failure class ``analysis``) degrades
+    straight past the emitting tiers to the ref oracle with ZERO
+    ``pallas_call`` construction attempts.
 
     The ``lower`` fault-injection site fires here (non-ref modes), so
     ``REPRO_FAULTS=lower:<kernel>`` forces any guarded kernel down the
@@ -286,7 +302,8 @@ def guarded_run(kernel: str, run, cfg: StridingConfig, mode: str, *,
         cache.quarantine(qkey, cfg, failure)
         obs.counter("kernel.fallback.count", kernel=kernel)
         for tier, tcfg, tmode in _fallback_tiers(cache, qkey, cfg, mode,
-                                                 rows, traffic):
+                                                 rows, traffic,
+                                                 spec=spec):
             try:
                 out = attempt(tcfg, tmode)
             except (KeyboardInterrupt, SystemExit):

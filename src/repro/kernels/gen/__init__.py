@@ -113,12 +113,23 @@ transpose_gen = make_kernel_op("transpose_gen", transpose_spec,
 
 # ---------------------------------------------------------- registry
 
-def _traffic(build, shapes_fn):
-    """Planner signature derived from the IR's access maps."""
+def _ir(build, shapes_fn):
+    """``traversal`` adapter: build the variant's TraversalSpec on
+    ``ShapeDtypeStruct`` placeholders (no arrays) — the IR the static
+    verifier (``repro.analysis``) and the planner screen against."""
     def t(sizes, dtype):
         structs = tuple(jax.ShapeDtypeStruct(s, dtype)
                         for s in shapes_fn(sizes))
-        return traffic_of(build(*structs), dtype)
+        return build(*structs)
+    return t
+
+
+def _traffic(build, shapes_fn):
+    """Planner signature derived from the IR's access maps."""
+    ir = _ir(build, shapes_fn)
+
+    def t(sizes, dtype):
+        return traffic_of(ir(sizes, dtype), dtype)
     return t
 
 
@@ -151,6 +162,7 @@ register(KernelSpec(
     ref=lambda inp, cfg: _stream_ref.copy_ref(inp[0]),
     default_sizes=_STREAM_SIZES, aliased_sizes=_STREAM_ALIASED,
     traffic=_traffic(copy_spec, lambda s: (_rc(s),)),
+    traversal=_ir(copy_spec, lambda s: (_rc(s),)),
     cache_shape=_rc, bench_sizes=_STREAM_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -162,6 +174,7 @@ register(KernelSpec(
     ref=lambda inp, cfg: (inp[0] + inp[2] * inp[1]).astype(inp[0].dtype),
     default_sizes=_STREAM_SIZES, aliased_sizes=_STREAM_ALIASED,
     traffic=_traffic(triad_spec, lambda s: (_rc(s), _rc(s))),
+    traversal=_ir(triad_spec, lambda s: (_rc(s), _rc(s))),
     cache_shape=_rc, bench_sizes=_STREAM_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -174,6 +187,7 @@ register(KernelSpec(
     default_sizes=_MXV_SIZES, aliased_sizes=_MXV_ALIASED,
     traffic=_traffic(mxv_spec,
                      lambda s: ((s["m"], s["n"]), (s["n"],))),
+    traversal=_ir(mxv_spec, lambda s: ((s["m"], s["n"]), (s["n"],))),
     cache_shape=_mn,
     bench_sizes=_MXV_BENCH, tags=("paper", "gen")))
 
@@ -184,6 +198,7 @@ register(KernelSpec(
     ref=lambda inp, cfg: _jac_ref.jacobi2d_ref(inp[0]),
     default_sizes=_JAC_SIZES, aliased_sizes=_JAC_ALIASED,
     traffic=_traffic(jacobi_spec, lambda s: ((s["h"], s["w"]),)),
+    traversal=_ir(jacobi_spec, lambda s: ((s["h"], s["w"]),)),
     cache_shape=lambda s: (s["h"], s["w"]),
     bench_sizes=_JAC_BENCH,
     rtol=1e-5, atol=1e-5, tags=("paper", "gen")))
@@ -198,6 +213,7 @@ register(KernelSpec(
                           inp[0].astype(jnp.float32).sum(axis=-1)),
     default_sizes=_MXV_SIZES, aliased_sizes=_MXV_ALIASED,
     traffic=_traffic(rowstat_spec, lambda s: (_mn(s),)),
+    traversal=_ir(rowstat_spec, lambda s: (_mn(s),)),
     cache_shape=_mn,
     bench_sizes=_MXV_BENCH,
     rtol=1e-5, atol=1e-5, tags=("paper", "gen")))
@@ -210,6 +226,7 @@ register(KernelSpec(
     ref=lambda inp, cfg: inp[0].T,
     default_sizes=_MXV_SIZES, aliased_sizes=_MXV_ALIASED,
     traffic=_traffic(transpose_spec, lambda s: (_mn(s),)),
+    traversal=_ir(transpose_spec, lambda s: (_mn(s),)),
     cache_shape=_mn,
     bench_sizes=_MXV_BENCH, tags=("paper", "gen")))
 

@@ -146,6 +146,8 @@ def adamw_update_gen(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
 
 # ---------------------------------------------------------- registry
 
+_S = jax.ShapeDtypeStruct   # traversal rows build IR on placeholders
+
 _DA_SIZES = {"b": 1, "s": 256, "hq": 4, "hkv": 2, "dh": 64}
 _DA_ALIASED = {"b": 1, "s": 512, "hq": 4, "hkv": 2, "dh": 64}
 
@@ -169,6 +171,12 @@ register(KernelSpec(
     default_sizes=_DA_SIZES, aliased_sizes=_DA_ALIASED,
     traffic=lambda s, dt: Traffic(rows=s["s"], cols=s["hkv"] * s["dh"],
                                   dtype=dt, read_arrays=2),
+    # decode_spec is a per-(Hkv, dh) builder factory: apply it to the
+    # flattened-cache placeholders the wrapper reshapes to
+    traversal=lambda s, dt: _decode_spec(s["hkv"], s["dh"])(
+        _S((s["b"], s["s"], s["hkv"] * s["dh"]), dt),
+        _S((s["b"], s["s"], s["hkv"] * s["dh"]), dt),
+        _S((s["b"], s["hq"] * s["dh"]), dt)),
     cache_shape=lambda s: (s["b"], s["s"], s["hkv"], s["dh"]),
     bench_sizes={"b": 8, "s": 8192, "hq": 32, "hkv": 8, "dh": 128},
     rtol=2e-5, atol=2e-5, tags=("framework", "gen")))
@@ -184,6 +192,8 @@ register(KernelSpec(
     traffic=lambda s, dt: Traffic(rows=s["t"], cols=s["dm"], dtype=dt,
                                   read_arrays=1, write_arrays=1,
                                   resident_bytes=s["dm"] * 4),
+    traversal=lambda s, dt: rmsnorm_spec(_S((s["t"], s["dm"]), dt),
+                                         _S((s["dm"],), dt)),
     cache_shape=lambda s: (s["t"], s["dm"]),
     bench_sizes={"t": 4096, "dm": 4096},
     rtol=1e-5, atol=1e-5, tags=("framework", "gen")))
@@ -210,6 +220,11 @@ register(KernelSpec(
     traffic=lambda s, dt: Traffic(
         rows=max(s["rows"] * s["cols"] // 1024, 4), cols=1024, dtype=dt,
         read_arrays=4, write_arrays=3),
+    # the spec the wrapper actually lowers: the flattened tensor at its
+    # §5.1.1 re-blocked [rows, 512] shape
+    traversal=lambda s, dt: adamw_spec(
+        *(_S(_adamw_blocking(max(s["rows"] * s["cols"], 1)), dt)
+          for _ in range(4))),
     cache_shape=lambda s: (s["rows"], s["cols"]),
     bench_sizes={"rows": 4096, "cols": 1024},
     rtol=1e-5, atol=1e-6, tags=("framework", "gen")))

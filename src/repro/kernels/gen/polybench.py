@@ -187,6 +187,8 @@ doitgen_gen = make_kernel_op("doitgen_gen", doitgen_spec,
 
 # problem sizes/oracles mirror the hand families: identical conformance
 # (sizes × (D,P)) coverage for hand and generated variants
+_S = jax.ShapeDtypeStruct   # traversal rows build IR on placeholders
+
 _MN_SIZES = {"m": 48, "n": 256}
 _MN_ALIASED = {"m": 32, "n": 128}
 _MN_BENCH = {"m": 4096, "n": 4096}
@@ -207,6 +209,10 @@ register(KernelSpec(
     default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
     traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
                                   read_arrays=2),
+    # composite: both fused specs screen as one plan (shared config)
+    traversal=lambda s, dt: (
+        bicg_q_spec(_S(_mn(s), dt), _S((s["n"],), dt)),
+        bicg_s_spec(_S(_mn(s), dt), _S((s["m"],), dt))),
     cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -221,6 +227,8 @@ register(KernelSpec(
     default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
     traffic=lambda s, dt: traffic_of(
         gemver_outer_spec(jnp.zeros(_mn(s), dt), *(None,) * 4), dt),
+    traversal=lambda s, dt: gemver_outer_spec(_S(_mn(s), dt),
+                                              *(None,) * 4),
     cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -233,6 +241,7 @@ register(KernelSpec(
     default_sizes={"vn": 1000}, aliased_sizes={"vn": 2048},
     traffic=lambda s, dt: traffic_of(
         gemver_sum_spec(jnp.zeros((s["vn"],), dt), None), dt),
+    traversal=lambda s, dt: gemver_sum_spec(_S((s["vn"],), dt), None),
     cache_shape=lambda s: (s["vn"],),
     bench_sizes={"vn": 4 * 2**20}, tags=("paper", "gen")))
 
@@ -248,6 +257,7 @@ register(KernelSpec(
     default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
     traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
                                   read_arrays=2),
+    traversal=lambda s, dt: gemver_mxv1_spec(_S(_mn(s), dt), None),
     cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -262,6 +272,7 @@ register(KernelSpec(
     default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
     traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
                                   read_arrays=2),
+    traversal=lambda s, dt: gemver_mxv1_sum_spec(_S(_mn(s), dt), None),
     cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -274,6 +285,8 @@ register(KernelSpec(
     default_sizes=_MN_SIZES, aliased_sizes=_MN_ALIASED,
     traffic=lambda s, dt: Traffic(rows=s["m"], cols=s["n"], dtype=dt,
                                   read_arrays=1),
+    traversal=lambda s, dt: gemver_mxv2_spec(_S(_mn(s), dt),
+                                             _S((s["n"],), dt)),
     cache_shape=_mn, bench_sizes=_MN_BENCH, tags=("paper", "gen")))
 
 register(KernelSpec(
@@ -286,6 +299,7 @@ register(KernelSpec(
     default_sizes={"h": 34, "w": 130}, aliased_sizes={"h": 34, "w": 128},
     traffic=lambda s, dt: traffic_of(
         conv3x3_spec(jnp.zeros((s["h"], s["w"]), dt)), dt),
+    traversal=lambda s, dt: conv3x3_spec(_S((s["h"], s["w"]), dt)),
     cache_shape=lambda s: (s["h"], s["w"]),
     bench_sizes={"h": 2050, "w": 2048}, tags=("paper", "gen")))
 
@@ -301,5 +315,7 @@ register(KernelSpec(
     traffic=lambda s, dt: traffic_of(
         doitgen_spec(jnp.zeros((s["r"], s["q"], s["s"]), dt),
                      jnp.zeros((s["s"], s["s"]), dt)), dt),
+    traversal=lambda s, dt: doitgen_spec(_S((s["r"], s["q"], s["s"]), dt),
+                                         _S((s["s"], s["s"]), dt)),
     cache_shape=lambda s: (s["r"], s["q"], s["s"]),
     bench_sizes={"r": 16, "q": 256, "s": 256}, tags=("paper", "gen")))

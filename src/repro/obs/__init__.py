@@ -23,6 +23,16 @@ Instrumented layers and their event names (see README § Observability):
                            active slots, queue depth
   serve.request            per-request TTFT / tokens-per-second
   bench.table              one span per benchmarks.run table
+  analysis.pass            static verifier validated a (spec, config)
+  analysis.violation       one event per static finding: rule id,
+                           severity, locus, message
+  analysis.rejected_candidates
+                           planner sweep candidates dropped by the
+                           static verifier (counter)
+
+The full name table lives in README § Observability; the repo lint
+(``tools/speclint.py --repo-lint``) checks every emitted name appears
+there.
 """
 from repro.obs.core import (Event, MemoryCollector, active_collector,
                             collect, counter, enabled, event, install,

@@ -96,9 +96,16 @@ def candidate_configs(spec: base.KernelSpec, sizes: Mapping[str, int],
                       ) -> list[tuple[StridingConfig, float]]:
     """Planner-ranked (config, predicted_bw) candidates for one problem."""
     if spec.traffic is not None:
+        trav = None
+        if spec.traversal is not None:
+            try:
+                trav = spec.traversal(sizes, dtype)
+            except Exception:     # noqa: BLE001 — screening is best-effort
+                trav = None
         try:
             ranked = rank_configs(spec.traffic(sizes, dtype),
-                                  block_rows_candidates=_BLOCK_CANDIDATES)
+                                  block_rows_candidates=_BLOCK_CANDIDATES,
+                                  spec=trav)
             out, seen, dp_seen = [], set(), set()
             for cfg, bw, _cols in ranked:
                 key = (cfg.stride_unroll, cfg.portion_unroll, cfg.block_rows)

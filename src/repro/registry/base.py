@@ -16,7 +16,12 @@ Adapter conventions (uniform across variants so harnesses can iterate):
     a few kernels, e.g. ``stream_read``, have config-dependent *shapes*);
   * ``traffic(sizes, dtype) -> Traffic | None`` — planner signature;
   * ``cache_shape(sizes) -> tuple`` — the shape key the op's wrapper uses
-    for tune-cache lookups (must match what ``ops.py`` passes).
+    for tune-cache lookups (must match what ``ops.py`` passes);
+  * ``traversal(sizes, dtype) -> TraversalSpec | tuple`` — the codegen
+    IR the variant lowers (built on ``jax.ShapeDtypeStruct``
+    placeholders, no arrays), for the static verifier: the autotuner
+    pre-screens sweep candidates through ``repro.analysis`` and
+    ``tools/speclint.py`` audits the whole registry with it.
 """
 from __future__ import annotations
 
@@ -44,6 +49,7 @@ class KernelSpec:
     aliased_sizes: Mapping[str, int]   # §4.5 power-of-two-spacing point
     traffic: Optional[Callable[[Mapping[str, int], Any], Any]] = None
     cache_shape: Optional[Callable[[Mapping[str, int]], tuple]] = None
+    traversal: Optional[Callable[[Mapping[str, int], Any], Any]] = None
     bench_sizes: Optional[Mapping[str, int]] = None  # benchmark-scale problem
     rtol: float = 1e-4
     atol: float = 1e-4

@@ -1,0 +1,415 @@
+"""The static verifier (``repro.analysis``) and its three wiring layers.
+
+Covers, per ISSUE-10's acceptance criteria:
+
+  * every rule family positive AND negative: race/alias (RACE001-004),
+    bounds/halo/pad-contract (BOUNDS001-004), resources (RES001),
+    numerics (NUM001) — including the two reintroduced historical bugs
+    (the PR-5 reassociation and the PR-9 cache-clobber) as regression
+    fixtures;
+  * the interval-proof ``preserves_domain`` on extents far beyond
+    enumeration, plus gap/overlap/undeclared-axis rejections;
+  * ``ensure_valid`` raising :class:`AnalysisError` and emitting the
+    ``analysis.violation`` / ``analysis.pass`` telemetry;
+  * ``classify_failure`` mapping ``AnalysisError`` to the ``analysis``
+    class even when the message names VMEM;
+  * ``rank_configs(spec=...)`` never yielding a checker-rejected
+    candidate (and raising the usual ValueError when ALL are rejected);
+  * the dispatch gate: a statically-invalid explicit config on a
+    ``make_kernel_op`` kernel degrades to the ref oracle with ZERO
+    ``pallas_call`` construction attempts and an ``analysis``-class
+    quarantine entry;
+  * ``tools/speclint.py`` in-process: registry sweep green at HEAD,
+    each adversarial fixture flagged with its expected rule, repo lint
+    green at HEAD.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analysis, obs
+from repro.analysis import checker, findings as F, fixtures
+from repro.codegen import emit as emit_mod
+from repro.codegen import transforms
+from repro.codegen.loopir import Access, Axis, TraversalSpec, evaluate, tap
+from repro.codegen.transforms import GRID, LoopAxis, Schedule, preserves_domain
+from repro.core.planner import Traffic, rank_configs
+from repro.core.striding import StridingConfig
+from repro.kernels import common
+from repro.registry import tunecache
+
+
+@pytest.fixture
+def isolated_cache(tmp_path, monkeypatch):
+    """Repoint the default tune cache at a per-test file."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
+    yield tunecache.default_cache()
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
+
+
+def _rules(fs):
+    return sorted({f.rule for f in fs})
+
+
+def _error_rules(fs):
+    return sorted({f.rule for f in fs if f.severity == "error"})
+
+
+def _copy_spec(rows=16, cols=256):
+    """A well-formed elementwise nest no analysis should flag."""
+    return TraversalSpec(
+        name="t_copy",
+        axes=(Axis("i", rows), Axis("j", cols)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: env["x"] * 2.0)
+
+
+def _vecred_spec(cols=256, reduce="sum", name="t_vecred"):
+    """Row-wise vector reduction y[i] = fold_j a[i, j]."""
+    fold = {"sum": lambda b: b.sum(axis=-1), "max": lambda b: b.max(axis=-1)}
+    return TraversalSpec(
+        name=name,
+        axes=(Axis("i", 16), Axis("j", cols, "reduction")),
+        reads=(Access("a", ("i", "j")),),
+        writes=(Access("y", ("i",)),),
+        body=lambda env: fold[reduce](env["a"].astype(jnp.float32)),
+        reduce=reduce, out_dtype=jnp.float32)
+
+
+def _stride_red_spec(rows=6, name="t_sred"):
+    """Stride-axis reduction y[j] = sum_i a[i, j] (the bicg_s shape)."""
+    return TraversalSpec(
+        name=name,
+        axes=(Axis("i", rows, "reduction"), Axis("j", 256)),
+        reads=(Access("a", ("i", "j")),),
+        writes=(Access("y", ("j",)),),
+        body=lambda env: env["a"].astype(jnp.float32).sum(axis=0),
+        out_dtype=jnp.float32)
+
+
+# ------------------------------------------------- race / alias analyses
+
+def test_race001_cache_clobber_fixture_flagged():
+    """PR-9 regression (spec form): the per-slot KV-cache write whose
+    access map dropped the slot axis must be rejected statically."""
+    fx = fixtures.build("race")
+    fs = analysis.check(fx.spec, fx.config, **fx.check_kwargs)
+    assert fx.rule == F.RACE001
+    assert F.RACE001 in _error_rules(fs)
+    f = next(f for f in fs if f.rule == F.RACE001)
+    assert "cache" in f.message          # names the offending write array
+    # the race exists at every D — even single-stream row grid steps
+    assert F.RACE001 in _error_rules(analysis.check(fx.spec,
+                                                    StridingConfig(1, 1)))
+
+
+def test_race_clean_on_wellformed_writes():
+    fs = analysis.check(_copy_spec(), StridingConfig(4, 2))
+    assert fs == []
+    fs = analysis.check(_vecred_spec(), StridingConfig(4, 1))
+    assert _error_rules(fs) == []
+
+
+def test_race003_redsplit_fixture_flagged():
+    fx = fixtures.build("redsplit")
+    fs = analysis.check(fx.spec, fx.config, **fx.check_kwargs)
+    assert _error_rules(fs) == [F.RACE003]
+
+
+def test_race004_permuted_self_alias():
+    perm = TraversalSpec(
+        name="t_perm",
+        axes=(Axis("i", 64), Axis("j", 64)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("x", ("j", "i")),),
+        body=lambda env: env["x"] * 1.0)
+    fs = analysis.check(perm)            # static: no config needed
+    assert _error_rules(fs) == [F.RACE004]
+    # same permuted store into a DIFFERENT array is a plain transpose
+    tsp = TraversalSpec(
+        name="t_transpose",
+        axes=(Axis("i", 64), Axis("j", 64)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("xt", ("j", "i")),),
+        body=lambda env: env["x"] * 1.0)
+    assert analysis.check(tsp) == []
+
+
+# ------------------------------------------------ bounds / halo analyses
+
+def test_bounds001_out_of_halo_tap():
+    fx = fixtures.build("halo")
+    fs = analysis.check(fx.spec, fx.config, **fx.check_kwargs)
+    assert F.BOUNDS001 in _error_rules(fs)
+    # config-independent: the static pass alone finds it
+    assert F.BOUNDS001 in _rules(analysis.check(fx.spec))
+
+
+def test_bounds001_clean_within_halo():
+    halo = ((1, 1), (1, 1))
+    spec = TraversalSpec(
+        name="t_stencil",
+        axes=(Axis("i", 30), Axis("j", 128)),
+        reads=(Access("x", ("i", "j"), halo),),
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: (tap(env["x"], halo, -1, 0) + tap(env["x"], halo, 1, 0)
+                          + tap(env["x"], halo, 0, -1)
+                          + tap(env["x"], halo, 0, 1)) * 0.25)
+    assert analysis.check(spec, StridingConfig(2, 1)) == []
+
+
+def test_bounds003_stride_reduction_divisibility():
+    spec = _stride_red_spec(rows=6)
+    assert _error_rules(analysis.check(spec, StridingConfig(4, 1))) == \
+        [F.BOUNDS003]
+    assert analysis.check(spec, StridingConfig(2, 1)) == []
+
+
+def test_bounds004_padded_lanes_under_max_fold():
+    vmax = _vecred_spec(cols=100, reduce="max", name="t_vmax")
+    assert _error_rules(analysis.check(vmax, StridingConfig(2, 1))) == \
+        [F.BOUNDS004]
+    # lane-aligned reduced extent needs no pad: clean
+    aligned = _vecred_spec(cols=128, reduce="max", name="t_vmax128")
+    assert analysis.check(aligned, StridingConfig(2, 1)) == []
+
+
+# --------------------------------- preserves_domain (interval proof)
+
+def _sched(spec, loops):
+    return Schedule(spec=spec, loops=tuple(loops))
+
+
+def test_domain_interval_proof_on_huge_extent():
+    """Telescoping mixed-radix certificates decide extents that point
+    enumeration could never touch (2^30 points per axis)."""
+    n = 1 << 30
+    spec = TraversalSpec(
+        name="t_huge",
+        axes=(Axis("i", n), Axis("j", 128)),
+        reads=(Access("x", ("i", "j")),),
+        writes=(Access("y", ("i", "j")),),
+        body=lambda env: env["x"])
+    loops = [LoopAxis("i", n >> 10, 1 << 10, GRID),
+             LoopAxis("i", 1 << 5, 1 << 5, GRID),
+             LoopAxis("i", 1 << 5, 1, GRID),
+             LoopAxis("j", 128, 1, GRID)]
+    assert preserves_domain(_sched(spec, loops))
+
+
+def test_domain_rejects_gap_overlap_and_undeclared():
+    spec = _copy_spec(rows=16, cols=8)
+    full_j = LoopAxis("j", 8, 1, GRID)
+    # gap: strides skip half the rows
+    assert not preserves_domain(_sched(spec, [
+        LoopAxis("i", 8, 2, GRID), full_j]))
+    # overlap: 32 points into a 16-extent axis
+    assert not preserves_domain(_sched(spec, [
+        LoopAxis("i", 2, 8, GRID), LoopAxis("i", 16, 1, GRID), full_j]))
+    # loop over an axis the spec does not declare
+    assert not preserves_domain(_sched(spec, [
+        LoopAxis("i", 16, 1, GRID), full_j, LoopAxis("k", 2, 1, GRID)]))
+    # missing axis with extent > 1
+    assert not preserves_domain(_sched(spec, [
+        LoopAxis("i", 16, 1, GRID)]))
+    # the exact split is accepted
+    assert preserves_domain(_sched(spec, [
+        LoopAxis("i", 2, 8, GRID), LoopAxis("i", 8, 1, GRID), full_j]))
+
+
+def test_domain_default_schedules_always_covered():
+    for spec in (_copy_spec(), _vecred_spec(), _stride_red_spec()):
+        assert preserves_domain(transforms.schedule(spec))
+
+
+# ------------------------------------------------------------ resources
+
+def test_res001_vmem_overflow_fixture():
+    fx = fixtures.build("vmem")
+    fs = analysis.check(fx.spec, fx.config, **fx.check_kwargs)
+    assert _error_rules(fs) == [F.RES001]
+    f = next(f for f in fs if f.rule == F.RES001)
+    assert "vmem" in f.message.lower()   # byte math is in the message
+    # the same shape at sane lane counts is comfortably within budget
+    assert analysis.check(_copy_spec(16, 256), fx.config) == []
+
+
+# ------------------------------------------------------------- numerics
+
+def test_num001_reassoc_fixture_severity_split():
+    """PR-5 regression (spec form): the interleaved sub-portion fold.
+    A warning under the shipping emitter's regrouped fold; an ERROR when
+    the pre-fix emitter is modelled (``assume_grouped_fold=False``)."""
+    fx = fixtures.build("reassoc")
+    default = analysis.check(fx.spec, fx.config)
+    assert [(f.rule, f.severity) for f in default] == [(F.NUM001, "warning")]
+    strict = analysis.check(fx.spec, fx.config, assume_grouped_fold=False)
+    assert [(f.rule, f.severity) for f in strict] == [(F.NUM001, "error")]
+    # grouped arrangement folds portions in lane order: clean either way
+    grouped = StridingConfig(2, 4)
+    assert analysis.check(fx.spec, grouped, assume_grouped_fold=False) == []
+
+
+# ---------------------------------------------- ensure_valid + telemetry
+
+def test_ensure_valid_raises_and_emits_violations():
+    fx = fixtures.build("race")
+    with obs.collect() as col:
+        with pytest.raises(analysis.AnalysisError) as ei:
+            analysis.ensure_valid("t_kernel", fx.spec, fx.config)
+    assert "t_kernel" in str(ei.value)
+    assert F.RACE001 in str(ei.value)
+    evs = col.named("analysis.violation")
+    assert evs and all(e.attrs["kernel"] == "t_kernel" for e in evs)
+    assert F.RACE001 in {e.attrs["rule"] for e in evs}
+
+
+def test_ensure_valid_pass_event_on_clean_plan():
+    with obs.collect() as col:
+        fs = analysis.ensure_valid("t_kernel", _copy_spec(),
+                                   StridingConfig(4, 1))
+    assert fs == []
+    evs = col.named("analysis.pass")
+    assert len(evs) == 1 and evs[0].attrs["kernel"] == "t_kernel"
+
+
+def test_classify_failure_analysis_beats_resource_markers():
+    fx = fixtures.build("vmem")
+    with pytest.raises(analysis.AnalysisError) as ei:
+        analysis.ensure_valid("t_kernel", fx.spec, fx.config)
+    # the RES001 message names VMEM; the marker scan must not win
+    assert "vmem" in str(ei.value).lower()
+    assert common.classify_failure(ei.value) == "analysis"
+
+
+# ------------------------------------------------- planner candidate gate
+
+def test_rank_configs_filters_rejected_candidates():
+    """Candidates the checker rejects never reach the sweep: a reduced
+    extent of 6 under a Traffic advertising 16 rows offers D in
+    {1, 2, 4, 8, 16}; BOUNDS003 kills every D that does not divide 6."""
+    spec = _stride_red_spec(rows=6)
+    traffic = Traffic(rows=16, cols=256, read_arrays=1, write_arrays=1)
+    with obs.collect() as col:
+        ranked = rank_configs(traffic, spec=spec)
+        rejected = col.counter_value("analysis.rejected_candidates")
+    assert ranked
+    assert {c.stride_unroll for c, _bw, _cols in ranked} <= {1, 2}
+    assert rejected > 0
+    # invariant: nothing yielded fails the checker
+    for cfg, _bw, _cols in ranked:
+        assert _error_rules(analysis.check(spec, cfg)) == []
+
+
+def test_rank_configs_all_rejected_raises_valueerror():
+    fx = fixtures.build("redsplit")     # RACE003 at every D, even D=1
+    traffic = Traffic(rows=16, cols=256, read_arrays=1, write_arrays=2)
+    with obs.collect() as col:
+        with pytest.raises(ValueError):
+            rank_configs(traffic, spec=fx.spec)
+        assert col.counter_value("analysis.rejected_candidates") > 0
+
+
+# -------------------------------------- dispatch gate: zero-emission ref
+
+def _boom_pallas_call(*a, **k):
+    raise AssertionError("pallas_call constructed for a statically "
+                        "rejected plan")
+
+
+def test_invalid_explicit_config_degrades_to_ref_no_emission(
+        isolated_cache, monkeypatch):
+    """ISSUE-10 acceptance: forcing a statically-invalid plan through a
+    make_kernel_op kernel quarantines it under failure class
+    ``analysis`` and serves the ref oracle with zero ``pallas_call``
+    construction attempts."""
+    monkeypatch.setattr(emit_mod.pl, "pallas_call", _boom_pallas_call)
+    fx = fixtures.build("race")
+    op = emit_mod.make_kernel_op("t_clobber_gen", lambda tok: fx.spec,
+                                 default=fx.config)
+    tok = jnp.arange(4 * 256, dtype=jnp.float32).reshape(4, 256) / 64
+    with obs.collect() as col:
+        out = op(tok, config=fx.config, mode="interpret")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(evaluate(fx.spec, (tok,))),
+                               rtol=1e-6, atol=1e-6)
+    evs = col.named("kernel.fallback")
+    assert len(evs) == 1
+    ev = evs[0].attrs
+    assert ev["failure"] == "analysis"
+    assert ev["tier"] == "ref" and ev["to_mode"] == "ref"
+    assert {e.attrs["rule"] for e in col.named("analysis.violation")} == \
+        {F.RACE001}
+    qkey = tunecache.cache_key("t_clobber_gen", tok.shape, tok.dtype,
+                               mode="interpret")
+    entries = isolated_cache.quarantined(qkey)
+    assert entries and all(e["reason"] == "analysis"
+                           for e in entries.values())
+
+
+def test_valid_config_passes_gate_and_emits(isolated_cache):
+    """The gate is not a tollbooth: a clean spec still runs the
+    generated kernel (interpret mode) and records ``analysis.pass``."""
+    spec = _vecred_spec(cols=256, name="t_vecred_gen")
+    op = emit_mod.make_kernel_op("t_vecred_gen", lambda a: spec,
+                                 default=StridingConfig(2, 1))
+    a = jnp.arange(16 * 256, dtype=jnp.float32).reshape(16, 256) / 1024
+    with obs.collect() as col:
+        out = op(a, config=StridingConfig(2, 1), mode="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a.sum(axis=-1)),
+                               rtol=1e-5, atol=1e-5)
+    assert not col.named("kernel.fallback")
+    assert len(col.named("analysis.pass")) == 1
+
+
+# -------------------------------------------------- speclint, in-process
+
+def _load_speclint():
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tools", "speclint.py")
+    spec = importlib.util.spec_from_file_location("speclint", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def speclint():
+    return _load_speclint()
+
+
+def test_speclint_registry_sweep_green_at_head(speclint, capsys):
+    assert speclint.main([]) == 0
+    assert "findings: 0" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("name", fixtures.FIXTURES)
+def test_speclint_fixtures_flagged_with_expected_rule(speclint, name,
+                                                      capsys):
+    assert speclint.main(["--fixture", name]) == 1
+    assert fixtures.build(name).rule in capsys.readouterr().out
+
+
+def test_speclint_unknown_fixture_is_usage_error(speclint, capsys):
+    assert speclint.main(["--fixture", "nope"]) == 2
+
+
+def test_speclint_repo_lint_green_at_head(speclint):
+    assert speclint.main(["--repo-lint"]) == 0
+
+
+def test_speclint_json_report(speclint, tmp_path):
+    out = tmp_path / "report.json"
+    assert speclint.main(["--kernel", "mxv_gen", "--json", str(out)]) == 0
+    rep = json.loads(out.read_text())
+    assert rep["errors"] == 0
+    assert rep["kernels"]["mxv_gen"]    # swept at least one size row

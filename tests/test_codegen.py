@@ -735,6 +735,31 @@ def test_write_validation_subset_permutation_of_nonreduced_axes():
                       writes=(Access("y", ("i",)),), **common)
 
 
+def test_write_validation_names_rule_id_and_array():
+    """Validation messages carry the static-analysis rule id (a literal
+    pinned against ``repro.analysis.findings``) AND the offending write
+    array, so speclint reports and loopir errors share one vocabulary."""
+    from repro.analysis import findings as F
+
+    common = dict(
+        axes=(Axis("b", 2, kind="batch"), Axis("i", 4),
+              Axis("j", 8, kind="reduction")),
+        reads=(Access("x", ("b", "i", "j")),),
+        body=lambda env: env["x"].sum(axis=-1),
+        out_dtype=jnp.float32,
+    )
+    for rule, idx in ((F.SPEC001, ("b", "i", "i")),
+                      (F.SPEC002, ("b", "i", "j")),
+                      (F.SPEC003, ("i",))):
+        with pytest.raises(ValueError, match=rf"\[{rule}\].*'y'"):
+            TraversalSpec(name="bad", writes=(Access("y", idx),), **common)
+    spec = _rowstat_spec()
+    with pytest.raises(ValueError, match=rf"\[{F.SPEC004}\]"):
+        spec.write
+    with pytest.raises(ValueError, match=rf"\[{F.SPEC004}\]"):
+        spec.out_shape()
+
+
 def test_spec_write_is_loud_on_multi_output():
     """The first-write-biased accessors refuse heterogeneous specs
     instead of silently picking writes[0] geometry."""

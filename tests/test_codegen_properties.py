@@ -470,6 +470,14 @@ def check_differential(draw: Draw):
     """preserves_domain(default §5.1 schedule) ∧ emitted == evaluate."""
     case = draw_case(draw)
     spec, cfg = case.spec, draw_config(draw, case)
+    # the static-verifier soundness direction: every generated legal
+    # (spec, config) point the differential is about to prove correct
+    # must also pass the checker — "checker passes ⇒ differential
+    # passes" over the whole adversarial case space (warnings allowed)
+    from repro import analysis
+    flagged = [f for f in analysis.check(spec, cfg)
+               if f.severity == "error"]
+    assert not flagged, (spec.name, cfg, [f.as_dict() for f in flagged])
     info = classify(spec)
     if not info.blocked:
         # replicate the emitter's padding, then check the actual
@@ -556,3 +564,56 @@ if HAVE_HYPOTHESIS:
     @given(data=st.data())
     def test_schedule_algebra_hypothesis(data):
         check_schedule_algebra(Draw(data=data))
+
+# ----------------------------- adversarial archetypes (static rejection)
+
+# The complement of the differential sweep: spec/config points the
+# checker must REJECT, proven to die before emission — the guarded op
+# either serves the evaluate() oracle through the ref tier or re-raises
+# the AnalysisError, and in both cases zero pallas_call is constructed.
+
+@pytest.mark.parametrize("name", ["race", "redsplit", "halo"])
+def test_adversarial_archetype_rejected_without_emission(
+        name, tmp_path, monkeypatch):
+    from repro import analysis
+    from repro.analysis import fixtures
+    from repro.codegen import emit as emit_mod
+    from repro.kernels import common
+    from repro.registry import tunecache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
+
+    def boom(*a, **k):
+        raise AssertionError("pallas_call constructed for a statically "
+                             "rejected plan")
+
+    monkeypatch.setattr(emit_mod.pl, "pallas_call", boom)
+    fx = fixtures.build(name)
+    flagged = {f.rule for f in analysis.check(fx.spec, fx.config,
+                                              **fx.check_kwargs)
+               if f.severity == "error"}
+    assert fx.rule in flagged
+    op = emit_mod.make_kernel_op(f"t_adv_{name}", lambda *xs: fx.spec,
+                                 default=fx.config)
+    shape = tuple(ax.extent for ax in fx.spec.axes)
+    inputs = tuple(
+        jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape) / 97
+        for _ in fx.spec.reads)
+    try:
+        want = evaluate(fx.spec, inputs)
+    except ValueError:
+        # the defect poisons the oracle too (e.g. the out-of-halo tap):
+        # with no tier left the original AnalysisError must surface
+        with pytest.raises(analysis.AnalysisError) as ei:
+            op(*inputs, config=fx.config, mode="interpret")
+        assert fx.rule in str(ei.value)
+    else:
+        got = op(*inputs, config=fx.config, mode="interpret")
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       rtol=1e-5, atol=1e-5)
+    tunecache.reset_default_cache()
+    common.reset_plan_memo()
